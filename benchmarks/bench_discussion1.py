@@ -1,0 +1,37 @@
+"""Benchmark: Discussion 1 / Fig. 4 — the worked Example-1 comparison.
+
+Emits CSV ``name,us_per_call,derived`` where ``derived`` is the makespan in
+seconds (paper: BASS 35, BAR 38, HDS 39, Pre-BASS 34).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import SCHEDULERS
+from repro.core.examples_fig import PAPER_MAKESPAN, example1_instance
+
+
+def run() -> list:
+    rows = []
+    order = ["hds", "bar", "bass", "prebass"]
+    paper = {"hds": 39, "bar": 38, "bass": 35, "prebass": 34}
+    for name in order:
+        fn = SCHEDULERS[name]
+        # timing
+        n = 200
+        t0 = time.perf_counter()
+        for _ in range(n):
+            sched = fn(example1_instance())
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((f"discussion1_{name}", us, sched.makespan))
+        assert sched.makespan == paper[name], (name, sched.makespan)
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

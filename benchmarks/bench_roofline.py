@@ -1,0 +1,71 @@
+"""Benchmark: roofline report — reads the dry-run artifacts and prints the
+three-term roofline per (arch × shape × mesh) plus dominant bottleneck.
+
+CSV: ``name,us_per_call,derived`` where derived = roofline fraction (useful
+compute time / dominant-term lower bound).  Full detail lands in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "pod256") -> list:
+    rows = []
+    for f in sorted(glob.glob(str(ARTIFACTS / f"*__{mesh}.json"))):
+        r = json.loads(Path(f).read_text())
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        rows.append(r)
+    return rows
+
+
+def run() -> list:
+    out = []
+    opt = {
+        (r["arch"], r["shape"]): r
+        for r in load("pod256__opt")
+        if r.get("policy") == "opt"
+    }
+    for r in load("pod256"):
+        if r.get("policy", "baseline") != "baseline":
+            continue
+        ro = r["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        o = opt.get((r["arch"], r["shape"]))
+        opt_frac = (
+            round(o["roofline"]["roofline_fraction"], 5)
+            if o and "roofline" in o
+            else ""
+        )
+        out.append(
+            (
+                name,
+                r.get("compile_s", 0.0) * 1e6,
+                round(ro["roofline_fraction"], 5),
+                ro["dominant"],
+                round(ro["compute_s"], 4),
+                round(ro["memory_s"], 4),
+                round(ro["collective_ici_s"] + ro["collective_dcn_s"], 4),
+                round(r["memory"]["peak_gib"], 2),
+                opt_frac,
+            )
+        )
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived_roofline_frac,dominant,compute_s,memory_s,collective_s,peak_gib,opt_roofline_frac")
+    rows = run()
+    if not rows:
+        print("# no artifacts found — run: python -m repro.launch.dryrun --mesh both")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

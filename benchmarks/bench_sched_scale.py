@@ -1,0 +1,61 @@
+"""Benchmark: scheduler scalability (beyond-paper; §VI's "much larger
+network cluster" future work, delivered).
+
+BASS as a central controller for a TPU fleet: tasks = input-shard fetches
+over the DCN fabric.  Derived value = scheduled tasks/second.  The 1000+
+node requirement means the controller must place tens of thousands of
+flows per epoch in seconds — O(m·(log n + R)) with the lazy minnow heap +
+LCA routing + vectorized TS ledger.  CSV: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bass import schedule_bass
+from repro.core.tasks import Instance, Task
+from repro.core.topology import tpu_dcn_fabric
+
+
+def run() -> list:
+    rows = []
+    for pods, hosts, n_tasks in [(2, 128, 4000), (4, 256, 10000), (16, 256, 40000)]:
+        n_hosts = pods * hosts
+        fab = tpu_dcn_fabric(n_pods=pods, hosts_per_pod=hosts)
+        workers = [f"pod{p}/host{h}" for p in range(pods) for h in range(hosts)]
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, n_hosts, size=(n_tasks, 3))
+        tasks = [
+            Task(
+                tid=i,
+                size=float(256e6 + (i % 7) * 64e6),     # 256–640 MB shards
+                compute=float(0.05),
+                replicas=tuple(workers[j] for j in idx[i]),
+            )
+            for i in range(n_tasks)
+        ]
+        idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
+        inst = Instance(fabric=fab, workers=workers, idle=idle, tasks=tasks,
+                        slot_duration=0.1)
+        t0 = time.perf_counter()
+        sched = schedule_bass(inst)
+        dt = time.perf_counter() - t0
+        rows.append(
+            (
+                f"sched_scale_{n_hosts}hosts_{n_tasks}tasks",
+                dt / n_tasks * 1e6,
+                round(n_tasks / dt, 0),
+            )
+        )
+        assert len(sched.assignments) == n_tasks
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

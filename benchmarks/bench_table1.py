@@ -1,0 +1,63 @@
+"""Benchmark: Table I(a)/(b) + Fig. 5 — Wordcount & Sort at 150M…5G.
+
+Regenerates the paper's workload shapes on the simulated 6-node/2-switch
+testbed (ongoing background job, replicas=3, 64 MB blocks, 100 Mbps) and
+reports JT means over seeds for BASS/BAR/HDS next to the paper's absolute
+numbers.  Reproducible claims: the BASS<HDS ordering on every row, BASS's
+edge over BAR in bandwidth-bound regimes, and the §V.B locality-ratio
+non-monotonicity.  CSV: ``name,us_per_call,derived``(=JT seconds).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SCHEDULERS
+from repro.core.simulator import evaluate_mapreduce
+from repro.core.workloads import (
+    DATA_SIZES_MB,
+    PAPER_TABLE1,
+    SORT,
+    WORDCOUNT,
+    make_instance,
+)
+
+SCHED_ORDER = ["bass", "bar", "hds"]
+
+
+def run(seeds: int = 8, jobs=(("wordcount", WORDCOUNT), ("sort", SORT))) -> list:
+    rows = []
+    for jobname, job in jobs:
+        for size, mb in DATA_SIZES_MB.items():
+            n = seeds if mb <= 1024 else max(3, seeds // 2)
+            for sname in SCHED_ORDER:
+                jts, lrs = [], []
+                t0 = time.perf_counter()
+                for seed in range(n):
+                    inst, rtasks, shuf = make_instance(job, mb, seed=seed)
+                    m = evaluate_mapreduce(inst, SCHEDULERS[sname], rtasks, shuf)
+                    jts.append(m.jt)
+                    lrs.append(m.lr)
+                us = (time.perf_counter() - t0) / n * 1e6
+                paper = PAPER_TABLE1[jobname][size][sname.upper() if sname != "bass" else "BASS"]
+                rows.append(
+                    (
+                        f"table1_{jobname}_{size}_{sname}",
+                        us,
+                        round(float(np.mean(jts)), 1),
+                        round(float(np.mean(lrs)), 3),
+                        paper,
+                    )
+                )
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived_jt_s,mean_lr,paper_jt_s")
+    for row in run():
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+``python -m benchmarks.run`` executes all of them and prints a combined
+``name,us_per_call,derived`` CSV:
+
+* bench_discussion1 — Example 1 / Fig. 4 (BASS 35 s, BAR 38 s, HDS 39 s)
+* bench_prebass     — Example 2 (Pre-BASS 34 s) + prefetch-gain sweep
+* bench_qos         — Example 3 queue scheme (+ DCN traffic classes)
+* bench_table1      — Table I(a)/(b) + Fig. 5 (Wordcount/Sort, 150M…5G)
+* bench_sched_scale — beyond-paper: 4 096-host fleet controller throughput
+* bench_roofline    — §Roofline report from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (
+    bench_discussion1,
+    bench_prebass,
+    bench_qos,
+    bench_roofline,
+    bench_sched_scale,
+    bench_table1,
+)
+
+MODULES = [
+    bench_discussion1,
+    bench_prebass,
+    bench_qos,
+    bench_table1,
+    bench_sched_scale,
+    bench_roofline,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            print(f"{mod.__name__},ERROR,{type(e).__name__}:{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Recompile a cell and print the top collectives by trip-multiplied wire
+bytes — the §Perf profiling tool (our 'profile' is the partitioned HLO)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+from collections import defaultdict
+
+from repro.launch.dryrun import build_cell, ACT_RULES_TRAIN, ACT_RULES_DECODE
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import parse_collectives
+from repro.configs import get_config, shapes_for
+from repro.distributed.actctx import activation_sharding
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+policy = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+accum = int(sys.argv[4]) if len(sys.argv) > 4 else 8
+shape = next(s for s in shapes_for(arch) if s.name == shape_name)
+mesh = make_production_mesh()
+from repro.launch.dryrun import policy_rules
+fn, args, trips, cfg = build_cell(arch, shape, mesh, accum=accum, policy=policy)
+_c, _p, rules = policy_rules(arch, shape, mesh, policy)
+with mesh, activation_sharding(mesh, rules):
+    comp = fn.lower(*args).compile()
+rep = parse_collectives(comp.as_text(), trips, world=256)
+rows = sorted(rep.ops, key=lambda c: -c.wire_bytes * c.trips)[:25]
+total = sum(c.wire_bytes * c.trips for c in rep.ops)
+print(f"total wire bytes/dev: {total/1e9:.1f} GB over {len(rep.ops)} collective ops")
+for c in rows:
+    print(f"{c.kind:20s} res={c.result_bytes/1e6:9.2f}MB g={c.group:3d} trips={c.trips:6d} "
+          f"wire*trips={c.wire_bytes*c.trips/1e9:8.2f}GB  {c.path[-110:]}")

@@ -1,0 +1,18 @@
+"""Batched serving example (deliverable (b)): two in-process replicas of a
+small model behind the BASS router — warm prefixes stick to their home
+replica, overload triggers bandwidth-checked migration (Algorithm 1 Case
+1.2), cold requests go to the least-loaded replica (Case 2).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or [
+    "--replicas", "2", "--slots", "4", "--requests", "10",
+    "--prompt-len", "24", "--max-new", "12", "--s-max", "96",
+])
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

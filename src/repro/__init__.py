@@ -1,0 +1,3 @@
+"""BASS (Qin et al., 2014) reproduced and deployed as the control plane of a
+multi-pod JAX training/serving framework.  See README.md and DESIGN.md."""
+__version__ = "0.1.0"

@@ -1,0 +1,67 @@
+"""The paper's contribution: BASS bandwidth-aware scheduling with an SDN-style
+global fabric view, Time-Slot bandwidth allocation, the HDS/BAR baselines,
+Pre-BASS prefetching, QoS queueing, and the evaluation simulator.
+
+Public API:
+
+``Fabric``/``TimeSlotLedger``   — the controller's network view + TS ledger
+``schedule_bass``               — Algorithm 1
+``schedule_hds``/``schedule_bar`` — paper baselines
+``schedule_prebass``            — Discussion-2 prefetching variant
+``QosPort``                     — Discussion-3 OpenFlow queue model
+``replay``/``evaluate_mapreduce`` — independent verification + Table-I metrics
+"""
+from .topology import Fabric, paper_fig2_fabric, two_tier_fabric, tpu_dcn_fabric
+from .timeslot import TimeSlotLedger, TransferPlan
+from .tasks import (
+    Assignment,
+    Instance,
+    Schedule,
+    Task,
+    completion_time,
+    execution_time,
+    movement_time,
+)
+from .bass import schedule_bass
+from .baselines import schedule_bar, schedule_hds
+from .prebass import schedule_prebass
+from .qos import Flow, QosPort, QueueSpec, example3_port, shuffle_vs_default, single_queue_port
+from .simulator import JobMetrics, ReplayReport, evaluate_mapreduce, replay
+
+SCHEDULERS = {
+    "bass": schedule_bass,
+    "hds": schedule_hds,
+    "bar": schedule_bar,
+    "prebass": schedule_prebass,
+}
+
+__all__ = [
+    "Assignment",
+    "Fabric",
+    "Flow",
+    "Instance",
+    "JobMetrics",
+    "QosPort",
+    "QueueSpec",
+    "ReplayReport",
+    "SCHEDULERS",
+    "Schedule",
+    "Task",
+    "TimeSlotLedger",
+    "TransferPlan",
+    "completion_time",
+    "evaluate_mapreduce",
+    "example3_port",
+    "execution_time",
+    "movement_time",
+    "paper_fig2_fabric",
+    "replay",
+    "schedule_bar",
+    "schedule_bass",
+    "schedule_hds",
+    "schedule_prebass",
+    "shuffle_vs_default",
+    "single_queue_port",
+    "tpu_dcn_fabric",
+    "two_tier_fabric",
+]

@@ -1,0 +1,146 @@
+"""Independent discrete-event replay of a schedule.
+
+The schedulers compute completion times with Eq. (1)–(3) arithmetic; this
+module *replays* an emitted :class:`~repro.core.tasks.Schedule` against the
+fabric as an event simulation and re-derives every task's timeline from
+first principles.  It is the cross-check oracle used by the property tests:
+
+* node exclusivity — a node runs one task at a time;
+* causality        — compute starts only after the task's transfer ends and
+                     after the node's previous task finishes;
+* link capacity    — summed reservations on any link/slot never exceed 1;
+* agreement        — replayed finish times equal the scheduler's to 1e-6.
+
+It also provides :func:`evaluate`, the two-phase (map → shuffle → reduce)
+MapReduce makespan evaluator used by the Table-I workload benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .tasks import Assignment, Instance, Schedule, Task
+from .timeslot import TimeSlotLedger
+
+
+@dataclass
+class ReplayReport:
+    makespan: float
+    finish: Dict[int, float]
+    violations: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def replay(instance: Instance, schedule: Schedule, atol: float = 1e-6) -> ReplayReport:
+    tasks = {t.tid: t for t in instance.tasks}
+    violations: List[str] = []
+
+    # 1. Link over-booking (ledger matrix is the committed state).
+    res = schedule.ledger.reserved
+    if (res > 1.0 + 1e-6).any():
+        worst = float(res.max())
+        violations.append(f"link over-booked: max reserved fraction {worst:.6f}")
+
+    # 2. Per-node sequential replay.
+    finish: Dict[int, float] = {}
+    for node, queue in schedule.by_node().items():
+        t = instance.idle.get(node, 0.0)
+        for a in queue:
+            task = tasks[a.tid]
+            ready = a.transfer.end if a.transfer is not None else 0.0
+            start = max(t, ready)
+            end = start + task.compute
+            if start + atol < a.start - atol and abs(start - a.start) > atol:
+                pass  # prefetch may legally start later than possible; check below
+            if a.start + atol < start:
+                violations.append(
+                    f"task {a.tid} on {node} starts at {a.start} before feasible {start}"
+                )
+            end = a.start + task.compute  # replay honours the schedule's start
+            if abs(end - a.finish) > atol:
+                violations.append(
+                    f"task {a.tid} finish mismatch: schedule {a.finish} replay {end}"
+                )
+            if a.transfer is not None and a.transfer.end > a.start + atol:
+                violations.append(
+                    f"task {a.tid} computes at {a.start} before transfer ends "
+                    f"at {a.transfer.end}"
+                )
+            if a.start + atol < t:
+                violations.append(
+                    f"task {a.tid} overlaps previous task on {node}: {a.start} < {t}"
+                )
+            t = max(t, end)
+            finish[a.tid] = end
+
+    missing = set(tasks) - set(finish)
+    if missing:
+        violations.append(f"unscheduled tasks: {sorted(missing)}")
+
+    mk = max(finish.values()) if finish else 0.0
+    return ReplayReport(mk, finish, violations)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase MapReduce evaluation (Table-I-style workloads)
+# ---------------------------------------------------------------------------
+
+Scheduler = Callable[[Instance, Optional[TimeSlotLedger]], Schedule]
+
+
+@dataclass
+class JobMetrics:
+    """Table-I row: map/reduce/job completion + locality ratio."""
+
+    mt: float
+    rt: float
+    jt: float
+    lr: float
+
+
+def evaluate_mapreduce(
+    map_instance: Instance,
+    scheduler: Scheduler,
+    reduce_tasks: Sequence[Task],
+    shuffle_per_reduce: float,
+) -> JobMetrics:
+    """Schedule the map phase, then build the reduce phase on the same ledger.
+
+    Reduce tasks start after all maps finish (barrier, as in the paper's JT
+    measurements), each shuffles ``shuffle_per_reduce`` units from the map
+    nodes (modelled as a transfer from the busiest map node — the shuffle
+    bottleneck path) unless the reducer lands there.
+    """
+    mp = scheduler(map_instance, None)
+    ledger = mp.ledger
+    mt = mp.makespan
+
+    # Reduce instance: nodes become idle at their last map finish (or their
+    # initial idle if they ran nothing), barrier at mt for shuffle start.
+    idle = dict(map_instance.idle)
+    for a in mp.assignments:
+        idle[a.node] = max(idle.get(a.node, 0.0), a.finish)
+    for n in idle:
+        idle[n] = max(idle[n], mt)
+
+    reduce_instance = Instance(
+        fabric=map_instance.fabric,
+        workers=list(map_instance.workers),
+        idle=idle,
+        tasks=list(reduce_tasks),
+        slot_duration=map_instance.slot_duration,
+    )
+    rp = scheduler(reduce_instance, ledger)
+    rt = rp.makespan - mt
+    jt = max(mp.makespan, rp.makespan)
+
+    n_total = len(mp.assignments) + len(rp.assignments)
+    n_local = sum(1 for a in mp.assignments if a.local) + sum(
+        1 for a in rp.assignments if a.local
+    )
+    return JobMetrics(mt=mt, rt=rt, jt=jt, lr=n_local / max(n_total, 1))

@@ -1,0 +1,10 @@
+"""Distribution: sharding rules, gradient compression, cross-pod DCN sync."""
+from .sharding import (
+    ACT_RULES_DECODE,
+    ACT_RULES_TRAIN,
+    PARAM_RULES,
+    cache_shardings,
+    param_shardings,
+    replication_report,
+    spec_for,
+)

@@ -1,0 +1,66 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher establishes a context
+(``activation_sharding(mesh, rules)``) during tracing, and layer code calls
+``constrain(x, logical_axes)`` at the residual-stream boundaries.  With no
+context active (smoke tests, single-device accounting lowering) it is a
+no-op, so the same model code serves every environment.
+
+This is what keeps saved-for-backward activations sequence-sharded over the
+``model`` axis inside the layer scan (Megatron-SP style): without it XLA
+saves full-length activations per layer and the 123 B train cell needs
+~76 GiB/device; with it the same cell fits.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import spec_for
+
+_STATE: list = []
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, rules: Dict[str, Any]):
+    _STATE.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _STATE.pop()
+
+
+def active() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return _STATE[-1] if _STATE else None
+
+
+def constrain(
+    x: jax.Array,
+    logical_axes: Tuple[Optional[str], ...],
+    only_if: Optional[str] = None,
+    require_axis: Optional[str] = None,
+) -> jax.Array:
+    """Apply a sharding constraint from logical axes under the active rules.
+
+    ``only_if`` names a boolean policy flag that must be present in the
+    rules (e.g. "megatron_blocks"); ``require_axis`` names a logical axis
+    that must be mapped by the rules for the constraint to apply at all —
+    otherwise a partially-resolved spec (e.g. batch only) would silently
+    force the *other* dims replicated, changing baseline behavior."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if only_if is not None and not rules.get(only_if):
+        return x
+    if require_axis is not None and require_axis not in rules:
+        return x
+    spec = spec_for(x.shape, logical_axes, mesh, rules)
+    if not spec:
+        # nothing resolved → leave placement to the partitioner rather than
+        # forcing replication (keeps policy deltas strictly additive)
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

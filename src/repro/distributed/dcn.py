@@ -1,0 +1,122 @@
+"""Cross-pod gradient synchronization over DCN, scheduled by BASS.
+
+Inside a pod, XLA's compiled collectives own the ICI links.  *Between*
+pods the wire is the data-center network — shared with input-shard
+prefetch (Q2) and checkpoint pushes (Q3).  This module gives that hop the
+paper's treatment:
+
+* the per-step pod all-reduce is a known-size flow (grad bytes / pod),
+  registered with the BASS controller as a Q1 (highest-priority) transfer
+  whose TS slots are reserved on the pod trunks *for the projected step
+  cadence* — Pre-BASS-style, slots are booked one step ahead so the flow
+  never waits;
+* optional int8 error-feedback compression (``grad_compress``) shrinks the
+  flow 4× when the DCN term dominates the roofline;
+* ``shard_map``-based ``cross_pod_allreduce`` implements the hierarchical
+  reduce: reduce-scatter (ICI) → pod all-reduce (DCN) → all-gather (ICI),
+  which is also what the compiled train step produces when lowered on the
+  (pod, data, model) mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.timeslot import TimeSlotLedger, TransferPlan
+from ..core.topology import Fabric, tpu_dcn_fabric
+
+Tree = Any
+
+
+def cross_pod_allreduce(x: jax.Array, mesh: Mesh, compressed: bool = False):
+    """All-reduce ``x`` over the ``pod`` axis via shard_map (DCN hop only).
+
+    With ``compressed=True`` the payload crosses the pod axis as int8 +
+    per-block scales (error feedback is applied by the caller, which owns
+    the residual state)."""
+    from jax.experimental.shard_map import shard_map
+
+    from .grad_compress import compress, decompress
+
+    def body(xs):
+        if not compressed:
+            return jax.lax.psum(xs, "pod")
+        # Quantized all-reduce = all-gather the (int8 payload, scales) pairs
+        # and sum the decompressed values: exact sum of per-pod
+        # approximations, int8 bytes on the wire.
+        q, scale = compress(xs)
+        qg = jax.lax.all_gather(q, "pod")            # [P, blocks, B] int8
+        sg = jax.lax.all_gather(scale, "pod")        # [P, blocks] f32
+        vals = (qg.astype(jnp.float32) * sg[..., None]).sum(axis=0)
+        flat = vals.reshape(-1)
+        n = 1
+        for d in xs.shape:
+            n *= d
+        return flat[:n].reshape(xs.shape)
+
+    spec = P(*((None,) * x.ndim))
+    return shard_map(
+        body, mesh=mesh, in_specs=spec, out_specs=spec, check_rep=False
+    )(x)
+
+
+@dataclass
+class StepFlow:
+    """One scheduled cross-pod flow (grad sync for step N)."""
+
+    step: int
+    plan: TransferPlan
+    bytes: float
+
+
+class CrossPodSync:
+    """BASS-side bookkeeping for the recurring gradient flow.
+
+    The controller holds the DCN fabric + ledger shared with data placement
+    and checkpoint traffic; each training step's sync is reserved ahead of
+    time (Pre-BASS) at Q1 priority, i.e. other traffic classes see the
+    residual bandwidth only.
+    """
+
+    def __init__(
+        self,
+        fabric: Optional[Fabric] = None,
+        n_pods: int = 2,
+        hosts_per_pod: int = 64,
+        grad_bytes: float = 0.0,
+        compress: bool = False,
+        slot_duration: float = 0.05,
+    ):
+        self.fabric = fabric or tpu_dcn_fabric(n_pods, hosts_per_pod)
+        self.ledger = TimeSlotLedger(self.fabric, slot_duration, 4096)
+        self.n_pods = n_pods
+        self.compress = compress
+        self.grad_bytes = grad_bytes
+        self.flows: Dict[int, StepFlow] = {}
+
+    def wire_bytes(self) -> float:
+        eff = self.grad_bytes / 4.0 if self.compress else self.grad_bytes
+        return 2.0 * eff * (self.n_pods - 1) / self.n_pods
+
+    def reserve_step(self, step: int, not_before: float) -> StepFlow:
+        """Book TS slots on the pod trunks for step ``step``'s sync."""
+        rows = self.ledger.rows(
+            [f"pod{p}/trunk" for p in range(self.n_pods)]
+        )
+        size = self.wire_bytes()
+        plan = self.ledger.plan_transfer(size, rows, not_before=not_before)
+        self.ledger.commit(plan)
+        flow = StepFlow(step, plan, size)
+        self.flows[step] = flow
+        return flow
+
+    def projected_sync_seconds(self) -> float:
+        """What the reservation implies for the roofline's DCN term."""
+        rows = self.ledger.rows([f"pod{p}/trunk" for p in range(self.n_pods)])
+        bw = self.ledger.path_bandwidth(rows, 0.0)
+        return self.wire_bytes() / bw if bw > 0 else float("inf")

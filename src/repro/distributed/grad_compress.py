@@ -1,0 +1,81 @@
+"""Gradient compression for the cross-pod (DCN) hop — error feedback int8.
+
+Intra-pod gradient reduction rides ICI and stays uncompressed.  The pod
+axis crosses DCN (~6 GB/s/chip vs ~50 GB/s ICI), so the pod all-reduce is
+the slow wire; compressing *only that hop* cuts its bytes 4× (int8 + f32
+scale per block) while error feedback keeps the sequence of updates
+unbiased in the long run (residual carried to the next step).
+
+Used by ``dcn.CrossPodSync``: reduce-scatter intra-pod (f32) → compress →
+pod all-reduce (int8) → decompress → all-gather intra-pod.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+BLOCK = 1024
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """→ (int8 payload [n/B, B], f32 per-block scales [n/B])."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_with_feedback(
+    x: jax.Array, residual: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error feedback: compress (x + residual), carry the quantization error.
+
+    → (payload, scales, new_residual)."""
+    target = x.astype(jnp.float32) + residual
+    q, scale = compress(target)
+    approx = decompress(q, scale, x.shape)
+    return q, scale, target - approx
+
+
+def tree_compress_with_feedback(grads: Tree, residuals: Tree):
+    qs, scales, new_res = [], [], []
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress_with_feedback(g, r)
+        qs.append(q)
+        scales.append(s)
+        new_res.append(nr)
+    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return unf(qs), unf(scales), unf(new_res)
+
+
+def tree_decompress(qs: Tree, scales: Tree, template: Tree) -> Tree:
+    flat_q, treedef = jax.tree_util.tree_flatten(qs)
+    flat_s = treedef.flatten_up_to(scales)
+    flat_t = treedef.flatten_up_to(template)
+    out = [
+        decompress(q, s, t.shape) for q, s, t in zip(flat_q, flat_s, flat_t)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

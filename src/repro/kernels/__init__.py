@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd wrapper
+in ``ops.py``; tests sweep shapes/dtypes in interpret mode on CPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The model code calls these with model-native layouts ([B, S, H, hd]); the
+wrappers transpose to the kernels' [B, H, S, hd] blocked layout, pick block
+sizes, and default ``interpret`` to True off-TPU so the same call sites work
+on CPU (tests) and TPU (production).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import flash_decode_bhsd
+from .flash_attention import flash_attention_bhsd
+from .mamba_scan import mamba_scan_blocked
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,            # [B, S, nq, hd]
+    k: jax.Array,            # [B, S, nkv, hd]
+    v: jax.Array,            # [B, S, nkv, hd]
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _default_interpret() if interpret is None else interpret
+    out = flash_attention_bhsd(
+        jnp.swapaxes(q, 1, 2),
+        jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2),
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(
+    q: jax.Array,            # [B, 1, nq, hd]
+    k_cache: jax.Array,      # [B, S, nkv, hd]
+    v_cache: jax.Array,      # [B, S, nkv, hd]
+    pos: jax.Array,          # scalar int32
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _default_interpret() if interpret is None else interpret
+    out = flash_decode_bhsd(
+        jnp.swapaxes(q, 1, 2),
+        jnp.swapaxes(k_cache, 1, 2),
+        jnp.swapaxes(v_cache, 1, 2),
+        pos,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def mamba_scan(
+    x: jax.Array,            # [B, S, d_in] f32
+    dt: jax.Array,
+    a: jax.Array,            # [d_in, N] f32
+    b_mat: jax.Array,        # [B, S, N]
+    c_mat: jax.Array,
+    block_d: int = 512,
+    chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _default_interpret() if interpret is None else interpret
+    d_in, s = x.shape[-1], x.shape[1]
+    bd = block_d
+    while d_in % bd:
+        bd //= 2
+    ck = chunk
+    while s % ck:
+        ck //= 2
+    return mamba_scan_blocked(
+        x, dt, a, b_mat, c_mat, block_d=bd, chunk=ck, interpret=interpret
+    )

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every kernel (the ``assert_allclose`` targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,            # [B, nq, Sq, hd]
+    k: jax.Array,            # [B, nkv, Sk, hd]
+    v: jax.Array,            # [B, nkv, Sk, hd]
+    causal: bool = True,
+    pos: jax.Array | None = None,
+) -> jax.Array:
+    b, nq, sq, hd = q.shape
+    nkv, sk = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / (hd ** 0.5)
+    if causal:
+        qi = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        s = jnp.where((ki <= qi)[None, None, None], s, NEG_INF)
+    if pos is not None:
+        ki = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        s = jnp.where((ki <= pos)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return out.reshape(b, nq, sq, hd).astype(q.dtype)
+
+
+def decode_ref(q, k, v, pos):
+    """q [B,nq,1,hd] vs cache [B,nkv,S,hd], valid positions ≤ pos."""
+    return attention_ref(q, k, v, causal=False, pos=pos)
+
+
+def mamba_scan_ref(
+    x: jax.Array,            # [B, S, d_in] f32
+    dt: jax.Array,           # [B, S, d_in] f32
+    a: jax.Array,            # [d_in, N] f32
+    b_mat: jax.Array,        # [B, S, N] f32
+    c_mat: jax.Array,        # [B, S, N] f32
+) -> jax.Array:
+    bsz, s, d_in = x.shape
+    n = a.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * a)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bsz, d_in, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat, 1, 0),
+        jnp.moveaxis(c_mat, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

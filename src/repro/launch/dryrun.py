@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch × shape × mesh) cell.
+
+Per cell this produces a JSON artifact under ``artifacts/dryrun/`` holding:
+
+* ``memory``      — ``compiled.memory_analysis()`` per-device bytes (fit proof)
+* ``cost``        — ``compiled.cost_analysis()`` (per-device, loop-once)
+* ``collectives`` — trip-multiplied wire bytes by kind & fabric (ICI/DCN)
+* ``accounting``  — global FLOPs/bytes from the unrolled lowering (+ the
+  mamba time-scan addendum), feeding EXPERIMENTS.md §Roofline
+* ``roofline``    — the three terms in seconds + dominant bottleneck
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both            # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs import ARCH_NAMES, get_config, shapes_for
+from ..configs.base import ShapeSpec
+from ..distributed.sharding import (
+    ACT_RULES_DECODE,
+    ACT_RULES_SMALL_DP,
+    ACT_RULES_TRAIN,
+    ACT_RULES_TRAIN_OPT,
+    PARAM_RULES_SMALL_DP,
+    param_shardings,
+    spec_for,
+)
+
+SMALL_MODEL_PARAMS = 2e8     # below this, the opt policy runs pure DP
+from ..models.model import Model
+from ..models.params import tree_map_defs
+from ..optim.adamw import AdamW, AdamWState
+from ..optim.schedule import warmup_cosine
+from .hlo_analysis import (
+    model_flops_estimate,
+    parse_collectives,
+    roofline_terms,
+    ssm_scan_addendum,
+)
+from .inputs import decode_inputs, train_inputs
+from .mesh import make_production_mesh, mesh_device_count
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+TRAIN_ACCUM = 8
+
+
+def _scope_trips(cfg, shape, accum: int) -> dict:
+    trips = {}
+    if cfg.scan_layers:
+        if cfg.family == "hybrid":
+            trips["scan_layers"] = cfg.n_layers // cfg.attn_period
+        else:
+            trips["scan_layers"] = cfg.n_layers
+    if shape.kind == "train" and accum > 1:
+        trips["scan_accum"] = accum
+    if cfg.family in ("ssm", "hybrid") and shape.kind != "decode":
+        trips["scan_time"] = shape.seq_len
+    if cfg.attn_chunk and shape.kind != "decode":
+        trips["scan_qchunk"] = max(1, shape.seq_len // cfg.attn_chunk)
+    return trips
+
+
+def _opt_abstract_and_shardings(params_abs, param_sh, mesh):
+    m = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs
+    )
+    count = jax.ShapeDtypeStruct((), jnp.int32)
+    state = AdamWState(m=m, v=m, count=count)
+    rep = NamedSharding(mesh, PartitionSpec())
+    sh = AdamWState(m=param_sh, v=param_sh, count=rep)
+    return state, sh
+
+
+def policy_rules(arch: str, shape: ShapeSpec, mesh, policy: str):
+    """→ (cfg transform, param rules, activation rules) for a policy."""
+    cfg = get_config(arch)
+    act = dict(ACT_RULES_DECODE if shape.kind == "decode" else ACT_RULES_TRAIN)
+    param_rules = None  # PARAM_RULES default
+    if policy == "opt":
+        # Measured lesson (§Perf): head-sharded attention + Megatron blocks
+        # win for train_4k but *regress* 32k prefill (the gathered-h and
+        # per-head full-length scores outweigh the savings) — so the opt
+        # activation rules apply to training only; prefill keeps the
+        # baseline seq-sharding and still gets the a2a MoE dispatch.
+        if cfg.param_count() < SMALL_MODEL_PARAMS and shape.kind == "train":
+            act = dict(ACT_RULES_SMALL_DP)
+            param_rules = PARAM_RULES_SMALL_DP
+        elif shape.kind == "train":
+            act = dict(ACT_RULES_TRAIN_OPT)
+        if cfg.n_experts:
+            cfg = cfg.with_(moe_impl="a2a")
+    if "pod" in mesh.shape and "batch" in act and not isinstance(act["batch"], list):
+        act["batch"] = ("pod", "data")
+    elif "batch" in act and not isinstance(act["batch"], list):
+        act["batch"] = ("data",)
+    return cfg, param_rules, act
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh, accum: int = TRAIN_ACCUM,
+               policy: str = "baseline"):
+    """→ (jitted-but-unlowered fn, example abstract args, scope trips, cfg)."""
+    cfg, param_rules, _act = policy_rules(arch, shape, mesh, policy)
+    model = Model(cfg)
+    defs = model.defs()
+    params_abs = model.abstract()
+    param_sh = param_shardings(defs, mesh, rules=param_rules)
+    rep = NamedSharding(mesh, PartitionSpec())
+
+    if shape.kind == "train":
+        batch_abs, batch_sh = train_inputs(cfg, shape, mesh)
+        opt = AdamW(lr=warmup_cosine(3e-4, 2000, 100_000))
+        step = make_train_step(model, opt, accum=accum)
+        opt_abs, opt_sh = _opt_abstract_and_shardings(params_abs, param_sh, mesh)
+        metrics_sh = {"loss": rep, "grad_norm": rep}
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+        args = (params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs, batch_sh = train_inputs(cfg, shape, mesh)
+        step = make_prefill_step(model, s_max=shape.seq_len)
+        rules = dict(ACT_RULES_DECODE)
+        rules["batch"] = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        logits_sh = NamedSharding(
+            mesh,
+            spec_for(
+                (shape.global_batch, cfg.vocab_size), ("batch", "vocab"), mesh, rules
+            ),
+        )
+        cache_sh = tree_map_defs(
+            lambda p: NamedSharding(mesh, spec_for(p.shape, p.axes, mesh, rules)),
+            model.cache_defs(shape.global_batch, shape.seq_len),
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+        )
+        args = (params_abs, batch_abs)
+    else:  # decode
+        (token, pos, caches), (token_sh, pos_sh, cache_sh) = decode_inputs(
+            cfg, shape, mesh
+        )
+        step = make_decode_step(model)
+        rules = dict(ACT_RULES_DECODE)
+        rules["batch"] = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        logits_sh = NamedSharding(
+            mesh,
+            spec_for(
+                (shape.global_batch, cfg.vocab_size), ("batch", "vocab"), mesh, rules
+            ),
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, token_sh, pos_sh, cache_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(3,),
+        )
+        args = (params_abs, token, pos, caches)
+
+    return fn, args, _scope_trips(cfg, shape, accum), cfg
+
+
+def accounting_lowering(arch: str, shape: ShapeSpec):
+    """Unrolled single-device lowering for global FLOPs/bytes."""
+    cfg = get_config(arch).with_(scan_layers=False, attn_chunk=0)
+    model = Model(cfg)
+    params_abs = model.abstract()
+    if shape.kind == "train":
+        # accum=1: full-batch flops in one pass.
+        from ..optim.schedule import constant
+
+        step = make_train_step(model, AdamW(lr=constant(3e-4)), accum=1)
+        opt_abs = jax.eval_shape(AdamW(lr=3e-4).init, params_abs)
+        batch_abs, _ = train_inputs(cfg, shape, None)
+        lowered = jax.jit(step).lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs, _ = train_inputs(cfg, shape, None)
+        lowered = jax.jit(make_prefill_step(model, shape.seq_len)).lower(
+            params_abs, batch_abs
+        )
+    else:
+        (token, pos, caches), _ = decode_inputs(cfg, shape, None)
+        lowered = jax.jit(make_decode_step(model)).lower(
+            params_abs, token, pos, caches
+        )
+    return lowered, cfg
+
+
+def run_cell(
+    arch: str,
+    shape: ShapeSpec,
+    multi_pod: bool,
+    out_dir: Path,
+    force: bool = False,
+    with_accounting: bool = True,
+    accum: int = TRAIN_ACCUM,
+    policy: str = "baseline",
+) -> dict:
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    suffix = "" if policy == "baseline" else f"__{policy}"
+    out = out_dir / f"{arch}__{shape.name}__{mesh_tag}{suffix}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+
+    t0 = time.time()
+    record: dict = {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": mesh_tag,
+        "policy": policy,
+        "ok": False,
+    }
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh_device_count(mesh)
+        fn, args, trips, cfg = build_cell(arch, shape, mesh, accum, policy)
+        from ..distributed.actctx import activation_sharding
+
+        _cfg2, _pr, act_rules = policy_rules(arch, shape, mesh, policy)
+        with mesh, activation_sharding(mesh, act_rules):
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "peak_gib": (
+                mem.argument_size_in_bytes
+                + max(mem.output_size_in_bytes - mem.alias_size_in_bytes, 0)
+                + mem.temp_size_in_bytes
+            )
+            / 2**30,
+            "alias_gib": mem.alias_size_in_bytes / 2**30,
+        }
+        ca = compiled.cost_analysis() or {}
+        record["cost_per_device_loop_once"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        txt = compiled.as_text()
+        coll = parse_collectives(txt, trips, world=chips)
+        record["collectives"] = {
+            "count": coll.count(),
+            "by_kind_wire_bytes": coll.by_kind(),
+            "wire_bytes_ici": coll.total_wire_bytes(dcn=False),
+            "wire_bytes_dcn": coll.total_wire_bytes(dcn=True),
+        }
+        record["scope_trips"] = trips
+        record["compile_s"] = round(time.time() - t0, 1)
+
+        if with_accounting:
+            t1 = time.time()
+            lowered_b, cfg_b = accounting_lowering(arch, shape)
+            cb = lowered_b.cost_analysis() or {}
+            add_flops, add_bytes = ssm_scan_addendum(cfg_b, shape)
+            flops_global = float(cb.get("flops", 0.0)) + add_flops
+            bytes_global = float(cb.get("bytes accessed", 0.0)) + add_bytes
+            mf = model_flops_estimate(cfg_b, shape)
+            terms = roofline_terms(
+                flops_global, bytes_global, coll, chips, mf, intra_pod=256
+            )
+            record["accounting"] = {
+                "hlo_flops_global": flops_global,
+                "hlo_bytes_global": bytes_global,
+                "ssm_addendum_flops": add_flops,
+                "model_flops": mf,
+                "accounting_s": round(time.time() - t1, 1),
+            }
+            record["roofline"] = terms.to_dict()
+        record["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        record["compile_s"] = round(time.time() - t0, 1)
+
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=2, default=str))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-accounting", action="store_true")
+    ap.add_argument("--accum", type=int, default=TRAIN_ACCUM)
+    ap.add_argument("--policy", default="baseline", choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes_for(arch):
+            if args.shape != "all" and shape.name != args.shape:
+                continue
+            for multi in meshes:
+                tag = f"{arch} × {shape.name} × {'2x16x16' if multi else '16x16'}"
+                rec = run_cell(
+                    arch,
+                    shape,
+                    multi,
+                    out_dir,
+                    force=args.force,
+                    with_accounting=not args.no_accounting,
+                    accum=args.accum,
+                    policy=args.policy,
+                )
+                if rec["ok"]:
+                    n_ok += 1
+                    mem = rec["memory"]["peak_gib"]
+                    dom = rec.get("roofline", {}).get("dominant", "-")
+                    print(
+                        f"[OK]   {tag:64s} peak={mem:7.2f} GiB/dev "
+                        f"compile={rec['compile_s']:6.1f}s dominant={dom}",
+                        flush=True,
+                    )
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag:64s} {rec['error']}", flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,304 @@
+"""HLO artifact analysis for the roofline report.
+
+Two facts about XLA cost accounting drive the design (verified by probe):
+
+1. ``cost_analysis()`` visits each op **once** — while-loop bodies are NOT
+   multiplied by trip count.  Scanned models would report 1-layer FLOPs.
+2. Collective ops only exist in the *compiled* (SPMD-partitioned) module,
+   and every op line carries ``metadata={op_name="…/scan_layers/while/body/…"}``
+   — our ``jax.named_scope`` labels survive into the partitioned HLO.
+
+So each dry-run cell produces TWO artifacts:
+
+* **compiled scanned step** (the deliverable): ``memory_analysis()`` proves
+  fit; its text is parsed here for the collective schedule, with each
+  collective's wire bytes multiplied by the trip counts of the named scan
+  scopes on its op_name path.
+* **unrolled lowering** (``scan_layers=False``, no remat-free accounting
+  change): ``lowered.cost_analysis()`` on the unoptimized module gives
+  *global* FLOPs/bytes with every layer materialized once.  The mamba time
+  scan stays a loop even there; its interior is added analytically
+  (``ssm_scan_addendum``).
+
+Wire-byte model per participating device (ring algorithms):
+  all-gather: R·(g−1)/g   all-reduce: 2·M·(g−1)/g   reduce-scatter: S·(g−1)
+  all-to-all: R·(g−1)/g   collective-permute: R
+Group size g is parsed from ``replica_groups``; groups ≤ intra-pod size are
+costed against ICI bandwidth, larger groups against DCN.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)\s+)?(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _iota_groups(n_groups: int, g: int, dims, perm):
+    """Materialize an IotaReplicaGroupList: iota(prod).reshape(dims)
+    .transpose(perm).reshape(n_groups, g)."""
+    import numpy as np
+
+    total = 1
+    for d in dims:
+        total *= d
+    arr = np.arange(total).reshape(dims)
+    if perm is not None:
+        arr = arr.transpose(perm)
+    return arr.reshape(n_groups, g)
+
+
+def _group_info(line: str, world: int, pod: int):
+    """→ (group size, crosses_pod) for the collective on this line."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) else None
+        groups = _iota_groups(n_groups, g, dims, perm)
+        crosses = bool(((groups // pod).max(axis=1) != (groups // pod).min(axis=1)).any())
+        return g, crosses
+    gl = _GROUPS_LIST_RE.search(line)
+    if gl:
+        members = [int(x) for x in gl.group(1).split(",") if x.strip()]
+        crosses = len({mm // pod for mm in members}) > 1
+        return max(len(members), 1), crosses
+    pr = _PAIRS_RE.search(line)
+    if pr:  # collective-permute pairs
+        nums = [int(x) for x in re.findall(r"\d+", pr.group(1))]
+        crosses = any(a // pod != b // pod for a, b in zip(nums[::2], nums[1::2]))
+        return 2, crosses
+    return world, world > pod
+
+
+@dataclass
+class Collective:
+    kind: str
+    result_bytes: int
+    group: int
+    trips: int
+    wire_bytes: float
+    path: str
+    crosses_pod: bool = False
+
+
+@dataclass
+class CollectiveReport:
+    ops: List[Collective] = field(default_factory=list)
+
+    def total_wire_bytes(
+        self,
+        max_group: Optional[int] = None,
+        min_group: int = 0,
+        dcn: Optional[bool] = None,
+    ) -> float:
+        return sum(
+            c.wire_bytes * c.trips
+            for c in self.ops
+            if (max_group is None or c.group <= max_group)
+            and c.group > min_group
+            and (dcn is None or c.crosses_pod == dcn)
+        )
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for c in self.ops:
+            out[c.kind] = out.get(c.kind, 0.0) + c.wire_bytes * c.trips
+        return out
+
+    def count(self) -> int:
+        return len(self.ops)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute
+
+
+def parse_collectives(
+    hlo_text: str,
+    scope_trips: Dict[str, int],
+    world: int,
+    pod: int = 256,
+) -> CollectiveReport:
+    report = CollectiveReport()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        rbytes = _shape_bytes(dtype, dims)
+        group, crosses = _group_info(line, world, pod)
+        onm = _OPNAME_RE.search(line)
+        path = onm.group(1) if onm else ""
+        trips = 1
+        for label, t in scope_trips.items():
+            trips *= t ** path.count(label)
+        report.ops.append(
+            Collective(
+                kind, rbytes, group, trips,
+                _wire_bytes(kind, rbytes, group), path, crosses,
+            )
+        )
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one-direction budget we charge)
+DCN_BW = 6.25e9              # bytes/s per chip (25 GB/s NIC / 4 chips)
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_ici_s: float
+    collective_dcn_s: float
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    wire_bytes_ici: float
+    wire_bytes_dcn: float
+    model_flops: float
+    chips: int
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_ici_s + self.collective_dcn_s
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.hlo_flops_global if self.hlo_flops_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(useful compute time) / (achievable step time lower bound)."""
+        useful_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        t = self.step_time_lower_bound_s
+        return useful_s / t if t > 0 else 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_ici_s": self.collective_ici_s,
+            "collective_dcn_s": self.collective_dcn_s,
+            "hlo_flops_global": self.hlo_flops_global,
+            "hlo_bytes_global": self.hlo_bytes_global,
+            "wire_bytes_ici": self.wire_bytes_ici,
+            "wire_bytes_dcn": self.wire_bytes_dcn,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(
+    hlo_flops_global: float,
+    hlo_bytes_global: float,
+    collectives: CollectiveReport,
+    chips: int,
+    model_flops: float,
+    intra_pod: int = 256,
+) -> RooflineTerms:
+    wire_ici = collectives.total_wire_bytes(dcn=False)
+    wire_dcn = collectives.total_wire_bytes(dcn=True)
+    return RooflineTerms(
+        compute_s=hlo_flops_global / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes_global / (chips * HBM_BW),
+        collective_ici_s=wire_ici / ICI_BW,
+        collective_dcn_s=wire_dcn / DCN_BW,
+        hlo_flops_global=hlo_flops_global,
+        hlo_bytes_global=hlo_bytes_global,
+        wire_bytes_ici=wire_ici,
+        wire_bytes_dcn=wire_dcn,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N_active·D for a forward-only
+    step (prefill), 2·N_active per token for decode."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def ssm_scan_addendum(cfg, shape, accum_trips: int = 1) -> Tuple[float, float]:
+    """(flops, bytes) of the mamba time-scan interior that loop-once HLO
+    accounting misses.  Per step & channel & state: ~6 flops (exp, 2 mul-add
+    into h, mul-add into y) on [B, d_in, N] f32."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0, 0.0
+    n_mamba = sum(1 for l in range(cfg.n_layers) if not cfg.is_attn_layer(l))
+    if shape.kind == "decode":
+        steps = 1
+        bsz = shape.global_batch
+    else:
+        steps = shape.seq_len
+        bsz = shape.global_batch
+    per_step = bsz * cfg.d_inner * cfg.ssm_state
+    flops = 6.0 * per_step * steps * n_mamba
+    fwd_bwd = 3.0 if shape.kind == "train" else 1.0
+    flops *= fwd_bwd
+    bytes_ = 4.0 * 4 * per_step * steps * n_mamba * fwd_bwd  # h rw + inputs
+    return flops, bytes_

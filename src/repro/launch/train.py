@@ -1,0 +1,162 @@
+"""Training launcher — the end-to-end driver wiring every subsystem:
+
+data pipeline (+ BASS shard placement) → sharded train step (pjit) →
+AdamW → async checkpointing (Q3) → heartbeat/elastic supervision →
+cross-pod sync scheduling (Q1).
+
+On this CPU container it runs real (reduced) models — ``--preset tiny`` is
+what the e2e example exercises; ``--arch <assigned>`` selects any of the
+ten architecture configs (full size only makes sense on a real fleet; pass
+``--smoke`` to use each arch's reduced variant).
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.train --preset tiny --steps 200
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..configs import ARCH_NAMES, get_config
+from ..configs.base import ModelConfig
+from ..core.topology import tpu_dcn_fabric
+from ..data import DataConfig, SyntheticLM, plan_epoch, uniform_shards
+from ..models.model import Model
+from ..optim import AdamW, warmup_cosine
+from ..runtime import HeartbeatMonitor, ProgressTracker
+from .mesh import make_smoke_mesh
+from .steps import make_train_step
+
+TINY = ModelConfig(
+    name="tiny",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+)
+
+PRESET_100M = ModelConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32_768,
+)
+
+
+def build_cfg(args) -> ModelConfig:
+    if args.arch:
+        return get_config(args.arch, smoke=args.smoke)
+    return {"tiny": TINY, "100m": PRESET_100M}[args.preset]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="", choices=[""] + ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args)
+    model = Model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}", flush=True)
+
+    # --- data + BASS shard placement (control plane) -------------------------
+    dcfg = DataConfig(
+        seq_len=args.seq,
+        global_batch=args.batch,
+        vocab_size=cfg.vocab_size,
+        seed=args.seed,
+        n_vision_tokens=cfg.n_vision_tokens,
+        d_model=cfg.d_model,
+        family=cfg.family,
+        enc_seq=cfg.enc_seq,
+    )
+    source = SyntheticLM(dcfg)
+    fabric = tpu_dcn_fabric(n_pods=1, hosts_per_pod=4)
+    hosts = [f"pod0/host{i}" for i in range(4)]
+    shards = uniform_shards(16, hosts, size_bytes=64e6, replication=2)
+    assigns, plan = plan_epoch(fabric, hosts, {h: 0.0 for h in hosts}, shards)
+    local = sum(1 for a in assigns if a.source is None)
+    print(f"BASS shard placement: {len(assigns)} shards, {local} local, "
+          f"epoch ingest makespan {plan.makespan:.2f}s", flush=True)
+
+    # --- model/optimizer state ------------------------------------------------
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    opt = AdamW(lr=warmup_cosine(args.lr, max(args.steps // 20, 5), args.steps))
+    opt_state = opt.init(params)
+    step0 = 0
+
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = Checkpointer(args.ckpt_dir)
+        if args.resume and ckpt.latest_step() is not None:
+            step0, (params, opt_state) = ckpt.restore((params, opt_state))
+            print(f"resumed from step {step0}", flush=True)
+
+    train_step = jax.jit(
+        make_train_step(model, opt, accum=args.accum), donate_argnums=(0, 1)
+    )
+
+    # --- supervision ------------------------------------------------------------
+    monitor = HeartbeatMonitor(hosts, grace_s=60.0)
+    tracker = ProgressTracker()
+
+    t0 = time.time()
+    tokens_done = 0
+    for step in range(step0, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
+        if "vision_embeds" in batch:
+            batch["vision_embeds"] = batch["vision_embeds"].astype(jnp.bfloat16)
+        if "frames" in batch:
+            batch["frames"] = batch["frames"].astype(jnp.bfloat16)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        for h in hosts:
+            monitor.beat(h)
+        tokens_done += args.batch * args.seq
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            tps = tokens_done / max(time.time() - t0, 1e-6)
+            print(
+                f"step {step:5d} loss {loss:8.4f} gnorm {gn:7.3f} "
+                f"tok/s {tps:9.0f}",
+                flush=True,
+            )
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state))
+    if ckpt is not None:
+        ckpt.save(args.steps, (params, opt_state), blocking=True)
+    print("done.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

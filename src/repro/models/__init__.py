@@ -1,0 +1,13 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from .model import Model, build_model
+from .params import P, abstract_params, count_params, init_params, param_axes
+
+__all__ = [
+    "Model",
+    "P",
+    "abstract_params",
+    "build_model",
+    "count_params",
+    "init_params",
+    "param_axes",
+]

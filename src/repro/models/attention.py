@@ -1,0 +1,194 @@
+"""GQA attention: full (train/prefill), decode-with-cache, and cross-attn.
+
+Pure-jnp implementation (the XLA path used by the dry-run — it exposes real
+FLOPs/bytes to ``cost_analysis``).  ``cfg.attn_impl == "pallas"`` routes the
+full-sequence path through the fused Pallas kernel (TPU) instead; the two
+are assert-allclose'd against each other in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, rms_norm
+from .params import P
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "w_q": P((d, nq, hd), ("d_model", "heads", "head_dim")),
+        "w_k": P((d, nkv, hd), ("d_model", "kv_heads", "head_dim")),
+        "w_v": P((d, nkv, hd), ("d_model", "kv_heads", "head_dim")),
+        "w_o": P((nq, hd, d), ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = P((hd,), ("head_dim",), "ones")
+        defs["k_norm"] = P((hd,), ("head_dim",), "ones")
+    return defs
+
+
+def _qk_normalize(p: dict, q: jax.Array, k: jax.Array, cfg: ModelConfig):
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def _gqa_scores_out(
+    q: jax.Array,          # [B, Sq, nq, hd]
+    k: jax.Array,          # [B, Sk, nkv, hd]
+    v: jax.Array,          # [B, Sk, nkv, hd]
+    mask: Optional[jax.Array],  # broadcastable to [B, 1, 1, Sq, Sk] or None
+) -> jax.Array:
+    b, sq, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // max(nkv, 1)
+    qg = q.reshape(b, sq, nkv, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, nq, hd)
+
+
+def _chunked_attention(
+    q: jax.Array,          # [B, Sq, nq, hd]
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool,
+    chunk: int,
+) -> jax.Array:
+    """XLA-path attention scanning over query chunks so the materialized
+    score block is [B, nkv, g, chunk, Sk] instead of O(Sq·Sk) — this is what
+    makes the 32k-prefill and 4k-train cells fit HBM without the Pallas
+    kernel (which replaces this entirely on real TPUs)."""
+    b, sq, nq, hd = q.shape
+    sk = k.shape[1]
+    cq = chunk
+    while cq > 0 and sq % cq:
+        cq //= 2
+    if cq <= 0 or cq >= sq:
+        mask = causal_mask(sq, sk) if causal else None
+        return _gqa_scores_out(q, k, v, mask)
+    nc = sq // cq
+    qc = jnp.moveaxis(q.reshape(b, nc, cq, nq, hd), 1, 0)   # [nc, B, cq, nq, hd]
+
+    def body(_, inp):
+        i, qi = inp
+        if causal:
+            qpos = i * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, sk), 0)
+            kpos = jax.lax.broadcasted_iota(jnp.int32, (cq, sk), 1)
+            mask = (kpos <= qpos)[None, None, None]
+        else:
+            mask = None
+        return None, _gqa_scores_out(qi, k, v, mask)
+
+    with jax.named_scope("scan_qchunk"):
+        _, out = jax.lax.scan(body, None, (jnp.arange(nc), qc))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, nq, hd)
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0) -> jax.Array:
+    """[1,1,1,Sq,Sk] True where attendable; query i sees keys ≤ i+offset."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    return (ki <= qi + offset)[None, None, None]
+
+
+def full_attention(
+    p: dict,
+    x: jax.Array,                       # [B, S, d]
+    cfg: ModelConfig,
+    rope: Optional[Tuple[jax.Array, jax.Array]],
+    causal: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Self-attention over the whole sequence → (out, (k, v) for caching).
+
+    Sharding: the residual stream arrives sequence-sharded over ``model``;
+    q/k/v are constrained to *head*-sharding so XLA lowers a cheap
+    all-to-all (seq→heads) and the whole softmax runs local per head —
+    without this the chunked score loop re-gathers K/V every iteration
+    (§Perf iteration 1).  kv_heads that don't divide the axis stay
+    replicated (free: they're the small tensors).
+    """
+    from ..distributed.actctx import constrain
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["w_k"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["w_v"])
+    q = constrain(q, ("batch", None, "heads", None), require_axis="heads")
+    k = constrain(k, ("batch", None, "kv_heads", None), require_axis="heads")
+    v = constrain(v, ("batch", None, "kv_heads", None), require_axis="heads")
+    q, k = _qk_normalize(p, q, k, cfg)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if cfg.attn_impl == "pallas" and causal:
+        from ..kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=True)
+    else:
+        out = _chunked_attention(q, k, v, causal, cfg.attn_chunk)
+    out = constrain(out, ("batch", None, "heads", None), require_axis="heads")
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["w_o"])
+    # contraction over model-sharded heads → partial sums; constraining the
+    # result back to seq-sharding lets GSPMD emit a reduce-scatter instead
+    # of all-reduce + slice (halves the o-proj wire bytes).
+    y = constrain(y, ("batch", "seq", None))
+    return y, (k, v)
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,                       # [B, 1, d]
+    cfg: ModelConfig,
+    rope: Optional[Tuple[jax.Array, jax.Array]],
+    k_cache: jax.Array,                 # [B, S_max, nkv, hd]
+    v_cache: jax.Array,
+    pos: jax.Array,                     # scalar int32 — next position to write
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: write k/v at ``pos``, attend over positions ≤ pos."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["w_k"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["w_v"])
+    q, k = _qk_normalize(p, q, k, cfg)
+    if rope is not None:
+        cos, sin = rope                 # tables for position `pos`: [1, hd/2]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+    s_max = k_cache.shape[1]
+    ki = jax.lax.broadcasted_iota(jnp.int32, (1, s_max), 1)
+    mask = (ki <= pos)[None, None, None, :, :].reshape(1, 1, 1, 1, s_max)
+    out = _gqa_scores_out(q, k_cache, v_cache, mask)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["w_o"])
+    return y, k_cache, v_cache
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,                       # [B, Sq, d]
+    k: jax.Array,                       # [B, Sk, nkv, hd] (precomputed enc K)
+    v: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"])
+    out = _gqa_scores_out(q, k, v, None)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["w_o"])
+
+
+def cross_kv(p: dict, enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dnh->bsnh", enc, p["w_k"])
+    v = jnp.einsum("bsd,dnh->bsnh", enc, p["w_v"])
+    return k, v

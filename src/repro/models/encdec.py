@@ -1,0 +1,181 @@
+"""Whisper-style encoder-decoder.
+
+Encoder: bidirectional self-attention over precomputed frame embeddings
+(the conv/log-mel frontend is a stub per the assignment — ``input_specs``
+feeds ``[B, enc_seq, d_model]``).  Decoder: causal self-attention +
+cross-attention + MLP.  Positions are sinusoidal, added at the embedding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.actctx import constrain
+from .attention import (
+    attn_defs,
+    cross_attention,
+    cross_kv,
+    decode_attention,
+    full_attention,
+)
+from .layers import mlp_block, mlp_defs, rms_norm, sinusoidal_positions
+from .params import P, Tree
+from .transformer import _attn_cache_defs, _stack
+
+
+def encdec_defs(cfg: ModelConfig) -> Tree:
+    d, v = cfg.d_model, cfg.vocab_size
+    enc_layer = {
+        "ln1": P((d,), ("d_model",), "ones"),
+        "attn": attn_defs(cfg),
+        "ln2": P((d,), ("d_model",), "ones"),
+        "mlp": mlp_defs(cfg),
+    }
+    dec_layer = {
+        "ln1": P((d,), ("d_model",), "ones"),
+        "attn": attn_defs(cfg),
+        "ln_x": P((d,), ("d_model",), "ones"),
+        "xattn": attn_defs(cfg, cross=True),
+        "ln2": P((d,), ("d_model",), "ones"),
+        "mlp": mlp_defs(cfg),
+    }
+    return {
+        "embed": P((v, d), ("vocab", "d_model")),
+        "enc_in": P((d, d), ("d_model", None)),  # frame-embedding adapter stub
+        "encoder": _stack(enc_layer, cfg.n_enc_layers),
+        "ln_enc": P((d,), ("d_model",), "ones"),
+        "decoder": _stack(dec_layer, cfg.n_layers),
+        "ln_f": P((d,), ("d_model",), "ones"),
+        "lm_head": P((d, v), ("d_model", "vocab")),
+    }
+
+
+def encode(params: Tree, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames [B, enc_seq, d] → encoder output [B, enc_seq, d]."""
+    pos = sinusoidal_positions(jnp.arange(frames.shape[1]), cfg.d_model)
+    x = jnp.einsum("bsd,de->bse", frames, params["enc_in"])
+    x = (x + pos[None].astype(x.dtype)).astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(xc, lp):
+        xc = constrain(xc, ("batch", "seq", None))
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        y, _ = full_attention(lp["attn"], h, cfg, rope=None, causal=False)
+        xc = xc + y
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + mlp_block(lp["mlp"], h, cfg)
+        return xc, None
+
+    if not cfg.scan_layers:
+        for li in range(cfg.n_enc_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[li], params["encoder"])
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = fn(x, lp)
+        return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    with jax.named_scope("scan_layers"):
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_full(
+    params: Tree,
+    tokens: jax.Array,          # [B, S]
+    enc_out: jax.Array,         # [B, enc_seq, d]
+    cfg: ModelConfig,
+    collect_state: bool = False,
+):
+    """Teacher-forced decoder pass → (logits [B,S,V], states | None)."""
+    s = tokens.shape[1]
+    pos = sinusoidal_positions(jnp.arange(s), cfg.d_model)
+    x = params["embed"][tokens] + pos[None].astype(params["embed"].dtype)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(xc, lp):
+        xc = constrain(xc, ("batch", "seq", None))
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        y, (k, v) = full_attention(lp["attn"], h, cfg, rope=None, causal=True)
+        xc = xc + y
+        h = rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+        ek, ev = cross_kv(lp["xattn"], enc_out)
+        xc = xc + cross_attention(lp["xattn"], h, ek, ev, cfg)
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + mlp_block(lp["mlp"], h, cfg)
+        st = {"k": k, "v": v, "ek": ek, "ev": ev} if collect_state else None
+        return xc, st
+
+    if not cfg.scan_layers:
+        sts = []
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[li], params["decoder"])
+            fn = jax.checkpoint(body) if (cfg.remat and not collect_state) else body
+            x, st = fn(x, lp)
+            sts.append(st)
+        states = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sts)
+            if collect_state else None
+        )
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+        return logits, states
+    if cfg.remat and not collect_state:
+        body = jax.checkpoint(body)
+    with jax.named_scope("scan_layers"):
+        x, states = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, states
+
+
+def decode_step(
+    params: Tree,
+    token: jax.Array,           # [B, 1]
+    pos_id: jax.Array,          # scalar int32
+    caches: Dict[str, jax.Array],
+    cfg: ModelConfig,
+):
+    """Single-token decode with self-KV + precomputed cross-KV caches."""
+    pos = sinusoidal_positions(pos_id[None], cfg.d_model)     # [1, d]
+    x = params["embed"][token] + pos[None].astype(params["embed"].dtype)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(xc, scanned):
+        lp, cc = scanned
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        y, k_c, v_c = decode_attention(
+            lp["attn"], h, cfg, None, cc["k"], cc["v"], pos_id
+        )
+        xc = xc + y
+        h = rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+        xc = xc + cross_attention(lp["xattn"], h, cc["ek"], cc["ev"], cfg)
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + mlp_block(lp["mlp"], h, cfg)
+        return xc, {**cc, "k": k_c, "v": v_c}
+
+    if not cfg.scan_layers:
+        ncs = []
+        for li in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[li], params["decoder"])
+            cc = jax.tree_util.tree_map(lambda a: a[li], caches)
+            x, nc = body(x, (lp, cc))
+            ncs.append(nc)
+        new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+    else:
+        with jax.named_scope("scan_layers"):
+            x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def encdec_cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> Tree:
+    hd = cfg.resolved_head_dim
+    one = dict(_attn_cache_defs(cfg, batch, s_max))
+    one["ek"] = P((batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+                  ("batch", None, "kv_heads", "head_dim"), "zeros")
+    one["ev"] = P((batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+                  ("batch", None, "kv_heads", "head_dim"), "zeros")
+    return _stack(one, cfg.n_layers)

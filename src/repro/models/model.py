@@ -1,0 +1,200 @@
+"""Unified model API over every assigned family.
+
+``Model(cfg)`` exposes pure functions:
+
+* ``defs()`` / ``init(key)`` / ``abstract()`` — parameter declaration
+* ``loss(params, batch)``       — next-token CE (+ MoE aux), f32
+* ``prefill(params, batch, s_max)`` — full pass → (last logits, caches)
+* ``decode(params, token, pos, caches)`` — one-token step
+* ``cache_defs(batch, s_max)``  — decode-state declaration (for sharding)
+
+Batch keys by family: ``tokens`` (all LM), ``vision_embeds`` (vlm stub),
+``frames`` (audio stub), optional ``loss_mask``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.actctx import constrain
+from . import encdec as ed
+from .layers import rms_norm, rope_tables
+from .params import Tree, abstract_params, init_params, param_axes
+from .transformer import (
+    apply_stack_decode,
+    apply_stack_full,
+    cache_defs as tf_cache_defs,
+    model_defs,
+)
+
+
+def _cache_init_dtype(cfg: ModelConfig, leaf_name: str) -> jnp.dtype:
+    return jnp.float32 if leaf_name == "h" else jnp.dtype(cfg.compute_dtype)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -----------------------------------------------------------
+    def defs(self) -> Tree:
+        if self.cfg.family == "encdec":
+            return ed.encdec_defs(self.cfg)
+        return model_defs(self.cfg)
+
+    def init(self, key: jax.Array) -> Tree:
+        return init_params(self.defs(), key, jnp.dtype(self.cfg.param_dtype))
+
+    def abstract(self) -> Tree:
+        return abstract_params(self.defs(), jnp.dtype(self.cfg.param_dtype))
+
+    def axes(self) -> Tree:
+        return param_axes(self.defs())
+
+    # -- embedding / head -------------------------------------------------------
+    def _embed(self, params: Tree, tokens: jax.Array) -> jax.Array:
+        x = params["embed"][tokens]
+        return x.astype(jnp.dtype(self.cfg.compute_dtype))
+
+    def _head(self, params: Tree, x: jax.Array) -> jax.Array:
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        return constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+    def _rope(self, positions: jax.Array):
+        if not self.cfg.use_rope or self.cfg.n_heads == 0:
+            return None
+        return rope_tables(positions, self.cfg.resolved_head_dim, self.cfg.rope_theta)
+
+    def _assemble_input(self, params: Tree, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Token embeddings with modality-stub prefixes prepended."""
+        x = self._embed(params, batch["tokens"])
+        if self.cfg.family == "vlm":
+            vis = batch["vision_embeds"].astype(x.dtype)   # [B, n_vis, d]
+            x = jnp.concatenate([vis, x], axis=1)
+        return constrain(x, ("batch", "seq", None))
+
+    # -- training loss -----------------------------------------------------------
+    def loss(
+        self, params: Tree, batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = ed.encode(params, batch["frames"], cfg)
+            logits, _ = ed.decode_full(params, batch["tokens"], enc, cfg)
+            aux = jnp.zeros((), jnp.float32)
+            n_prefix = 0
+        else:
+            x = self._assemble_input(params, batch)
+            rope = self._rope(jnp.arange(x.shape[1]))
+            x, aux, _ = apply_stack_full(cfg, params["stack"], x, rope)
+            logits = self._head(params, x)
+            n_prefix = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+
+        tokens = batch["tokens"]
+        # predict token t+1 from position (n_prefix + t)
+        pred = logits[:, n_prefix : n_prefix + tokens.shape[1] - 1]
+        tgt = tokens[:, 1:]
+        logz = jax.nn.logsumexp(pred, axis=-1)
+        gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            ce = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+        else:
+            ce = nll.mean()
+        total = ce + cfg.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+    def cache_defs(self, batch: int, s_max: int) -> Tree:
+        if self.cfg.family == "encdec":
+            return ed.encdec_cache_defs(self.cfg, batch, s_max)
+        return tf_cache_defs(self.cfg, batch, s_max)
+
+    def init_caches(self, batch: int, s_max: int) -> Tree:
+        from .params import P, tree_map_defs
+
+        def mk(p: P):
+            name = p.axes[-1] if p.axes else None
+            dt = jnp.float32 if (p.shape and p.axes and "ssm_state" in p.axes) else jnp.dtype(
+                self.cfg.compute_dtype
+            )
+            return jnp.zeros(p.shape, dt)
+
+        return tree_map_defs(mk, self.cache_defs(batch, s_max))
+
+    def prefill(
+        self, params: Tree, batch: Dict[str, jax.Array], s_max: int
+    ) -> Tuple[jax.Array, Tree]:
+        """Full pass over the prompt → (logits at last position, caches)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = ed.encode(params, batch["frames"], cfg)
+            logits, states = ed.decode_full(
+                params, batch["tokens"], enc, cfg, collect_state=True
+            )
+            caches = self._pad_states(states, s_max)
+            return logits[:, -1], caches
+
+        x = self._assemble_input(params, batch)
+        rope = self._rope(jnp.arange(x.shape[1]))
+        x, _, states = apply_stack_full(
+            cfg, params["stack"], x, rope, collect_state=True
+        )
+        logits = self._head(params, x[:, -1:])[:, 0]
+        return logits, self._pad_states(states, s_max)
+
+    def _pad_states(self, states: Tree, s_max: int) -> Tree:
+        """Place prefill k/v (length S) into zero caches of length s_max."""
+
+        def pad(leaf_path, arr):
+            if leaf_path in ("k", "v"):
+                # [L, B, S, nkv, hd] → [L, B, s_max, nkv, hd]
+                pad_len = s_max - arr.shape[2]
+                if pad_len <= 0:
+                    return arr[:, :, :s_max]
+                zeros = jnp.zeros(
+                    arr.shape[:2] + (pad_len,) + arr.shape[3:], arr.dtype
+                )
+                return jnp.concatenate([arr, zeros], axis=2)
+            return arr
+
+        return _map_named(pad, states)
+
+    def decode(
+        self,
+        params: Tree,
+        token: jax.Array,            # [B, 1] int32
+        pos: jax.Array,              # scalar int32: position being written
+        caches: Tree,
+    ) -> Tuple[jax.Array, Tree]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return ed.decode_step(params, token, pos, caches, cfg)
+        x = self._embed(params, token)
+        rope = self._rope(pos[None]) if jnp.ndim(pos) == 0 else self._rope(pos)
+        x, new_caches = apply_stack_decode(
+            cfg, params["stack"], x, rope, caches, pos
+        )
+        logits = self._head(params, x)[:, 0]
+        return logits, new_caches
+
+
+def _map_named(fn, tree):
+    """tree_map passing the leaf's dict key (cache trees are dict-leaved)."""
+    if isinstance(tree, dict):
+        return {k: (_map_named(fn, v) if isinstance(v, dict) else fn(k, v)) for k, v in tree.items()}
+    return tree
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,263 @@
+"""Capacity-based top-k MoE with sort-based dispatch (GShard-style, static
+shapes, expert-parallel over the ``model`` mesh axis).
+
+Dispatch: flatten tokens, take top-k experts per token, argsort the expert
+ids, compute each entry's position within its expert (arange − segment
+start), drop entries beyond capacity ``C = ceil(T·k/E · capacity_factor)``,
+scatter into an ``[E, C, d]`` buffer, run per-expert MLPs as one batched
+einsum, and combine back with the router weights.  Dropped tokens fall
+through on the residual path (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import P
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": P((d, e), ("d_model", "experts")),
+    }
+    if cfg.mlp_kind == "swiglu":
+        defs.update(
+            w_gate=P((e, d, f), ("experts", "d_model", "d_ff")),
+            w_up=P((e, d, f), ("experts", "d_model", "d_ff")),
+            w_down=P((e, f, d), ("experts", "d_ff", "d_model")),
+        )
+    else:
+        defs.update(
+            w_in=P((e, d, f), ("experts", "d_model", "d_ff")),
+            w_out=P((e, f, d), ("experts", "d_ff", "d_model")),
+        )
+    return defs
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,d] → (y [B,S,d], aux_loss scalar).  Dispatch impl per
+    ``cfg.moe_impl``: "gather" (global sort/scatter — simple, but its
+    collectives cross the full token sharding) or "a2a" (shard_map
+    expert-parallel: local routing + bucketed all-to-alls along the
+    ``model`` axis — §Perf iteration 2)."""
+    if cfg.moe_impl == "a2a":
+        from ..distributed import actctx
+
+        ctx = actctx.active()
+        if ctx is not None and _a2a_applicable(cfg, ctx[0]):
+            return _moe_block_a2a(p, x, cfg, ctx[0], ctx[1])
+    return _moe_block_gather(p, x, cfg)
+
+
+def _a2a_applicable(cfg: ModelConfig, mesh) -> bool:
+    return "model" in mesh.shape and cfg.n_experts % mesh.shape["model"] == 0
+
+
+def _moe_block_gather(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # [T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )                                                         # renormalize
+
+    # Load-balancing auxiliary loss (Switch-style): E · Σ_e f_e · p̄_e.
+    me = probs.mean(axis=0)                                   # [E]
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap = capacity(cfg, t)
+    flat_e = gate_idx.reshape(-1)                             # [T*k]
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)                   # [E]
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)     # overflow slot
+
+    tok_idx = order // k                                      # source token
+    xs = xt[tok_idx]                                          # [T*k, d]
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].set(xs)
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(buf.dtype)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+    out_flat = out_buf.reshape(e * cap, d)
+    ys = jnp.where(keep[:, None], out_flat[jnp.clip(dest, 0, e * cap - 1)], 0.0)
+    w = gate_vals.reshape(-1)[order].astype(ys.dtype)         # [T*k]
+    y = jnp.zeros((t, d), ys.dtype).at[tok_idx].add(ys * w[:, None])
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# §Perf iteration 2 — expert-parallel dispatch via shard_map + all-to-all
+# ---------------------------------------------------------------------------
+
+def _shard_map():
+    try:
+        from jax import shard_map as sm          # jax ≥ 0.7 public API
+        return sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm
+
+
+def _moe_block_a2a(
+    p: dict, x: jax.Array, cfg: ModelConfig, mesh, rules
+) -> Tuple[jax.Array, jax.Array]:
+    """Bucketed expert-parallel dispatch.
+
+    Per device (inside shard_map): route the *local* tokens, bucket the
+    (token, choice) pairs by global expert with per-expert capacity
+    ``c_e = ceil(t_loc·k/E · cf)``, all-to-all the [E, c_e, d] buffer along
+    the ``model`` axis (each peer owns E/n contiguous experts), run the
+    local experts as one batched einsum, all-to-all back, combine with the
+    router weights.  Wire per device ≈ 2·t_loc·k·cf·d·2 B per layer — vs the
+    gather implementation whose scatter/gather collectives cross the full
+    global token sharding (the dominant term of the baseline roofline for
+    every MoE arch).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    shard_map = _shard_map()
+    n_model = mesh.shape["model"]
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = e // n_model
+
+    b, s, d = x.shape
+    dp = rules.get("batch", ("data",))
+    if isinstance(dp, list):
+        dp = dp[0]
+    dp = tuple(a for a in (dp if isinstance(dp, tuple) else (dp,)) if a in mesh.shape)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    seq_sharded = rules.get("seq") == "model" and s % n_model == 0
+    if b % dp_size:
+        dp = ()
+        dp_size = 1
+    x_spec = P(dp if dp else None, "model" if seq_sharded else None, None)
+
+    t_loc = (b // dp_size) * (s // (n_model if seq_sharded else 1))
+    c_e = max(4, -(-int(t_loc * k * cfg.capacity_factor) // e // 4) * 4)
+
+    # Parameter specs mirror PARAM_RULES (see distributed.sharding).
+    router_spec = P("data", "model")
+    w_in_spec = P("model", "data", None)     # [E, d, f]
+    w_out_spec = P("model", None, "data")    # [E, f, d]
+    swiglu = cfg.mlp_kind == "swiglu"
+
+    def body(x_loc, router_loc, *weights):
+        bl, sl, _ = x_loc.shape
+        t = bl * sl
+        xt = x_loc.reshape(t, d)
+        router = jax.lax.all_gather(router_loc, "data", axis=0, tiled=True)
+        router = jax.lax.all_gather(router, "model", axis=1, tiled=True)
+
+        logits = jnp.einsum("td,de->te", xt, router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # Load-balance aux over the *global* token population.
+        axes = dp + ("model",) if seq_sharded else dp
+        me_sum = probs.sum(axis=0)
+        ce_sum = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32).sum(axis=0)
+        n_tok = jnp.float32(t)
+        if axes:
+            me_sum = jax.lax.psum(me_sum, axes)
+            ce_sum = jax.lax.psum(ce_sum, axes)
+            n_tok = jax.lax.psum(n_tok, axes)
+        aux = e * jnp.sum((me_sum / n_tok) * (ce_sum / n_tok))
+
+        # Local bucketing by global expert (stable sort + capacity drop).
+        flat_e = gate_idx.reshape(-1)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+        )
+        pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+        keep = pos < c_e
+        dest = jnp.where(keep, sorted_e * c_e + pos, e * c_e)
+        tok_idx = order // k
+        xbuf = jnp.zeros((e * c_e + 1, d), xt.dtype).at[dest].set(xt[tok_idx])
+        payload = xbuf[: e * c_e].reshape(n_model, e_loc * c_e, d)
+
+        recv = jax.lax.all_to_all(payload, "model", split_axis=0, concat_axis=0,
+                                  tiled=False)
+        # [n_model, e_loc*c_e, d] → [e_loc, n_model*c_e, d]
+        toks = (
+            recv.reshape(n_model, e_loc, c_e, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(e_loc, n_model * c_e, d)
+        )
+
+        if swiglu:
+            wg, wu, wd = weights
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+            g = jnp.einsum("ecd,edf->ecf", toks, wg)
+            u = jnp.einsum("ecd,edf->ecf", toks, wu)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(toks.dtype) * u
+            out = jnp.einsum("ecf,efd->ecd", h, wd)
+        else:
+            wi, wo = weights
+            wi = jax.lax.all_gather(wi, "data", axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+            h = jnp.einsum("ecd,edf->ecf", toks, wi)
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(toks.dtype)
+            out = jnp.einsum("ecf,efd->ecd", h, wo)
+
+        back = (
+            out.reshape(e_loc, n_model, c_e, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(n_model, e_loc * c_e, d)
+        )
+        outbuf = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0,
+                                    tiled=False).reshape(e * c_e, d)
+        ys = jnp.where(keep[:, None], outbuf[jnp.clip(dest, 0, e * c_e - 1)], 0.0)
+        w = gate_vals.reshape(-1)[order].astype(ys.dtype)
+        y = jnp.zeros((t, d), ys.dtype).at[tok_idx].add(ys * w[:, None])
+        return y.reshape(bl, sl, d), aux
+
+    weights = (
+        (p["w_gate"], p["w_up"], p["w_down"]) if swiglu else (p["w_in"], p["w_out"])
+    )
+    w_specs = (
+        (w_in_spec, w_in_spec, w_out_spec) if swiglu else (w_in_spec, w_out_spec)
+    )
+    y, aux = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, router_spec) + w_specs,
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], *weights)
+    return y, aux

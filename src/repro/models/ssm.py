@@ -1,0 +1,143 @@
+"""Mamba1 selective-SSM block (falcon-mamba, jamba's mamba layers).
+
+Recurrence (per channel c, state dim n):
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + (Δ_t x_t) B_t
+    y_t = C_t · h_t + D x_t
+with Δ = softplus(x W_dt W_dtproj + b), (B, C) = x W_bc, gated by silu(z)
+and preceded by a depthwise causal conv (width ``ssm_conv``).
+
+The XLA path scans over time with an O(B·d_inner·N) carry — memory-light and
+compile-friendly at 524 288 tokens.  ``cfg.ssm_impl == "pallas"`` uses the
+chunked TPU kernel in ``repro.kernels.mamba_scan`` for the full-sequence
+path instead.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import P
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, d_in = cfg.d_model, cfg.d_inner
+    n, r, k = cfg.ssm_state, cfg.resolved_dt_rank, cfg.ssm_conv
+    return {
+        "w_in_x": P((d, d_in), ("d_model", "d_inner")),
+        "w_in_z": P((d, d_in), ("d_model", "d_inner")),
+        "conv_w": P((d_in, k), ("d_inner", "conv")),
+        "conv_b": P((d_in,), ("d_inner",), "zeros"),
+        "w_dt": P((d_in, r), ("d_inner", "dt_rank")),
+        "dt_proj": P((r, d_in), ("dt_rank", "d_inner")),
+        "dt_bias": P((d_in,), ("d_inner",), "zeros"),
+        "w_b": P((d_in, n), ("d_inner", "ssm_state")),
+        "w_c": P((d_in, n), ("d_inner", "ssm_state")),
+        "a_log": P((d_in, n), ("d_inner", "ssm_state"), "mamba_a"),
+        "d_skip": P((d_in,), ("d_inner",), "ones"),
+        "w_out": P((d_in, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x [B,S,d_in], w [d_in,k] → causal depthwise conv, same length."""
+    k = w.shape[-1]
+    xt = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))          # left pad
+    out = jax.lax.conv_general_dilated(
+        xt,
+        w[:, None, :],                                       # [d_in, 1, k]
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "OIH", "NHC"),
+        feature_group_count=w.shape[0],
+    )
+    return out + b
+
+
+def _ssm_inputs(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Shared pre-scan projections: returns (xc, dt, B, C) with silu applied."""
+    xc = jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(
+        (jnp.einsum("...i,ir->...r", xc, p["w_dt"]) @ p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                        # [..., d_in] f32
+    b_mat = jnp.einsum("...i,in->...n", xc, p["w_b"]).astype(jnp.float32)
+    c_mat = jnp.einsum("...i,in->...n", xc, p["w_c"]).astype(jnp.float32)
+    return xc, dt, b_mat, c_mat
+
+
+def mamba_block(
+    p: dict, x: jax.Array, cfg: ModelConfig, return_state: bool = False
+):
+    """Full-sequence forward: x [B,S,d] → [B,S,d] (+ final (conv, h) state).
+
+    The returned state slots straight into :func:`mamba_decode` so prefill →
+    decode hand-off is exact.
+    """
+    xp_raw = jnp.einsum("bsd,di->bsi", x, p["w_in_x"])
+    z = jnp.einsum("bsd,di->bsi", x, p["w_in_z"])
+    xp = _causal_depthwise_conv(xp_raw, p["conv_w"], p["conv_b"])
+    xc, dt, b_mat, c_mat = _ssm_inputs(p, xp, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # [d_in, N]
+
+    bsz, d_in = xc.shape[0], xc.shape[-1]
+    h0 = jnp.zeros((bsz, d_in, cfg.ssm_state), jnp.float32)
+    if cfg.ssm_impl == "pallas" and not return_state:
+        from ..kernels import ops as kops
+
+        y = kops.mamba_scan(xc.astype(jnp.float32), dt, a, b_mat, c_mat)
+        h_final = h0  # not used
+    else:
+        def step(h, inp):
+            xt, dtt, bt, ct = inp                             # [B,d_in] [B,d_in] [B,N] [B,N]
+            da = jnp.exp(dtt[..., None] * a)                  # [B,d_in,N]
+            h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bin,bn->bi", h, ct)
+            return h, y
+
+        xs = (
+            jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(b_mat, 1, 0),
+            jnp.moveaxis(c_mat, 1, 0),
+        )
+        with jax.named_scope("scan_time"):
+            h_final, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)                            # [B,S,d_in]
+
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    if not return_state:
+        return out
+    k = cfg.ssm_conv
+    conv_state = xp_raw[:, -(k - 1):, :].astype(jnp.dtype(cfg.compute_dtype))
+    return out, {"conv": conv_state, "h": h_final}
+
+
+def mamba_decode(
+    p: dict,
+    x: jax.Array,                      # [B, 1, d]
+    cfg: ModelConfig,
+    conv_state: jax.Array,             # [B, k-1, d_in] — last k-1 conv inputs
+    h: jax.Array,                      # [B, d_in, N] f32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token state update — O(1) in sequence length."""
+    xp = jnp.einsum("bsd,di->bsi", x, p["w_in_x"])            # [B,1,d_in]
+    z = jnp.einsum("bsd,di->bsi", x, p["w_in_z"])
+    window = jnp.concatenate([conv_state, xp], axis=1)        # [B,k,d_in]
+    new_conv_state = window[:, 1:]
+    xconv = jnp.einsum("bki,ik->bi", window, p["conv_w"]) + p["conv_b"]
+    xconv = xconv[:, None, :]                                  # [B,1,d_in]
+    xc, dt, b_mat, c_mat = _ssm_inputs(p, xconv, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dtt, xt = dt[:, 0], xc[:, 0].astype(jnp.float32)           # [B,d_in]
+    bt, ct = b_mat[:, 0], c_mat[:, 0]                          # [B,N]
+    da = jnp.exp(dtt[..., None] * a)
+    h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, ct) + p["d_skip"].astype(jnp.float32) * xt
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"])[:, None, :]
+    return out, new_conv_state, h

@@ -1,0 +1,372 @@
+"""Decoder-only stacks: dense / MoE / SSM / hybrid (+ VLM prepend).
+
+The stack is declared per repeating unit and scanned (``lax.scan``) so HLO
+depth is O(1) in layer count — an 88-layer 123 B model lowers to the same
+program size as a 2-layer smoke config.  Hybrid (jamba) scans over
+*periods*: the 8-slot pattern (attention at slot 4, MoE on odd slots) is
+unrolled inside the scan body with per-slot stacked params.
+
+Decode state is a pytree of per-layer caches stacked on the scan axis; the
+decode step scans over layers with the cache as both xs and ys.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.actctx import constrain
+from .attention import attn_defs, decode_attention, full_attention
+from .layers import mlp_block, mlp_defs, rms_norm, rope_tables
+from .moe import moe_block, moe_defs
+from .params import P, Tree, tree_map_defs
+from .ssm import mamba_block, mamba_decode, mamba_defs
+
+Cache = Any
+
+
+# ---------------------------------------------------------------------------
+# Definitions
+# ---------------------------------------------------------------------------
+
+def _slot_kind(cfg: ModelConfig, layer: int) -> Tuple[str, str]:
+    """(mixer, ffn) kind for absolute layer index."""
+    mixer = "attn" if cfg.is_attn_layer(layer) else "mamba"
+    if cfg.d_ff == 0:
+        ffn = "none"
+    elif cfg.is_moe_layer(layer):
+        ffn = "moe"
+    else:
+        ffn = "mlp"
+    return mixer, ffn
+
+
+def _one_layer_defs(cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    d = cfg.d_model
+    defs: dict = {"ln1": P((d,), ("d_model",), "ones")}
+    defs[mixer] = attn_defs(cfg) if mixer == "attn" else mamba_defs(cfg)
+    if ffn != "none":
+        defs["ln2"] = P((d,), ("d_model",), "ones")
+        defs[ffn] = mlp_defs(cfg) if ffn == "mlp" else moe_defs(cfg)
+    return defs
+
+
+def _stack(defs: Tree, n: int, axis: str = "layers") -> Tree:
+    return tree_map_defs(
+        lambda p: P((n,) + p.shape, (axis,) + p.axes, p.init, p.stddev), defs
+    )
+
+
+def stack_defs(cfg: ModelConfig) -> Tree:
+    """Layer-stack parameter declaration (see module docstring)."""
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        period = {}
+        for s in range(cfg.attn_period):
+            mixer, ffn = _slot_kind(cfg, s)
+            period[f"slot{s}"] = _one_layer_defs(cfg, mixer, ffn)
+        return _stack(period, n_periods, "period")
+    mixer, ffn = _slot_kind(cfg, 0)
+    return _stack(_one_layer_defs(cfg, mixer, ffn), cfg.n_layers)
+
+
+def model_defs(cfg: ModelConfig) -> Tree:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Tree = {
+        "embed": P((v, d), ("vocab", "d_model")),
+        "stack": stack_defs(cfg),
+        "ln_f": P((d,), ("d_model",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = P((d, v), ("d_model", "vocab"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Layer application (single layer, given its params)
+# ---------------------------------------------------------------------------
+
+def _apply_layer_full(
+    lp: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rope,
+    mixer: str,
+    ffn: str,
+    collect_state: bool,
+):
+    """→ (x, aux, state) where state is the layer's cache contribution:
+    attn: {"k","v"} over the S positions seen; mamba: {"conv","h"} final."""
+    state = None
+    x = constrain(x, ("batch", "seq", None))
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    # §Perf it.5 (Megatron blocks): gather the *normed bf16* activation once
+    # per block — otherwise GSPMD gathers the f32 pre-norm tensor at every
+    # projection einsum (4× the wire bytes, several times per layer).
+    h = constrain(h, ("batch", None, None), only_if="megatron_blocks")
+    if mixer == "attn":
+        y, (k, v) = full_attention(lp["attn"], h, cfg, rope, causal=True)
+        if collect_state:
+            state = {"k": k, "v": v}
+    else:
+        if collect_state:
+            y, state = mamba_block(lp["mamba"], h, cfg, return_state=True)
+        else:
+            y = mamba_block(lp["mamba"], h, cfg)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe_block(lp["moe"], h, cfg)
+        else:
+            h = constrain(h, ("batch", None, None), only_if="megatron_blocks")
+            y = mlp_block(lp["mlp"], h, cfg)
+        x = x + y
+    return x, aux, state
+
+
+def _apply_layer_decode(
+    lp: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rope,
+    mixer: str,
+    ffn: str,
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,
+):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if mixer == "attn":
+        y, k_c, v_c = decode_attention(
+            lp["attn"], h, cfg, rope, cache["k"], cache["v"], pos
+        )
+        new_cache["k"], new_cache["v"] = k_c, v_c
+    else:
+        y, conv_c, h_c = mamba_decode(lp["mamba"], h, cfg, cache["conv"], cache["h"])
+        new_cache["conv"], new_cache["h"] = conv_c, h_c
+    x = x + y
+    if ffn != "none":
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = moe_block(lp["moe"], h, cfg)
+        else:
+            y = mlp_block(lp["mlp"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def apply_stack_full(
+    cfg: ModelConfig,
+    stack: Tree,
+    x: jax.Array,
+    rope,
+    collect_state: bool = False,
+):
+    """Full-sequence pass → (x, aux_loss, states_stacked | None)."""
+    if not cfg.scan_layers:
+        return _apply_stack_full_unrolled(cfg, stack, x, rope, collect_state)
+
+    if cfg.family == "hybrid":
+        def body(carry, pp):
+            xc, aux = carry
+            states = {}
+            for s in range(cfg.attn_period):
+                mixer, ffn = _slot_kind(cfg, s)
+                xc, a, st = _apply_layer_full(
+                    pp[f"slot{s}"], xc, cfg, rope, mixer, ffn, collect_state
+                )
+                aux = aux + a
+                if collect_state:
+                    states[f"slot{s}"] = st
+            return (xc, aux), (states if collect_state else None)
+
+        if cfg.remat and not collect_state:
+            body = jax.checkpoint(body)
+        with jax.named_scope("scan_layers"):
+            (x, aux), states = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), stack
+            )
+        return x, aux, states
+
+    mixer, ffn = _slot_kind(cfg, 0)
+
+    def body(carry, lp):
+        xc, aux = carry
+        xc, a, st = _apply_layer_full(lp, xc, cfg, rope, mixer, ffn, collect_state)
+        return (xc, aux + a), st
+
+    if cfg.remat and not collect_state:
+        body = jax.checkpoint(body)
+    with jax.named_scope("scan_layers"):
+        (x, aux), states = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+    return x, aux, states
+
+
+def _index_tree(tree: Tree, i: int) -> Tree:
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _apply_stack_full_unrolled(cfg, stack, x, rope, collect_state):
+    """Python-loop layer application (``scan_layers=False``) — used by the
+    roofline's FLOP-accounting artifact so every layer's ops appear in the
+    HLO exactly once (HLO cost analysis does not multiply loop trip counts).
+    Remat is applied per layer so the accounting includes recompute waste,
+    matching the scanned training artifact."""
+    aux = jnp.zeros((), jnp.float32)
+    states = []
+
+    def run_layer(lp, x, mixer, ffn):
+        fn = lambda lp, x: _apply_layer_full(
+            lp, x, cfg, rope, mixer, ffn, collect_state
+        )
+        if cfg.remat and not collect_state:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x)
+
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        for pi in range(n_periods):
+            pp = _index_tree(stack, pi)
+            st_p = {}
+            for s in range(cfg.attn_period):
+                mixer, ffn = _slot_kind(cfg, s)
+                x, a, st = run_layer(pp[f"slot{s}"], x, mixer, ffn)
+                aux = aux + a
+                st_p[f"slot{s}"] = st
+            states.append(st_p)
+    else:
+        mixer, ffn = _slot_kind(cfg, 0)
+        for li in range(cfg.n_layers):
+            x, a, st = run_layer(_index_tree(stack, li), x, mixer, ffn)
+            aux = aux + a
+            states.append(st)
+    if not collect_state:
+        return x, aux, None
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    return x, aux, stacked
+
+
+def apply_stack_decode(
+    cfg: ModelConfig,
+    stack: Tree,
+    x: jax.Array,
+    rope,
+    caches: Cache,
+    pos: jax.Array,
+):
+    """One-token pass threading caches → (x, new_caches)."""
+    if not cfg.scan_layers:
+        return _apply_stack_decode_unrolled(cfg, stack, x, rope, caches, pos)
+
+    if cfg.family == "hybrid":
+        def body(xc, scanned):
+            pp, cc = scanned
+            new_cc = {}
+            for s in range(cfg.attn_period):
+                mixer, ffn = _slot_kind(cfg, s)
+                xc, nc = _apply_layer_decode(
+                    pp[f"slot{s}"], xc, cfg, rope, mixer, ffn, cc[f"slot{s}"], pos
+                )
+                new_cc[f"slot{s}"] = nc
+            return xc, new_cc
+
+        with jax.named_scope("scan_layers"):
+            x, new_caches = jax.lax.scan(body, x, (stack, caches))
+        return x, new_caches
+
+    mixer, ffn = _slot_kind(cfg, 0)
+
+    def body(xc, scanned):
+        lp, cc = scanned
+        xc, nc = _apply_layer_decode(lp, xc, cfg, rope, mixer, ffn, cc, pos)
+        return xc, nc
+
+    with jax.named_scope("scan_layers"):
+        x, new_caches = jax.lax.scan(body, x, (stack, caches))
+    return x, new_caches
+
+
+def _apply_stack_decode_unrolled(cfg, stack, x, rope, caches, pos):
+    new_states = []
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        for pi in range(n_periods):
+            pp = _index_tree(stack, pi)
+            cc = _index_tree(caches, pi)
+            new_cc = {}
+            for s in range(cfg.attn_period):
+                mixer, ffn = _slot_kind(cfg, s)
+                x, nc = _apply_layer_decode(
+                    pp[f"slot{s}"], x, cfg, rope, mixer, ffn, cc[f"slot{s}"], pos
+                )
+                new_cc[f"slot{s}"] = nc
+            new_states.append(new_cc)
+    else:
+        mixer, ffn = _slot_kind(cfg, 0)
+        for li in range(cfg.n_layers):
+            x, nc = _apply_layer_decode(
+                _index_tree(stack, li), x, cfg, rope, mixer, ffn,
+                _index_tree(caches, li), pos,
+            )
+            new_states.append(nc)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_states)
+    return x, stacked
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> Dict[str, P]:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": P((batch, s_max, cfg.n_kv_heads, hd),
+               ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+        "v": P((batch, s_max, cfg.n_kv_heads, hd),
+               ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+    }
+
+
+def _mamba_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, P]:
+    return {
+        "conv": P((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                  ("batch", None, "d_inner"), "zeros"),
+        "h": P((batch, cfg.d_inner, cfg.ssm_state),
+               ("batch", "d_inner", "ssm_state"), "zeros"),
+    }
+
+
+def cache_defs(cfg: ModelConfig, batch: int, s_max: int) -> Tree:
+    """Declaration of the decode cache pytree (P descriptors, f32 states)."""
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        period = {}
+        for s in range(cfg.attn_period):
+            mixer, _ = _slot_kind(cfg, s)
+            period[f"slot{s}"] = (
+                _attn_cache_defs(cfg, batch, s_max)
+                if mixer == "attn"
+                else _mamba_cache_defs(cfg, batch)
+            )
+        return _stack(period, n_periods, "period")
+    mixer, _ = _slot_kind(cfg, 0)
+    one = (
+        _attn_cache_defs(cfg, batch, s_max)
+        if mixer == "attn"
+        else _mamba_cache_defs(cfg, batch)
+    )
+    return _stack(one, cfg.n_layers)
+
+
+def cache_dtype(cfg: ModelConfig, path_leaf: str) -> jnp.dtype:
+    # mamba ssm state `h` carries f32; kv and conv window follow compute dtype.
+    return jnp.float32 if path_leaf == "h" else jnp.dtype(cfg.compute_dtype)

@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay, f32 state over bf16 params.
+
+Built from scratch (no optax dependency): ``init`` returns (m, v, count),
+``update`` consumes grads and returns new params + state.  Moments inherit
+the parameter sharding (same tree structure ⇒ same NamedSharding), so the
+optimizer adds 8 bytes/param *per shard* (ZeRO-style, since params are FSDP
+sharded on d_model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class AdamWState(NamedTuple):
+    m: Tree
+    v: Tree
+    count: jax.Array
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params: Tree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def _lr(self, count: jax.Array) -> jax.Array:
+        return self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(
+        self, grads: Tree, state: AdamWState, params: Tree
+    ) -> Tuple[Tree, AdamWState, jax.Array]:
+        """→ (new_params, new_state, global_grad_norm).
+
+        Clip scaling is folded into the per-leaf update (never materializes
+        a second full-precision gradient tree — at 123 B params that tree
+        is 1.9 GiB *per device*).
+        """
+        gnorm = global_norm(grads)
+        if self.grad_clip is not None:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            scale = jnp.float32(1.0)
+
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (step + self.weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamWState(new_m, new_v, count), gnorm
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

@@ -1,0 +1,132 @@
+"""Batched serving engine: continuous-batching decode loop on one replica.
+
+``ServeEngine`` owns params + a slot-based KV cache region: requests are
+admitted into free slots (prefill), every engine tick decodes one token for
+all active slots, finished requests free their slots.  Cluster-level
+dispatch across replicas is ``router.BassRouter`` — the paper's scheduler
+deciding *which replica* serves a request based on prefix locality, queue
+backlog and the bandwidth needed to migrate context.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import Model
+
+Tree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new: int
+    prefix_hash: int = 0             # locality key for the router
+    submitted_at: float = field(default_factory=time.monotonic)
+    tokens_out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: Tree,
+        slots: int,
+        s_max: int,
+        name: str = "replica0",
+    ):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.slots = slots
+        self.s_max = s_max
+        self.name = name
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self._free = list(range(slots))
+        self._caches = model.init_caches(slots, s_max)
+        self._pos = np.zeros(slots, dtype=np.int32)
+        self._decode = jax.jit(model.decode, donate_argnums=(3,))
+        self._prefill = jax.jit(
+            lambda p, b, s=s_max: model.prefill(p, b, s)
+        )
+
+    # -- queueing -------------------------------------------------------------
+    def backlog_seconds(self, per_token_s: float = 0.02) -> float:
+        """ΥI for the router: projected seconds to drain current work."""
+        remaining = sum(
+            r.max_new - len(r.tokens_out) for r in self.active.values()
+        )
+        return remaining * per_token_s
+
+    def has_capacity(self) -> bool:
+        return bool(self._free)
+
+    # -- admission --------------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        if not self._free:
+            return False
+        slot = self._free.pop(0)
+        # Single-sequence prefill into this slot's cache region.
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        if self.cfg.family == "vlm":
+            batch["vision_embeds"] = jnp.zeros(
+                (1, self.cfg.n_vision_tokens, self.cfg.d_model), jnp.bfloat16
+            )
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_seq, self.cfg.d_model), jnp.bfloat16
+            )
+        logits, caches1 = self._prefill(self.params, batch)
+        # Write the single-sequence cache into the slot of the batched cache.
+        self._caches = _write_slot(self._caches, caches1, slot)
+        first = int(jnp.argmax(logits[0]))
+        req.tokens_out.append(first)
+        n_prefix = self.cfg.n_vision_tokens if self.cfg.family == "vlm" else 0
+        self._pos[slot] = len(req.prompt) + n_prefix
+        self.active[slot] = req
+        return True
+
+    # -- decode tick --------------------------------------------------------------
+    def tick(self) -> List[Request]:
+        """One decode step for all active slots; → finished requests."""
+        if not self.active:
+            return []
+        tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.tokens_out[-1]
+        # Uniform position per step keeps the step jit-compiled once; slots
+        # with shorter contexts simply have masked-out upper positions.
+        pos = int(self._pos.max())
+        logits, self._caches = self._decode(
+            self.params, jnp.asarray(tokens), jnp.int32(pos), self._caches
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.tokens_out.append(int(nxt[slot]))
+            self._pos[slot] += 1
+            if len(req.tokens_out) >= req.max_new or self._pos[slot] >= self.s_max - 1:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self._free.append(slot)
+        return finished
+
+
+def _write_slot(batched: Tree, single: Tree, slot: int) -> Tree:
+    """Place a 1-batch cache tree into slot ``slot`` of the batched tree.
+
+    Cache leaves are stacked [L, B, ...]; batch is dim 1.
+    """
+    def wr(b, s):
+        return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype), slot, axis=1)
+
+    return jax.tree_util.tree_map(wr, batched, single)

@@ -1,0 +1,110 @@
+"""BASS request router — the paper's scheduler at the serving layer.
+
+The mapping is one-to-one with Algorithm 1:
+
+* ``ND_loc``    — replica(s) holding a warm prefix/KV for the request's
+  ``prefix_hash`` (data locality: reusing the cache skips prefill compute
+  *and* context transfer);
+* ``ΥI_j``      — per-replica backlog seconds (ProgressRate-style estimate
+  from the engines);
+* ``TM``        — context-migration time: moving the prompt/KV bytes to a
+  less-loaded replica through the DCN, against the live TS ledger;
+* Case 1.2     — migrate iff the bandwidth exists to make the remote
+  completion strictly earlier; reserve the slots when we do;
+* Case 2       — cold prefixes go to ``ND_minnow`` with a reservation.
+
+The router and the training-side shard placement share ``core`` — one
+scheduler, two surfaces, exactly the paper's "global view" point.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.bass import pick_source
+from ..core.tasks import Assignment, Instance, Task
+from ..core.bass import schedule_bass
+from ..core.timeslot import TimeSlotLedger
+from ..core.topology import Fabric, tpu_dcn_fabric
+from .engine import Request
+
+
+@dataclass
+class RouteDecision:
+    rid: int
+    replica: str
+    migrated_from: Optional[str]
+    ready_at: float
+    slots: Tuple[int, ...]
+
+
+class BassRouter:
+    def __init__(
+        self,
+        replicas: Sequence[str],
+        fabric: Optional[Fabric] = None,
+        decode_s_per_token: float = 0.02,
+        bytes_per_ctx_token: float = 2 * 8 * 128 * 2,  # kv bf16, 8 heads × 128
+        slot_duration: float = 0.05,
+        nic_bytes_per_s: float = 25e9,
+    ):
+        self.replicas = list(replicas)
+        if fabric is None:
+            # star fabric over the replica names (25 GB/s NICs)
+            fabric = Fabric()
+            for i, r in enumerate(self.replicas):
+                fabric.add_uplink(f"nic{i}", r, "agg", nic_bytes_per_s)
+        self.fabric = fabric
+        self.ledger = TimeSlotLedger(self.fabric, slot_duration, 2048)
+        self.decode_s_per_token = decode_s_per_token
+        self.bytes_per_ctx_token = bytes_per_ctx_token
+        self.prefix_home: Dict[int, List[str]] = {}   # prefix_hash -> replicas
+        self.backlog: Dict[str, float] = {r: 0.0 for r in self.replicas}
+
+    def update_backlog(self, backlog: Dict[str, float]) -> None:
+        self.backlog.update(backlog)
+
+    def route(self, req: Request, now: float = 0.0) -> RouteDecision:
+        work_s = req.max_new * self.decode_s_per_token
+        holders = [
+            r for r in self.prefix_home.get(req.prefix_hash, []) if r in self.replicas
+        ]
+        task = Task(
+            tid=req.rid,
+            size=len(req.prompt) * self.bytes_per_ctx_token,
+            compute=work_s,
+            replicas=tuple(holders) if holders else tuple(self.replicas[:1]),
+        )
+        inst = Instance(
+            fabric=self.fabric,
+            workers=list(self.replicas),
+            idle={r: now + self.backlog.get(r, 0.0) for r in self.replicas},
+            tasks=[task],
+            slot_duration=self.ledger.slot_duration,
+        )
+        # Case 2 shortcut: cold prefix — replicas list was faked; treat as
+        # locality starvation by giving the task no usable holders.
+        if not holders:
+            inst.tasks[0] = Task(
+                tid=task.tid, size=task.size, compute=task.compute,
+                replicas=(self._coldest(),),
+            )
+        sched = schedule_bass(inst, ledger=self.ledger)
+        a = sched.assignments[0]
+        self.backlog[a.node] = self.backlog.get(a.node, 0.0) + work_s
+        self.prefix_home.setdefault(req.prefix_hash, [])
+        if a.node not in self.prefix_home[req.prefix_hash]:
+            self.prefix_home[req.prefix_hash].append(a.node)
+        return RouteDecision(
+            rid=req.rid,
+            replica=a.node,
+            migrated_from=a.source,
+            ready_at=a.start,
+            slots=a.transfer.slots if a.transfer else (),
+        )
+
+    def _coldest(self) -> str:
+        return min(self.replicas, key=lambda r: (self.backlog.get(r, 0.0), r))

@@ -1,0 +1,97 @@
+"""Paged KV-cache allocator properties (hypothesis) + gather correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvcache import OutOfPages, PagedKVCache, gather_pages
+
+
+def test_basic_alloc_free_roundtrip():
+    kv = PagedKVCache(n_pages=16, page_size=8)
+    sp = kv.allocate(1, n_tokens=20)            # 3 pages
+    assert len(sp.pages) == 3 and kv.free_pages == 13
+    kv.free(1)
+    assert kv.free_pages == 16
+
+
+def test_prefix_sharing_is_zero_copy():
+    kv = PagedKVCache(n_pages=16, page_size=8)
+    kv.allocate(1, n_tokens=24)                 # 3 pages
+    kv.register_prefix(42, 1, n_tokens=16)      # first 2 pages shareable
+    before = kv.free_pages
+    sp2 = kv.allocate(2, n_tokens=24, prefix_hash=42)
+    assert sp2.shared_prefix == 2
+    assert kv.free_pages == before - 1          # only the third page is new
+    # freeing the original keeps shared pages alive for seq 2
+    kv.free(1)
+    assert kv.free_pages == 16 - 3              # seq2 still holds 3 pages
+    kv.free(2)
+    assert kv.free_pages == 16
+
+
+def test_copy_on_write_on_shared_page_append():
+    kv = PagedKVCache(n_pages=16, page_size=4)
+    kv.allocate(1, n_tokens=4)                  # exactly one full page
+    kv.register_prefix(7, 1, n_tokens=4)
+    sp2 = kv.allocate(2, n_tokens=4, prefix_hash=7)
+    shared_page = sp2.pages[0]
+    # appending into seq2's shared page must not touch seq1's data
+    landed = kv.append_token(2)
+    assert landed != shared_page                # COW allocated a new page
+    kv.free(1)
+    kv.free(2)
+    assert kv.free_pages == 16
+
+
+def test_out_of_pages_rolls_back():
+    kv = PagedKVCache(n_pages=2, page_size=4)
+    kv.allocate(1, n_tokens=8)
+    with pytest.raises(OutOfPages):
+        kv.allocate(2, n_tokens=8)
+    assert 2 not in kv._seqs
+    kv.free(1)
+    assert kv.free_pages == 2
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(1, 40), st.integers(1, 3)), min_size=1, max_size=40
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_refcount_conservation(ops):
+    """Random alloc/append/free interleavings never leak or double-free."""
+    kv = PagedKVCache(n_pages=64, page_size=4)
+    live = {}
+    for i, (tok, action) in enumerate(ops):
+        try:
+            if action == 1 or not live:
+                kv.allocate(i, n_tokens=tok)
+                live[i] = True
+            elif action == 2:
+                sid = next(iter(live))
+                kv.append_token(sid)
+            else:
+                sid = next(iter(live))
+                kv.free(sid)
+                del live[sid]
+        except OutOfPages:
+            pass
+    for sid in list(live):
+        kv.free(sid)
+    assert kv.free_pages == 64
+    assert (kv._ref == 0).all()
+
+
+def test_gather_pages_reads_correct_tokens():
+    pool = jnp.arange(8 * 4 * 2 * 3, dtype=jnp.float32).reshape(8, 4, 2, 3)
+    kv = PagedKVCache(n_pages=8, page_size=4)
+    sp = kv.allocate(1, n_tokens=8)
+    table = kv.page_table(1, max_pages=4)
+    view = gather_pages(pool, jnp.asarray(table))
+    assert view.shape == (16, 2, 3)
+    np.testing.assert_array_equal(
+        np.asarray(view[:4]), np.asarray(pool[sp.pages[0]])
+    )
+    np.testing.assert_array_equal(np.asarray(view[8:]), 0)  # padded pages

@@ -1,0 +1,90 @@
+"""Exactness tests against the paper's §IV worked examples.
+
+Every number here is stated in the paper text: Example 1 (BASS, 35 s; TK1 on
+N1 finishing at 17 s with slots TS4..TS8 on Link1+Link2), Discussion 1 (HDS
+39 s with the per-node allocation spelled out; BAR 38 s via the TK9→N3
+move), Example 2 (Pre-BASS 34 s, last finisher TK8, prefetch slots
+TS1..TS5).
+"""
+import pytest
+
+from repro.core.bass import schedule_bass
+from repro.core.baselines import schedule_bar, schedule_hds
+from repro.core.prebass import schedule_prebass
+from repro.core.simulator import replay
+from repro.core.examples_fig import (
+    PAPER_HDS_ALLOC,
+    PAPER_MAKESPAN,
+    PAPER_TK1,
+    example1_instance,
+)
+
+
+def test_bass_makespan_35s():
+    s = schedule_bass(example1_instance())
+    assert s.makespan == pytest.approx(PAPER_MAKESPAN["BASS"])
+
+
+def test_bass_tk1_detail():
+    s = schedule_bass(example1_instance())
+    a1 = next(a for a in s.assignments if a.tid == 1)
+    assert a1.node == PAPER_TK1["node"]
+    assert a1.finish == pytest.approx(PAPER_TK1["completion"])
+    assert a1.transfer is not None
+    assert a1.transfer.slots == PAPER_TK1["slots"]          # TS4..TS8
+    links = set(s.ledger.link_names(a1.transfer.links))
+    assert links == {"Link1", "Link2"}
+
+
+def test_bass_tk9_determines_makespan():
+    s = schedule_bass(example1_instance())
+    latest = s.latest()
+    assert latest.tid == 9 and latest.node == "N1"
+    assert latest.finish == pytest.approx(35.0)
+
+
+def test_hds_makespan_39s_and_allocation():
+    s = schedule_hds(example1_instance())
+    assert s.makespan == pytest.approx(PAPER_MAKESPAN["HDS"])
+    alloc = {n: {a.tid for a in q} for n, q in s.by_node().items()}
+    assert alloc == PAPER_HDS_ALLOC
+
+
+def test_bar_makespan_38s_moves_tk9():
+    s = schedule_bar(example1_instance())
+    assert s.makespan == pytest.approx(PAPER_MAKESPAN["BAR"])
+    a9 = next(a for a in s.assignments if a.tid == 9)
+    assert a9.node == "N3" and a9.finish == pytest.approx(38.0)
+
+
+def test_prebass_makespan_34s_last_is_tk8():
+    s = schedule_prebass(example1_instance())
+    assert s.makespan == pytest.approx(PAPER_MAKESPAN["Pre-BASS"])
+    assert s.latest().tid == 8
+    a1 = next(a for a in s.assignments if a.tid == 1)
+    assert a1.transfer.slots == (1, 2, 3, 4, 5)             # TS1..TS5
+    # node N1 finishes at 32 s (paper: "reduced from 35s to 32s")
+    n1_finish = max(a.finish for a in s.assignments if a.node == "N1")
+    assert n1_finish == pytest.approx(32.0)
+
+
+@pytest.mark.parametrize(
+    "scheduler", [schedule_bass, schedule_hds, schedule_bar, schedule_prebass]
+)
+def test_schedules_replay_cleanly(scheduler):
+    inst = example1_instance()
+    rep = replay(inst, scheduler(inst))
+    assert rep.ok, rep.violations
+
+
+def test_paper_ordering():
+    ms = {
+        name: fn(example1_instance()).makespan
+        for name, fn in [
+            ("BASS", schedule_bass),
+            ("BAR", schedule_bar),
+            ("HDS", schedule_hds),
+            ("Pre-BASS", schedule_prebass),
+        ]
+    }
+    assert ms["Pre-BASS"] < ms["BASS"] < ms["BAR"] < ms["HDS"]

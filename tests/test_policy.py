@@ -1,0 +1,64 @@
+"""Dry-run policy selection rules (§Perf) — pure unit tests."""
+import pytest
+
+from repro.configs import TRAIN_4K, PREFILL_32K, DECODE_32K
+from repro.launch.dryrun import SMALL_MODEL_PARAMS, policy_rules
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_baseline_rules_have_no_opt_axes():
+    cfg, pr, act = policy_rules("qwen3-32b", TRAIN_4K, SINGLE, "baseline")
+    assert "heads" not in act and "d_ff" not in act
+    assert "megatron_blocks" not in act
+    assert cfg.moe_impl == "gather"
+
+
+def test_opt_train_gets_megatron_rules():
+    cfg, pr, act = policy_rules("qwen3-32b", TRAIN_4K, SINGLE, "opt")
+    assert act.get("heads") == "model"
+    assert act.get("d_ff") == "model"
+    assert act.get("megatron_blocks") is True
+
+
+def test_opt_prefill_keeps_baseline_sharding():
+    """Measured lesson: head-sharding regresses 32k prefill."""
+    cfg, pr, act = policy_rules("qwen3-32b", PREFILL_32K, SINGLE, "opt")
+    assert "heads" not in act and "megatron_blocks" not in act
+
+
+def test_opt_moe_gets_a2a_everywhere():
+    for shape in (TRAIN_4K, PREFILL_32K):
+        cfg, _, _ = policy_rules("moonshot-v1-16b-a3b", shape, SINGLE, "opt")
+        assert cfg.moe_impl == "a2a"
+
+
+def test_opt_small_model_pure_dp():
+    from repro.configs import get_config
+
+    assert get_config("whisper-base").param_count() < SMALL_MODEL_PARAMS
+    cfg, pr, act = policy_rules("whisper-base", TRAIN_4K, SINGLE, "opt")
+    assert isinstance(act["batch"], list)          # DP candidate chain
+    assert pr == {}                                # params replicated
+
+
+def test_internvl2_above_small_threshold():
+    from repro.configs import get_config
+
+    assert get_config("internvl2-1b").param_count() > SMALL_MODEL_PARAMS
+    _, pr, act = policy_rules("internvl2-1b", TRAIN_4K, SINGLE, "opt")
+    assert pr is None and not isinstance(act["batch"], list)
+
+
+def test_multipod_batch_axes():
+    _, _, act = policy_rules("qwen3-32b", TRAIN_4K, MULTI, "baseline")
+    assert act["batch"] == ("pod", "data")
+    _, _, act = policy_rules("qwen3-32b", DECODE_32K, MULTI, "baseline")
+    assert act["batch"] == ("pod", "data")

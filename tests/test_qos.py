@@ -1,0 +1,66 @@
+"""Example-3 QoS queue model properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qos import (
+    Flow,
+    QosPort,
+    QueueSpec,
+    example3_port,
+    shuffle_vs_default,
+    single_queue_port,
+)
+
+
+def test_example3_shuffle_beats_default():
+    """The paper's claim: Q1=100 for shuffle + Q3=10 for background beats a
+    single shared 150 Mbps queue whenever background traffic competes."""
+    queued, default = shuffle_vs_default(1000.0, 500.0, n_background=1)
+    assert queued < default
+    # shuffle gets ≥ its guaranteed 100 Mbps (HTB borrowing may add more):
+    # 1000 Mbit → at most 10 s
+    assert queued <= 10.0 + 1e-9
+
+
+@given(
+    shuffle=st.floats(100.0, 5000.0),
+    bg=st.floats(100.0, 5000.0),
+    n_bg=st.integers(1, 6),
+)
+@settings(max_examples=40, deadline=None)
+def test_queued_never_slower_for_shuffle(shuffle, bg, n_bg):
+    queued, default = shuffle_vs_default(shuffle, bg, n_background=n_bg)
+    assert queued <= default + 1e-6
+
+
+def test_no_background_borrowing_matches_default():
+    """With zero competition, HTB borrowing lends the whole port to Q1, so
+    the queued scheme matches the single shared queue exactly."""
+    q = example3_port().simulate([Flow("s", 1500.0, "Q1")])["s"]
+    d = single_queue_port().simulate([Flow("s", 1500.0, "Q")])["s"]
+    assert q == pytest.approx(d) == pytest.approx(10.0)
+
+
+def test_work_conservation():
+    """Total service time never exceeds serialized time at max rate."""
+    port = example3_port()
+    flows = [
+        Flow("a", 300.0, "Q1"),
+        Flow("b", 300.0, "Q2"),
+        Flow("c", 300.0, "Q3"),
+    ]
+    done = port.simulate(flows)
+    assert max(done.values()) <= 900.0 / 150.0 + 1e-6
+
+
+def test_rate_guarantees_sum_below_port():
+    with pytest.raises(ValueError):
+        QosPort(100.0, [QueueSpec("a", 80.0), QueueSpec("b", 40.0)])
+
+
+def test_arrival_ordering():
+    port = example3_port()
+    done = port.simulate(
+        [Flow("early", 100.0, "Q1", arrival=0.0), Flow("late", 100.0, "Q1", arrival=5.0)]
+    )
+    assert done["early"] < done["late"]

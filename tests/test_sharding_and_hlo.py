@@ -1,0 +1,99 @@
+"""Sharding rule unit tests + HLO collective-parser tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import PARAM_RULES, spec_for
+from repro.launch.hlo_analysis import (
+    CollectiveReport,
+    _wire_bytes,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.launch.mesh import make_smoke_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device CPU mesh: shape (1, 1)
+    return make_smoke_mesh()
+
+
+def test_spec_divisibility_downgrade():
+    import numpy as np
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = spec_for((14, 64), ("heads", "d_ff"), FakeMesh(), PARAM_RULES)
+    # 14 heads not divisible by 16 → replicated; 64 d_ff divisible → model
+    assert spec == PartitionSpec(None, "model")
+
+
+def test_spec_axis_used_once():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = spec_for((64, 64), ("d_ff", "vocab"), FakeMesh(), PARAM_RULES)
+    # both want "model"; only the first gets it
+    assert spec == PartitionSpec("model")
+
+
+def test_spec_tuple_axes():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    rules = {"batch": ("pod", "data")}
+    spec = spec_for((64, 128), ("batch", None), FakeMesh(), rules)
+    assert spec == PartitionSpec(("pod", "data"))
+
+
+HLO_SAMPLE = """
+ENTRY %main_spmd (p0: f32[16,256]) -> f32[] {
+  %all-gather = f32[256,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}, metadata={op_name="jit(f)/scan_layers/while/body/ag"}
+  %all-reduce = f32[16,256]{1,0} all-reduce(%y), channel_id=3, replica_groups=[2,4]<=[8], to_apply=%add, metadata={op_name="jit(f)/scan_layers/while/body/scan_qchunk/while/body/ar"}
+  ROOT %all-reduce.1 = f32[] all-reduce(%z), channel_id=4, replica_groups=[1,8]<=[8], metadata={op_name="jit(f)/loss"}
+}
+"""
+
+
+def test_parse_collectives_trips_and_groups():
+    rep = parse_collectives(HLO_SAMPLE, {"scan_layers": 6, "scan_qchunk": 8}, world=8)
+    assert rep.count() == 3
+    ag, ar_inner, ar_outer = rep.ops
+    assert ag.kind == "all-gather" and ag.group == 2 and ag.trips == 6
+    assert ag.result_bytes == 256 * 256 * 4
+    assert ar_inner.group == 4 and ar_inner.trips == 48         # 6 × 8
+    assert ar_outer.group == 8 and ar_outer.trips == 1
+    assert ar_outer.result_bytes == 4
+
+
+def test_wire_byte_formulas():
+    assert _wire_bytes("all-gather", 1000, 4) == pytest.approx(750.0)
+    assert _wire_bytes("all-reduce", 1000, 4) == pytest.approx(1500.0)
+    assert _wire_bytes("reduce-scatter", 250, 4) == pytest.approx(750.0)
+    assert _wire_bytes("collective-permute", 1000, 4) == 1000.0
+    assert _wire_bytes("all-reduce", 1000, 1) == 0.0
+
+
+def test_roofline_terms_dominance():
+    rep = CollectiveReport()
+    t = roofline_terms(
+        hlo_flops_global=1e18,
+        hlo_bytes_global=1e15,
+        collectives=rep,
+        chips=256,
+        model_flops=6e17,
+    )
+    assert t.dominant == "compute"
+    assert t.useful_flops_fraction == pytest.approx(0.6)
+    assert t.compute_s == pytest.approx(1e18 / (256 * 197e12))
+
+
+def test_mesh_functions_touch_no_global_state(mesh):
+    # make_production_mesh is only importable, not callable, on 1 device —
+    # the module-level import must not create meshes.
+    import repro.launch.mesh as m
+
+    assert callable(m.make_production_mesh)

@@ -1,0 +1,197 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, runtime FT,
+gradient compression."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, SyntheticLM, plan_epoch, uniform_shards
+from repro.core.simulator import replay
+from repro.core.topology import tpu_dcn_fabric
+from repro.distributed.grad_compress import (
+    compress,
+    compress_with_feedback,
+    decompress,
+)
+from repro.optim import AdamW, constant, global_norm, warmup_cosine
+from repro.runtime import (
+    HeartbeatMonitor,
+    ProgressTracker,
+    TrainSupervisor,
+    elastic_mesh_shape,
+)
+
+
+# --- optimizer ---------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=constant(0.1), weight_decay=0.0, grad_clip=None)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=constant(1.0), grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update({"w": jnp.full(4, 1e6)}, state, params)
+    assert float(gnorm) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1e-3, warmup=100, total=1000)
+    assert float(sched(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.int32(100))) == pytest.approx(1e-3, rel=1e-2)
+    assert float(sched(jnp.int32(1000))) < 2e-4
+
+
+# --- checkpointing --------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2, 2), jnp.bfloat16) * 1.5},
+        "count": jnp.int32(7),
+    }
+    ck = Checkpointer(tmp_path)
+    ck.save(5, tree, blocking=True)
+    step, restored = ck.restore(tree)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in [1, 2, 3, 4]:
+        ck.save(s, tree, blocking=True)
+    assert ck.latest_step() == 4
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+    ck.save(1, tree, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+# --- data pipeline ---------------------------------------------------------------
+
+def test_synthetic_deterministic_addressing():
+    cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=128, seed=3)
+    src = SyntheticLM(cfg)
+    b1 = src.batch(7)
+    b2 = src.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_synthetic_copy_structure():
+    cfg = DataConfig(seq_len=64, global_batch=1, vocab_size=128, seed=0)
+    tok = SyntheticLM(cfg).sample(0, 0)
+    half = 32
+    agree = (tok[:half] == tok[half:]).mean()
+    assert agree > 0.8        # 5% noise
+
+
+def test_bass_shard_placement_valid():
+    fab = tpu_dcn_fabric(1, 8)
+    hosts = [f"pod0/host{i}" for i in range(8)]
+    shards = uniform_shards(32, hosts, size_bytes=256e6, replication=3, seed=1)
+    assigns, sched = plan_epoch(fab, hosts, {h: 0.0 for h in hosts}, shards)
+    assert len(assigns) == 32
+    assert {a.shard_id for a in assigns} == set(range(32))
+    # local fetches dominate when the cluster starts idle
+    local = sum(1 for a in assigns if a.source is None)
+    assert local > len(assigns) / 2
+
+
+# --- gradient compression ---------------------------------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_compress_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+    q, s = compress(x)
+    xh = decompress(q, s, x.shape)
+    blockmax = float(jnp.abs(x).max())
+    assert float(jnp.abs(x - xh).max()) <= blockmax / 127.0 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the *sum* of decompressed messages tracks the
+    sum of true gradients — the residual never grows unboundedly."""
+    rng = np.random.default_rng(0)
+    res = jnp.zeros(4096)
+    true_sum = np.zeros(4096)
+    sent_sum = np.zeros(4096)
+    for _ in range(30):
+        g = jnp.asarray(rng.standard_normal(4096) * 0.1, jnp.float32)
+        q, s, res = compress_with_feedback(g, res)
+        sent_sum += np.asarray(decompress(q, s, g.shape))
+        true_sum += np.asarray(g)
+    # residual bounded by one quantization step's worth of signal
+    assert np.abs(true_sum - sent_sum).max() == pytest.approx(
+        float(jnp.abs(res).max()), rel=1e-5
+    )
+    assert float(jnp.abs(res).max()) < 0.05
+
+
+# --- runtime -------------------------------------------------------------------
+
+def test_progress_rate_formula():
+    tr = ProgressTracker()
+    tr.start(1, "w0", now=0.0)
+    tr.update(1, 0.25, now=10.0)
+    # rate = 0.25/10 → remaining = 0.75 / 0.025 = 30
+    assert tr.remaining(1, now=10.0) == pytest.approx(30.0)
+
+
+def test_straggler_detection():
+    tr = ProgressTracker(straggler_factor=2.0)
+    for i, score in enumerate([0.5, 0.5, 0.5, 0.04]):
+        tr.start(i, f"w{i}", now=0.0)
+        tr.update(i, score, now=10.0)
+    assert tr.stragglers(now=10.0) == [3]
+
+
+def test_elastic_mesh_shapes():
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    assert elastic_mesh_shape(255, 16) == (15, 16)   # lost a chip → 15 groups
+    assert elastic_mesh_shape(8, 16) == ()
+    assert elastic_mesh_shape(512, 16, prefer_pods=2) == (2, 16, 16)
+
+
+def test_supervisor_restart_flow():
+    mon = HeartbeatMonitor([f"h{i}" for i in range(4)], grace_s=5.0)
+    calls = {}
+    sup = TrainSupervisor(
+        mon,
+        chips_per_host=4,
+        model_axis=4,
+        rebuild=lambda shape: calls.setdefault("rebuild", shape),
+        restore=lambda: 42,
+    )
+    for h in mon.hosts:
+        mon.beat(h, now=0.0)
+    assert sup.on_tick(10, now=1.0) is None
+    mon.beat("h0", now=8.0); mon.beat("h1", now=8.0); mon.beat("h2", now=8.0)
+    ev = sup.on_tick(11, now=9.0)           # h3 missed > 5 s
+    assert ev is not None and ev.lost_hosts == ("h3",)
+    assert ev.step == 42
+    assert calls["rebuild"] == (3, 4)       # 12 chips → data=3, model=4

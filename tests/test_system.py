@@ -1,0 +1,130 @@
+"""End-to-end system tests: the full training loop learns, checkpoints
+restore bit-exactly, the BASS control plane is wired into the data path,
+and a tiny dry-run (lower+compile on a 1-device mesh) works outside the
+512-device environment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import make_train_step
+from repro.launch.train import TINY
+from repro.models.model import Model
+from repro.optim import AdamW, constant, warmup_cosine
+
+
+def _run_steps(model, params, opt, opt_state, source, n, start=0, accum=1):
+    step_fn = jax.jit(make_train_step(model, opt, accum=accum))
+    losses = []
+    for s in range(start, start + n):
+        batch = {k: jnp.asarray(v) for k, v in source.batch(s).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    return params, opt_state, losses
+
+
+def test_tiny_training_learns():
+    """The increment task is learnable from unigram structure — loss must
+    collapse well below the uniform floor within 80 steps.  (The richer
+    copy task needs ~10⁶ tokens to reach onset and is exercised by
+    examples/train_e2e.py instead.)"""
+    cfg = TINY
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=warmup_cosine(1e-2, 10, 80))
+    opt_state = opt.init(params)
+    src = SyntheticLM(DataConfig(seq_len=64, global_batch=16,
+                                 vocab_size=cfg.vocab_size, seed=0,
+                                 task="increment"))
+    _, _, losses = _run_steps(model, params, opt, opt_state, src, 80)
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 2.0, (first, last)
+
+
+def test_grad_accumulation_equivalence():
+    """accum=4 must match accum=1 on the same global batch (up to bf16)."""
+    cfg = TINY.with_(remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    opt = AdamW(lr=constant(1e-3))
+    src = SyntheticLM(DataConfig(seq_len=64, global_batch=8,
+                                 vocab_size=cfg.vocab_size, seed=1))
+    batch = {k: jnp.asarray(v) for k, v in src.batch(0).items()}
+
+    p1, _, _ = jax.jit(make_train_step(model, opt, accum=1))(params, opt.init(params), batch)
+    p4, _, _ = jax.jit(make_train_step(model, opt, accum=4))(params, opt.init(params), batch)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=5e-3
+        )
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    """Stop at step 6, restore, continue — must equal the uninterrupted run
+    (fault-tolerance requirement: restart is invisible)."""
+    cfg = TINY
+    model = Model(cfg)
+    params0 = model.init(jax.random.PRNGKey(2))
+    opt = AdamW(lr=constant(1e-3))
+    src = SyntheticLM(DataConfig(seq_len=64, global_batch=4,
+                                 vocab_size=cfg.vocab_size, seed=2))
+
+    # uninterrupted: 12 steps
+    p_ref, o_ref, _ = _run_steps(model, params0, opt, opt.init(params0), src, 12)
+
+    # interrupted: 6 steps → checkpoint → restore → 6 more
+    p_a, o_a, _ = _run_steps(model, params0, opt, opt.init(params0), src, 6)
+    ck = Checkpointer(tmp_path)
+    ck.save(6, (p_a, o_a), blocking=True)
+    step, (p_b, o_b) = ck.restore((p_a, o_a))
+    assert step == 6
+    p_fin, o_fin, _ = _run_steps(model, p_b, opt, o_b, src, 6, start=6)
+
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p_fin)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_smoke_mesh_lower_compile():
+    """A miniature dry-run on the real (1-device) mesh: lower + compile the
+    sharded train step exactly as launch.dryrun does at 512 devices."""
+    from repro.distributed.sharding import param_shardings
+    from repro.launch.inputs import train_inputs
+    from repro.configs.base import ShapeSpec
+
+    mesh = make_smoke_mesh()
+    cfg = get_config("starcoder2-3b", smoke=True)
+    model = Model(cfg)
+    shape = ShapeSpec("t", "train", 32, 4)
+    step = make_train_step(model, AdamW(lr=constant(1e-3)), accum=2)
+    params_abs = model.abstract()
+    param_sh = param_shardings(model.defs(), mesh)
+    batch_abs, batch_sh = train_inputs(cfg, shape, mesh)
+    opt_abs = jax.eval_shape(AdamW(lr=1e-3).init, params_abs)
+    with mesh:
+        lowered = jax.jit(step).lower(params_abs, opt_abs, batch_abs)
+        compiled = lowered.compile()
+    assert compiled.memory_analysis() is not None
+    assert (compiled.cost_analysis() or {}).get("flops", 0) > 0
+
+
+def test_moe_drops_are_bounded():
+    """Capacity-factor property: with cf=1.25 and near-uniform routing, the
+    realized drop rate on random tokens stays small."""
+    from repro.models.moe import capacity, moe_block
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # peel one layer's moe params
+    moe_p = jax.tree_util.tree_map(lambda a: a[0], params["stack"])["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model), jnp.bfloat16)
+    y, aux = moe_block(moe_p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(aux))
+    # output should be non-trivial for most tokens (few drops)
+    nonzero = float((jnp.abs(y.astype(jnp.float32)).sum(-1) > 0).mean())
+    assert nonzero > 0.85

@@ -1,0 +1,101 @@
+"""Property tests for the Time-Slot ledger (paper §IV.A invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import paper_fig2_fabric, two_tier_fabric
+
+
+def make_ledger(slot=1.0):
+    return TimeSlotLedger(paper_fig2_fabric(100.0), slot, 64)
+
+
+@given(
+    size=st.floats(1.0, 2000.0),
+    not_before=st.floats(0.0, 50.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_delivers_exactly_size(size, not_before):
+    led = make_ledger()
+    rows = led.rows(led.fabric.path("N2", "N1"))
+    plan = led.plan_transfer(size, rows, not_before=not_before)
+    # End time implies delivered bytes = size at 100 Mbps residue.
+    assert plan.end - plan.start == pytest.approx(size / 100.0, rel=1e-6)
+    assert plan.start >= not_before - 1e-9
+
+
+@given(
+    sizes=st.lists(st.floats(10.0, 800.0), min_size=1, max_size=12),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_never_overbooked(sizes, seed):
+    rng = np.random.default_rng(seed)
+    fab = two_tier_fabric(2, 3, 100.0, 100.0)
+    led = TimeSlotLedger(fab, 1.0, 64)
+    hosts = [f"H{i}" for i in range(6)]
+    for size in sizes:
+        a, b = rng.choice(hosts, 2, replace=False)
+        rows = led.rows(fab.path(str(a), str(b)))
+        plan = led.plan_transfer(size, rows, not_before=float(rng.uniform(0, 20)))
+        led.commit(plan)
+    assert (led.reserved <= 1.0 + 1e-6).all()
+
+
+@given(size=st.floats(10.0, 500.0), nb=st.floats(0.0, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_commit_release_roundtrip(size, nb):
+    led = make_ledger()
+    rows = led.rows(led.fabric.path("N3", "N4"))
+    before = led.reserved.copy()
+    plan = led.plan_transfer(size, rows, not_before=nb)
+    led.commit(plan)
+    led.release(plan)
+    n = before.shape[1]
+    np.testing.assert_allclose(led.reserved[:, :n], before, atol=1e-12)
+    assert (led.reserved[:, n:] == 0).all()  # growth area untouched
+
+
+def test_second_transfer_waits_for_residue():
+    led = make_ledger()
+    rows = led.rows(led.fabric.path("N2", "N1"))
+    p1 = led.plan_transfer(500.0, rows, not_before=0.0)   # occupies 0..5 s
+    led.commit(p1)
+    p2 = led.plan_transfer(500.0, rows, not_before=0.0)
+    assert p2.start >= p1.end - 1e-6                       # full residue taken
+    led.commit(p2)
+    assert (led.reserved <= 1.0 + 1e-6).all()
+
+
+def test_partial_residue_shares_bandwidth():
+    led = make_ledger()
+    rows = led.rows(led.fabric.path("N2", "N1"))
+    # Manually book 50% of slots 0..9 on Link1.
+    r1 = led.rows(["Link1"])
+    led.reserved[list(r1), 0:10] = 0.5
+    plan = led.plan_transfer(100.0, rows, not_before=0.0)
+    # 50 Mbps residue → 2 s for 100 Mbit.
+    assert plan.end == pytest.approx(2.0)
+
+
+def test_path_bandwidth_is_min_over_links():
+    fab = two_tier_fabric(2, 2, host_mbps=100.0, trunk_mbps=40.0)
+    led = TimeSlotLedger(fab, 1.0, 16)
+    rows = led.rows(fab.path("H0", "H2"))   # crosses the 40 Mbps trunk
+    assert led.path_bandwidth(rows, 0.0) == pytest.approx(40.0)
+
+
+@given(
+    frac=st.floats(0.05, 0.95),
+    size=st.floats(10.0, 300.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_earliest_window_respects_deadline(frac, size):
+    led = make_ledger()
+    rows = led.rows(led.fabric.path("N2", "N1"))
+    led.reserved[list(rows), 0:4] = frac
+    tm_full = size / 100.0
+    plan = led.earliest_window(rows, size, 0.0, deadline=tm_full * 0.5)
+    if plan is not None:
+        assert plan.end <= tm_full * 0.5 + 1e-9

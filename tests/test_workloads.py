@@ -1,0 +1,60 @@
+"""Table-I reproduction properties (statistical, small sizes for CI speed)."""
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULERS
+from repro.core.simulator import evaluate_mapreduce, replay
+from repro.core.workloads import DATA_SIZES_MB, SORT, WORDCOUNT, make_instance
+
+
+def _mean_jt(job, mb, scheduler, seeds=6):
+    out = []
+    for seed in range(seeds):
+        inst, rtasks, shuf = make_instance(job, mb, seed=seed)
+        m = evaluate_mapreduce(inst, scheduler, rtasks, shuf)
+        out.append(m.jt)
+    return float(np.mean(out))
+
+
+@pytest.mark.parametrize("job", [WORDCOUNT, SORT], ids=["wordcount", "sort"])
+@pytest.mark.parametrize("size", ["300M", "600M"])
+def test_bass_beats_hds(job, size):
+    """The paper's headline ordering: BASS < HDS on every row."""
+    bass = _mean_jt(job, DATA_SIZES_MB[size], SCHEDULERS["bass"])
+    hds = _mean_jt(job, DATA_SIZES_MB[size], SCHEDULERS["hds"])
+    assert bass < hds
+
+
+def test_bass_beats_bar_when_bandwidth_bound():
+    """Sort (shuffle-heavy) at mid size: the regime where bandwidth
+    awareness is the differentiator (§V.B)."""
+    bass = _mean_jt(SORT, DATA_SIZES_MB["300M"], SCHEDULERS["bass"], seeds=8)
+    bar = _mean_jt(SORT, DATA_SIZES_MB["300M"], SCHEDULERS["bar"], seeds=8)
+    assert bass < bar
+
+
+def test_locality_ratio_non_monotonic_insight():
+    """§V.B: BASS may win with a *lower* locality ratio — verify LR is a
+    recorded metric and at least one seed shows BASS winning with LR below
+    HDS's (the paper's 600M Wordcount row)."""
+    found = False
+    for mbsize, bg in [(1024, 30.0), (600, 60.0)]:
+        for seed in range(12):
+            inst, rtasks, shuf = make_instance(WORDCOUNT, mbsize, seed=seed,
+                                               background_load=bg)
+            mb = evaluate_mapreduce(inst, SCHEDULERS["bass"], rtasks, shuf)
+            inst, rtasks, shuf = make_instance(WORDCOUNT, mbsize, seed=seed,
+                                               background_load=bg)
+            mh = evaluate_mapreduce(inst, SCHEDULERS["hds"], rtasks, shuf)
+            if mb.jt < mh.jt and mb.lr < mh.lr:
+                found = True
+                break
+        if found:
+            break
+    assert found
+
+
+def test_mapreduce_replay_clean():
+    inst, rtasks, shuf = make_instance(SORT, 300, seed=1)
+    sched = SCHEDULERS["bass"](inst)
+    assert replay(inst, sched).ok
