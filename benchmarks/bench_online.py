@@ -1,0 +1,123 @@
+"""Benchmark: the online controller — multi-job streams + throughput.
+
+Two regimes:
+
+* ``online_<policy>_3jobs`` — a 3-job arrival stream (staggered submits,
+  plus a dynamically injected background flow) on the Table-I-scale
+  leaf/spine fabric, for all four policies.  Derived value = stream
+  makespan (absolute finish of the last job's last task).
+* ``online_bass_4096hosts_40000tasks`` — the same 16-pod/256-host fleet
+  and task mix as ``bench_sched_scale.py``, but arriving as four staggered
+  10 000-task jobs through :class:`~repro.core.controller.ClusterController`.
+  Derived value = scheduled tasks/second; the acceptance bar is parity with
+  the one-shot ``bench_sched_scale`` number (the event loop and the batched
+  candidate scoring must not tax single-job speed).
+
+CSV: ``name,us_per_call,derived``.  ``--smoke`` shrinks the fleet for CI.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.controller import ClusterController, POLICIES
+from repro.core.simulator import replay_online
+from repro.core.tasks import BackgroundFlow, Task
+from repro.core.topology import storage_hosts, tpu_dcn_fabric, two_tier_fabric
+
+
+def _stream_jobs(workers, rng, n_jobs=3, tasks_per_job=24):
+    jobs = []
+    tid = 1
+    for j in range(n_jobs):
+        tasks = []
+        for _ in range(tasks_per_job):
+            reps = tuple(rng.choice(workers, size=2, replace=False))
+            tasks.append(
+                Task(
+                    tid=tid,
+                    size=float(rng.uniform(100, 600)),
+                    compute=float(rng.uniform(2, 15)),
+                    replicas=reps,
+                )
+            )
+            tid += 1
+        jobs.append((j * 25.0, tasks))
+    return jobs
+
+
+def run_stream(policy_name: str) -> tuple:
+    fab = two_tier_fabric(4, 8, 100.0, 400.0)
+    workers = storage_hosts(fab)
+    rng = np.random.default_rng(0)
+    jobs = _stream_jobs(workers, rng)
+    idle = {w: float(rng.uniform(0, 5.0)) for w in workers}
+
+    ctrl = ClusterController(fab, workers, POLICIES[policy_name](), idle=idle)
+    t0 = time.perf_counter()
+    for at, tasks in jobs:
+        ctrl.submit(tasks, at=at)
+    ctrl.inject_flow(BackgroundFlow(workers[0], workers[-1], 0.5, 10.0, 40.0))
+    ctrl.run()
+    dt = time.perf_counter() - t0
+
+    rep = replay_online(jobs, ctrl.schedule(), idle)
+    assert rep.ok, rep.violations[:3]
+    n = sum(len(t) for _, t in jobs)
+    mk = max(ctrl.jobs[j].makespan for j in ctrl.jobs)
+    return (f"online_{policy_name}_3jobs", dt / n * 1e6, round(mk, 2))
+
+
+def run_throughput(smoke: bool = False) -> tuple:
+    pods, hosts, n_tasks = (2, 32, 2000) if smoke else (16, 256, 40000)
+    n_hosts = pods * hosts
+    fab = tpu_dcn_fabric(n_pods=pods, hosts_per_pod=hosts)
+    workers = [f"pod{p}/host{h}" for p in range(pods) for h in range(hosts)]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, n_hosts, size=(n_tasks, 3))
+    tasks = [
+        Task(
+            tid=i,
+            size=float(256e6 + (i % 7) * 64e6),     # 256–640 MB shards
+            compute=float(0.05),
+            replicas=tuple(workers[j] for j in idx[i]),
+        )
+        for i in range(n_tasks)
+    ]
+    idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
+
+    ctrl = ClusterController(
+        fab, workers, "bass", idle=idle, slot_duration=0.1
+    )
+    quarter = n_tasks // 4
+    t0 = time.perf_counter()
+    for j in range(4):
+        ctrl.submit(tasks[j * quarter : (j + 1) * quarter], at=j * 0.5)
+    ctrl.run()
+    dt = time.perf_counter() - t0
+
+    placed = sum(len(rec.assignments) for rec in ctrl.jobs.values())
+    assert placed == quarter * 4
+    return (
+        f"online_bass_{n_hosts}hosts_{n_tasks}tasks",
+        dt / placed * 1e6,
+        round(placed / dt, 0),
+    )
+
+
+def run(smoke: bool = False) -> list:
+    rows = [run_stream(name) for name in POLICIES]
+    rows.append(run_throughput(smoke))
+    return rows
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
+    for name, us, derived in run(smoke):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@
 * bench_qos         — Example 3 queue scheme (+ DCN traffic classes)
 * bench_table1      — Table I(a)/(b) + Fig. 5 (Wordcount/Sort, 150M…5G)
 * bench_sched_scale — beyond-paper: 4 096-host fleet controller throughput
+* bench_online      — beyond-paper: online multi-job streams (all policies)
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -16,6 +17,7 @@ import sys
 
 from . import (
     bench_discussion1,
+    bench_online,
     bench_prebass,
     bench_qos,
     bench_roofline,
@@ -29,6 +31,7 @@ MODULES = [
     bench_qos,
     bench_table1,
     bench_sched_scale,
+    bench_online,
     bench_roofline,
 ]
 

@@ -5,16 +5,19 @@ Pre-BASS prefetching, QoS queueing, and the evaluation simulator.
 Public API:
 
 ``Fabric``/``TimeSlotLedger``   — the controller's network view + TS ledger
-``schedule_bass``               — Algorithm 1
-``schedule_hds``/``schedule_bar`` — paper baselines
+``ClusterController``           — the online event loop (multi-job streams)
+``ClusterState``/``POLICIES``   — shared world + pluggable per-event policies
+``schedule_bass``               — Algorithm 1 (offline wrapper)
+``schedule_hds``/``schedule_bar`` — paper baselines (offline wrappers)
 ``schedule_prebass``            — Discussion-2 prefetching variant
 ``QosPort``                     — Discussion-3 OpenFlow queue model
-``replay``/``evaluate_mapreduce`` — independent verification + Table-I metrics
+``replay``/``replay_online``/``evaluate_mapreduce`` — verification + metrics
 """
-from .topology import Fabric, paper_fig2_fabric, two_tier_fabric, tpu_dcn_fabric
+from .topology import Fabric, paper_fig2_fabric, storage_hosts, two_tier_fabric, tpu_dcn_fabric
 from .timeslot import TimeSlotLedger, TransferPlan
 from .tasks import (
     Assignment,
+    BackgroundFlow,
     Instance,
     Schedule,
     Task,
@@ -22,11 +25,22 @@ from .tasks import (
     execution_time,
     movement_time,
 )
+from .controller import (
+    POLICIES,
+    BarPolicy,
+    BassPolicy,
+    ClusterController,
+    ClusterState,
+    HdsPolicy,
+    PreBassPolicy,
+    SchedulingPolicy,
+    run_policy,
+)
 from .bass import schedule_bass
 from .baselines import schedule_bar, schedule_hds
 from .prebass import schedule_prebass
 from .qos import Flow, QosPort, QueueSpec, example3_port, shuffle_vs_default, single_queue_port
-from .simulator import JobMetrics, ReplayReport, evaluate_mapreduce, replay
+from .simulator import JobMetrics, ReplayReport, evaluate_mapreduce, replay, replay_online
 
 SCHEDULERS = {
     "bass": schedule_bass,
@@ -37,15 +51,24 @@ SCHEDULERS = {
 
 __all__ = [
     "Assignment",
+    "BackgroundFlow",
+    "BarPolicy",
+    "BassPolicy",
+    "ClusterController",
+    "ClusterState",
     "Fabric",
     "Flow",
+    "HdsPolicy",
     "Instance",
     "JobMetrics",
+    "POLICIES",
+    "PreBassPolicy",
     "QosPort",
     "QueueSpec",
     "ReplayReport",
     "SCHEDULERS",
     "Schedule",
+    "SchedulingPolicy",
     "Task",
     "TimeSlotLedger",
     "TransferPlan",
@@ -56,12 +79,15 @@ __all__ = [
     "movement_time",
     "paper_fig2_fabric",
     "replay",
+    "replay_online",
+    "run_policy",
     "schedule_bar",
     "schedule_bass",
     "schedule_hds",
     "schedule_prebass",
     "shuffle_vs_default",
     "single_queue_port",
+    "storage_hosts",
     "tpu_dcn_fabric",
     "two_tier_fabric",
 ]

@@ -13,169 +13,35 @@ the data-local allocation (= HDS result); phase 2 repeatedly takes the task
 with the *latest* completion time and moves it to a remote node iff that
 yields an earlier completion, until no such move exists.  BAR reasons with
 static link bandwidth (it "disregards available bandwidth" — no TS ledger).
+
+Both algorithms live in :mod:`repro.core.controller` as policies
+(:class:`~repro.core.controller.HdsPolicy`,
+:class:`~repro.core.controller.BarPolicy`); these wrappers are the
+historical offline entry points, byte-identical to the pre-refactor batch
+schedulers (DESIGN.md §1).
 """
 from __future__ import annotations
 
-import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional
 
-from .tasks import Assignment, Instance, Schedule, Task
+from .controller import (  # noqa: F401  (re-exported legacy surface)
+    BarPolicy,
+    HdsPolicy,
+    nearest_source as _nearest_source,
+    run_policy,
+)
+from .tasks import Instance, Schedule
 from .timeslot import TimeSlotLedger
-
-_EPS = 1e-9
 
 
 def schedule_hds(
     instance: Instance, ledger: Optional[TimeSlotLedger] = None
 ) -> Schedule:
-    idle = dict(instance.idle)
-    ledger = ledger if ledger is not None else instance.fresh_ledger()
-    unstarted = {t.tid: t for t in instance.tasks}
-    out: List[Assignment] = []
-    # Event heap of (idle_time, node); deterministic tie-break on name.
-    heap: List[Tuple[float, str]] = sorted((idle[n], n) for n in instance.workers)
-    heapq.heapify(heap)
-
-    while unstarted and heap:
-        t_idle, node = heapq.heappop(heap)
-        if abs(idle[node] - t_idle) > _EPS:
-            continue  # stale entry
-        local = [tid for tid, t in unstarted.items() if node in t.replicas]
-        if local:
-            tid = min(local)
-            task = unstarted.pop(tid)
-            start = t_idle
-            finish = start + task.compute
-            out.append(Assignment(tid, node, None, None, start, finish))
-        else:
-            tid = min(unstarted)
-            task = unstarted.pop(tid)
-            src, rows = _nearest_source(task, node, ledger)
-            plan = ledger.plan_transfer(task.size, rows, not_before=t_idle)
-            ledger.commit(plan)
-            start = plan.end if plan.slot_fracs else t_idle
-            finish = start + task.compute
-            out.append(Assignment(tid, node, src, plan, start, finish))
-        idle[node] = finish
-        heapq.heappush(heap, (finish, node))
-
-    out.sort(key=lambda a: a.tid)
-    return Schedule(out, ledger, kinds={t.tid: t.kind for t in instance.tasks})
-
-
-def _nearest_source(
-    task: Task, dst: str, ledger: TimeSlotLedger
-) -> Tuple[str, Tuple[int, ...]]:
-    """Fewest-hop replica (bandwidth-oblivious choice)."""
-    best = None
-    for rep in task.replicas:
-        if rep == dst:
-            continue
-        rows = ledger.rows(ledger.fabric.path(rep, dst))
-        key = (len(rows), rep)
-        if best is None or key < best[0]:
-            best = (key, rep, rows)
-    assert best is not None
-    return best[1], best[2]
+    return run_policy(HdsPolicy(), instance, ledger)
 
 
 def schedule_bar(
     instance: Instance, ledger: Optional[TimeSlotLedger] = None
 ) -> Schedule:
     """BAR: HDS phase-1 allocation, then latest-task remote adjustment."""
-    # Phase 1 + move decisions run on a scratch ledger (BAR's own beliefs);
-    # the caller-visible ledger only receives the realized transfers below.
-    phase1 = schedule_hds(instance, instance.fresh_ledger())
-    # Node queues in start order; we re-derive per-node task sequences.
-    queues: Dict[str, List[Assignment]] = phase1.by_node()
-    tasks = {t.tid: t for t in instance.tasks}
-    base_idle = dict(instance.idle)
-    fabric = instance.fabric
-
-    def static_tm(task: Task, node: str) -> Tuple[float, Optional[str]]:
-        if node in task.replicas:
-            return 0.0, None
-        best = None
-        for rep in task.replicas:
-            bw = fabric.path_capacity(rep, node)
-            tm = task.size / bw if bw > 0 else float("inf")
-            if best is None or tm < best[0]:
-                best = (tm, rep)
-        assert best is not None
-        return best
-
-    def recompute(queues: Dict[str, List[Assignment]]) -> None:
-        for node, q in queues.items():
-            t = base_idle.get(node, 0.0)
-            for a in q:
-                tm, src = static_tm(tasks[a.tid], node)
-                a.node, a.source, a.transfer = node, src, None
-                a.start = t + tm
-                a.finish = a.start + tasks[a.tid].compute
-                t = a.finish
-
-    recompute(queues)
-
-    while True:
-        all_assign = [a for q in queues.values() for a in q]
-        latest = max(all_assign, key=lambda a: (a.finish, a.tid))
-        task = tasks[latest.tid]
-        # Candidate: append to another node's queue end.
-        best: Optional[Tuple[float, str]] = None
-        for node in instance.workers:
-            if node == latest.node:
-                continue
-            q = queues.setdefault(node, [])
-            t_avail = q[-1].finish if q else base_idle.get(node, 0.0)
-            tm, _src = static_tm(task, node)
-            yc = t_avail + tm + task.compute
-            if yc < latest.finish - _EPS and (best is None or (yc, node) < best):
-                best = (yc, node)
-        if best is None:
-            break
-        _yc, node = best
-        queues[latest.node].remove(latest)
-        queues[node].append(latest)
-        recompute(queues)
-
-    # --- Realization: BAR's *decisions* used static bandwidth beliefs; the
-    # resulting transfers still traverse the shared network.  Replay the
-    # chosen per-node queues against a fresh TS ledger (event-driven, no
-    # advance reservation) so contended moves pay their true movement time —
-    # the paper's §I critique ("disregard available bandwidth") made honest.
-    realized_ledger = ledger if ledger is not None else instance.fresh_ledger()
-    avail: Dict[str, float] = {
-        n: instance.idle.get(n, 0.0) for n in instance.workers
-    }
-    heads: Dict[str, int] = {n: 0 for n in queues}
-    out: List[Assignment] = []
-    while True:
-        ready = [n for n, q in queues.items() if heads[n] < len(q)]
-        if not ready:
-            break
-        node = min(ready, key=lambda n: (avail[n], n))
-        a = queues[node][heads[node]]
-        heads[node] += 1
-        task = tasks[a.tid]
-        if node in task.replicas:
-            a.source, a.transfer = None, None
-            a.start = avail[node]
-        else:
-            src, rows = _nearest_source(task, node, realized_ledger)
-            plan = realized_ledger.plan_transfer(
-                task.size, rows, not_before=avail[node]
-            )
-            realized_ledger.commit(plan)
-            a.source, a.transfer = src, plan
-            a.start = plan.end if plan.slot_fracs else avail[node]
-        a.node = node
-        a.finish = a.start + task.compute
-        avail[node] = a.finish
-        out.append(a)
-
-    out.sort(key=lambda a: a.tid)
-    return Schedule(
-        out,
-        realized_ledger,
-        kinds={t.tid: t.kind for t in instance.tasks},
-    )
+    return run_policy(BarPolicy(), instance, ledger)

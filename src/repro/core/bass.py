@@ -17,31 +17,26 @@ Faithful implementation of the paper's Algorithm 1, per task ``TK_i``:
 The transfer starts at the destination's idle time ``ΥI_minnow`` — base BASS
 does *not* prefetch (that is Pre-BASS, Example 2) — and by the paper's policy
 consumes the full path residue until done, i.e. ``TM = SZ / BW_rl``.
+
+The decision logic lives in :class:`repro.core.controller.BassPolicy`
+operating on a shared :class:`~repro.core.controller.ClusterState`; this
+module is the historical offline entry point — a thin wrapper that remains
+byte-identical to the pre-refactor batch scheduler (DESIGN.md §1).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-from .tasks import Assignment, Instance, Schedule, Task, completion_time
-from .timeslot import TimeSlotLedger, TransferPlan
-
-_EPS = 1e-9
-
-
-def pick_minnow(idle: Dict[str, float], workers: Sequence[str]) -> str:
-    """``ND_minnow``: the worker whose available idle time is minimum."""
-    return min(workers, key=lambda n: (idle[n], n))
-
-
-def pick_local(
-    task: Task, idle: Dict[str, float], workers: Sequence[str]
-) -> Optional[str]:
-    """``ND_loc``: least-loaded *available* replica holder, or None (Case 2)."""
-    holders = [n for n in task.replicas if n in workers]
-    if not holders:
-        return None
-    return min(holders, key=lambda n: (idle[n], n))
+from .controller import (  # noqa: F401  (re-exported legacy surface)
+    BassPolicy,
+    MinnowHeap,
+    choose_source,
+    pick_local,
+    pick_minnow,
+    run_policy,
+)
+from .tasks import Instance, Schedule, Task
+from .timeslot import TimeSlotLedger
 
 
 def pick_source(
@@ -59,18 +54,8 @@ def pick_source(
     prefers the least-loaded holder (Discussion 2: "always moved from the
     least loaded node storing the replica").
     """
-    best: Optional[Tuple] = None
-    for rep in task.replicas:
-        if rep == dst:
-            continue
-        rows = ledger.rows(ledger.fabric.path(rep, dst))
-        bw = ledger.path_bandwidth(rows, at)
-        load = idle.get(rep, 0.0) if (prefer_least_loaded and idle) else 0.0
-        key = (load, -bw, len(rows), rep)
-        if best is None or key < best[0]:
-            best = (key, rep, rows)
-    assert best is not None, f"task {task.tid} has no off-node replica"
-    return best[1], best[2]
+    load = idle if (prefer_least_loaded and idle) else None
+    return choose_source(task, dst, ledger, at, load=load)
 
 
 def schedule_bass(
@@ -86,100 +71,4 @@ def schedule_bass(
     seconds, which is what "deployable at 1000+ nodes" requires of a
     central controller.
     """
-    idle = dict(instance.idle)
-    ledger = ledger if ledger is not None else instance.fresh_ledger()
-    tasks = {t.tid: t for t in instance.tasks}
-    seq = list(order) if order is not None else [t.tid for t in instance.tasks]
-    out: List[Assignment] = []
-    heap = MinnowHeap(idle, instance.workers)
-
-    for tid in seq:
-        task = tasks[tid]
-        out.append(_assign_one(task, idle, ledger, instance.workers, heap))
-
-    return Schedule(out, ledger, kinds={t.tid: t.kind for t in instance.tasks})
-
-
-class MinnowHeap:
-    """Lazy min-heap over worker idle times (deterministic name tie-break)."""
-
-    def __init__(self, idle: Dict[str, float], workers: Sequence[str]):
-        import heapq
-
-        self._heapq = heapq
-        self._heap = [(idle[n], n) for n in workers]
-        heapq.heapify(self._heap)
-
-    def minnow(self, idle: Dict[str, float]) -> str:
-        h = self._heap
-        while True:
-            t, n = h[0]
-            if abs(idle[n] - t) <= _EPS:
-                return n
-            self._heapq.heapreplace(h, (idle[n], n))
-
-    def update(self, node: str, new_idle: float) -> None:
-        self._heapq.heappush(self._heap, (new_idle, node))
-
-
-def _assign_one(
-    task: Task,
-    idle: Dict[str, float],
-    ledger: TimeSlotLedger,
-    workers: Sequence[str],
-    heap: Optional["MinnowHeap"] = None,
-) -> Assignment:
-    minnow = heap.minnow(idle) if heap is not None else pick_minnow(idle, workers)
-    loc = pick_local(task, idle, workers)
-
-    if loc is not None and (minnow == loc or idle[loc] <= idle[minnow] + _EPS):
-        # Case 1.1 — local is optimal, no movement (Eq. 1 with BW=∞).
-        return _commit_local(task, loc, idle, heap)
-
-    if loc is not None:
-        # Case 1.2 / 1.3 — tradeoff governed by the TS ledger.
-        yc_loc = completion_time(task.compute, 0.0, idle[loc])
-        src, rows = pick_source(task, minnow, ledger, idle[minnow])
-        plan = ledger.plan_transfer(task.size, rows, not_before=idle[minnow])
-        tm = plan.end - plan.start if plan.slot_fracs else 0.0
-        yc_min = completion_time(task.compute, 0.0, idle[minnow]) + tm
-        # Algorithm 1 line 8: bandwidth needed so that ΥC_minnow < ΥC_loc.
-        tm_budget = yc_loc - task.compute - idle[minnow]
-        bw_needed = task.size / tm_budget if tm_budget > _EPS else float("inf")
-        if yc_min < yc_loc - _EPS:
-            # Case 1.2 — BW_{i,minnow} ≤ BW_rl: go remote, reserve the slots.
-            ledger.commit(plan)
-            start = plan.end if plan.slot_fracs else idle[minnow]
-            finish = start + task.compute
-            idle[minnow] = finish
-            if heap is not None:
-                heap.update(minnow, finish)
-            return Assignment(task.tid, minnow, src, plan, start, finish, bw_needed)
-        # Case 1.3 — residue insufficient: stay local.
-        return _commit_local(task, loc, idle, heap, bw_needed=bw_needed)
-
-    # Case 2 — locality starvation: remote on ND_minnow with reservation.
-    src, rows = pick_source(task, minnow, ledger, idle[minnow])
-    plan = ledger.plan_transfer(task.size, rows, not_before=idle[minnow])
-    ledger.commit(plan)
-    start = plan.end if plan.slot_fracs else idle[minnow]
-    finish = start + task.compute
-    idle[minnow] = finish
-    if heap is not None:
-        heap.update(minnow, finish)
-    return Assignment(task.tid, minnow, src, plan, start, finish)
-
-
-def _commit_local(
-    task: Task,
-    node: str,
-    idle: Dict[str, float],
-    heap: Optional["MinnowHeap"] = None,
-    bw_needed: Optional[float] = None,
-) -> Assignment:
-    start = idle[node]
-    finish = start + task.compute
-    idle[node] = finish
-    if heap is not None:
-        heap.update(node, finish)
-    return Assignment(task.tid, node, None, None, start, finish, bw_needed)
+    return run_policy(BassPolicy(), instance, ledger, order=order)

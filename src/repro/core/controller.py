@@ -1,0 +1,820 @@
+"""Online event-driven scheduling core (see DESIGN.md §1).
+
+The paper's BASS controller is inherently *online*: tasks and background
+flows arrive while the SDN controller holds a live global view.  This module
+is that controller, split into three layers:
+
+* :class:`ClusterState` — the shared mutable world: idle map ``ΥI_j``, the
+  lazy :class:`MinnowHeap`, the :class:`~repro.core.timeslot.TimeSlotLedger`
+  and the fabric.  ``commit_local`` / ``commit_remote`` are the *single*
+  source of truth for Assignment emission — every policy books work through
+  them, so idle times, the minnow heap and the ledger can never drift apart.
+* :class:`SchedulingPolicy` — the per-event decision protocol.  ``place``
+  handles one arriving task, ``place_batch`` a job's task list.  BASS, HDS,
+  BAR and Pre-BASS are policies (:data:`POLICIES`); the historical
+  ``schedule_*(instance, ledger)`` entry points in ``bass``/``baselines``/
+  ``prebass`` are thin offline wrappers that build a state, run the policy
+  once, and wrap the result in a :class:`~repro.core.tasks.Schedule` —
+  byte-identical to the pre-refactor batch schedulers.
+* :class:`ClusterController` — the event loop: ``submit(tasks, at=...)``
+  queues a job arrival, ``inject_flow`` queues dynamic background
+  cross-traffic, ``reserve_transfer_at`` queues a raw flow reservation
+  (training-side gradient sync), and ``run_until(t)`` / ``run()`` drain the
+  event queue in time order, producing per-job assignments and
+  :class:`~repro.core.simulator.JobMetrics`.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import (
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+)
+
+import numpy as np
+
+from .tasks import (
+    Assignment,
+    BackgroundFlow,
+    Instance,
+    Schedule,
+    Task,
+    completion_time,
+)
+from .timeslot import TimeSlotLedger, TransferPlan
+from .topology import Fabric
+
+_EPS = 1e-9
+
+
+class MinnowHeap:
+    """Lazy min-heap over worker idle times (deterministic name tie-break).
+
+    ``ND_minnow`` lookups stay O(log n) amortized across thousands of
+    placements; stale entries are repaired on pop instead of deleted.
+    """
+
+    def __init__(self, idle: Dict[str, float], workers: Sequence[str]):
+        self._heap = [(idle[n], n) for n in workers]
+        heapq.heapify(self._heap)
+
+    def minnow(self, idle: Dict[str, float]) -> str:
+        h = self._heap
+        while True:
+            t, n = h[0]
+            if abs(idle[n] - t) <= _EPS:
+                return n
+            heapq.heapreplace(h, (idle[n], n))
+
+    def update(self, node: str, new_idle: float) -> None:
+        heapq.heappush(self._heap, (new_idle, node))
+
+
+def pick_minnow(idle: Dict[str, float], workers: Sequence[str]) -> str:
+    """``ND_minnow``: the worker whose available idle time is minimum."""
+    return min(workers, key=lambda n: (idle[n], n))
+
+
+def pick_local(
+    task: Task, idle: Dict[str, float], workers: Sequence[str]
+) -> Optional[str]:
+    """``ND_loc``: least-loaded *available* replica holder, or None (Case 2)."""
+    holders = [n for n in task.replicas if n in workers]
+    if not holders:
+        return None
+    return min(holders, key=lambda n: (idle[n], n))
+
+
+def choose_source(
+    task: Task,
+    dst: str,
+    ledger: TimeSlotLedger,
+    at: float,
+    load: Optional[Dict[str, float]] = None,
+) -> Tuple[str, Tuple[int, ...]]:
+    """Choose the replica to move data *from* (``ND_dataSrc``).
+
+    Base BASS picks the replica whose path to ``dst`` has the most residual
+    bandwidth at transfer time (ties: fewer hops, then name); with ``load``
+    given (Pre-BASS, Discussion 2) the least-loaded holder wins first.  All
+    candidate (source, destination) pairs are scored in one numpy pass via
+    :meth:`TimeSlotLedger.path_bandwidth_batch`.
+    """
+    cands = [rep for rep in task.replicas if rep != dst]
+    assert cands, f"task {task.tid} has no off-node replica"
+    rows_list = [ledger.rows(ledger.fabric.path(rep, dst)) for rep in cands]
+    bws = ledger.path_bandwidth_batch(rows_list, at)
+    best = min(
+        range(len(cands)),
+        key=lambda i: (
+            load.get(cands[i], 0.0) if load is not None else 0.0,
+            -bws[i],
+            len(rows_list[i]),
+            cands[i],
+        ),
+    )
+    return cands[best], rows_list[best]
+
+
+def nearest_source(
+    task: Task, dst: str, ledger: TimeSlotLedger
+) -> Tuple[str, Tuple[int, ...]]:
+    """Fewest-hop replica (HDS/BAR's bandwidth-oblivious choice)."""
+    best = None
+    for rep in task.replicas:
+        if rep == dst:
+            continue
+        rows = ledger.rows(ledger.fabric.path(rep, dst))
+        key = (len(rows), rep)
+        if best is None or key < best[0]:
+            best = (key, rep, rows)
+    assert best is not None
+    return best[1], best[2]
+
+
+# ---------------------------------------------------------------------------
+# ClusterState — the shared mutable world every policy operates on
+# ---------------------------------------------------------------------------
+
+
+class ClusterState:
+    """Idle map + minnow heap + TS ledger + fabric, with commit_* as the
+    single Assignment-emission path (DESIGN.md §1)."""
+
+    def __init__(
+        self,
+        fabric: Fabric,
+        workers: Sequence[str],
+        idle: Optional[Dict[str, float]] = None,
+        ledger: Optional[TimeSlotLedger] = None,
+        slot_duration: float = 1.0,
+        horizon_slots: int = 256,
+        background: Sequence[BackgroundFlow] = (),
+    ) -> None:
+        self.fabric = fabric
+        self.workers = list(workers)
+        idle = idle or {}
+        self.idle: Dict[str, float] = {
+            n: float(idle.get(n, 0.0)) for n in self.workers
+        }
+        self.ledger = (
+            ledger
+            if ledger is not None
+            else TimeSlotLedger(fabric, slot_duration, horizon_slots)
+        )
+        self.background: List[BackgroundFlow] = list(background)
+        self.heap = MinnowHeap(self.idle, self.workers)
+        self.now = 0.0
+
+    @classmethod
+    def from_instance(
+        cls, instance: Instance, ledger: Optional[TimeSlotLedger] = None
+    ) -> "ClusterState":
+        """Offline-wrapper entry: ledger defaults to ``instance.fresh_ledger()``
+        (background flows pre-booked, exactly as the batch schedulers did)."""
+        return cls(
+            instance.fabric,
+            instance.workers,
+            instance.idle,
+            ledger=ledger if ledger is not None else instance.fresh_ledger(),
+            slot_duration=instance.slot_duration,
+            background=instance.background,
+        )
+
+    # -- queries ------------------------------------------------------------
+    def minnow(self) -> str:
+        return self.heap.minnow(self.idle)
+
+    def choose_source(
+        self,
+        task: Task,
+        dst: str,
+        at: float,
+        load: Optional[Dict[str, float]] = None,
+    ) -> Tuple[str, Tuple[int, ...]]:
+        return choose_source(task, dst, self.ledger, at, load=load)
+
+    def scratch_ledger(self, horizon_slots: int = 256) -> TimeSlotLedger:
+        """A fresh ledger seeded with every background flow seen so far —
+        what BAR uses for its static-belief phase-1/adjustment reasoning."""
+        ledger = TimeSlotLedger(
+            self.fabric, self.ledger.slot_duration, horizon_slots
+        )
+        for bg in self.background:
+            ledger.occupy(
+                ledger.rows(self.fabric.path(bg.src, bg.dst)),
+                bg.start,
+                bg.end,
+                bg.fraction,
+            )
+        return ledger
+
+    # -- mutations ----------------------------------------------------------
+    def advance(self, t: float) -> None:
+        """Online clock: nothing can start before ``t``, so clamp ΥI_j up.
+
+        Rebuilds the minnow heap once instead of pushing per-worker
+        entries — an event stream on a big fleet would otherwise grow the
+        heap by O(workers) per event without ever popping them."""
+        if t < self.now:
+            raise ValueError(f"time moves backwards: {t} < {self.now}")
+        self.now = t
+        dirty = False
+        for n in self.workers:
+            if self.idle[n] < t:
+                self.idle[n] = t
+                dirty = True
+        if dirty:
+            self.reheap()
+
+    def set_idle(self, idle: Dict[str, float]) -> None:
+        """Replace idle estimates wholesale (ProgressRate refresh, §V.A)."""
+        for n, v in idle.items():
+            if n in self.idle:
+                self.idle[n] = float(v)
+        self.reheap()
+
+    def reheap(self) -> None:
+        self.heap = MinnowHeap(self.idle, self.workers)
+
+    def observe_flow(self, flow: BackgroundFlow) -> None:
+        """Dynamic background cross-traffic: book it on the ledger and
+        remember it so scratch ledgers (BAR) see it too."""
+        self.background.append(flow)
+        self.ledger.occupy(
+            self.ledger.rows(self.fabric.path(flow.src, flow.dst)),
+            flow.start,
+            flow.end,
+            flow.fraction,
+        )
+
+    # -- the single Assignment-emission path -------------------------------
+    def commit_local(
+        self, task: Task, node: str, bw_needed: Optional[float] = None
+    ) -> Assignment:
+        """Run ``task`` data-locally on ``node`` (Eq. 1 with BW=∞)."""
+        start = self.idle[node]
+        finish = start + task.compute
+        self.idle[node] = finish
+        self.heap.update(node, finish)
+        return Assignment(task.tid, node, None, None, start, finish, bw_needed)
+
+    def commit_remote(
+        self,
+        task: Task,
+        node: str,
+        src: str,
+        plan: TransferPlan,
+        bw_needed: Optional[float] = None,
+    ) -> Assignment:
+        """Run ``task`` on ``node`` with data moved from ``src``: reserve the
+        plan's TS slots on every path link and book the compute."""
+        self.ledger.commit(plan)
+        start = plan.end if plan.slot_fracs else self.idle[node]
+        finish = start + task.compute
+        self.idle[node] = finish
+        self.heap.update(node, finish)
+        return Assignment(task.tid, node, src, plan, start, finish, bw_needed)
+
+    # -- snapshots (Pre-BASS guard, what-if planning) -----------------------
+    def snapshot(self) -> Tuple:
+        return (dict(self.idle), self.ledger.reserved.copy(), self.now,
+                len(self.background))
+
+    def restore(self, snap: Tuple) -> None:
+        idle, reserved, now, n_bg = snap
+        self.idle = dict(idle)
+        self.ledger.reserved = reserved.copy()
+        self.now = now
+        del self.background[n_bg:]
+        self.reheap()
+
+    def clone(self) -> "ClusterState":
+        dup = ClusterState.__new__(ClusterState)
+        dup.fabric = self.fabric
+        dup.workers = list(self.workers)
+        dup.idle = dict(self.idle)
+        dup.ledger = TimeSlotLedger.__new__(TimeSlotLedger)
+        dup.ledger.fabric = self.ledger.fabric
+        dup.ledger.slot_duration = self.ledger.slot_duration
+        dup.ledger._row = self.ledger._row
+        dup.ledger._names = self.ledger._names
+        dup.ledger.capacity = self.ledger.capacity
+        dup.ledger.reserved = self.ledger.reserved.copy()
+        dup.background = list(self.background)
+        dup.heap = MinnowHeap(dup.idle, dup.workers)
+        dup.now = self.now
+        return dup
+
+
+# ---------------------------------------------------------------------------
+# SchedulingPolicy protocol + the four paper policies
+# ---------------------------------------------------------------------------
+
+
+class SchedulingPolicy(Protocol):
+    """Per-event scheduling decisions over a shared :class:`ClusterState`."""
+
+    name: str
+
+    def place(self, task: Task, state: ClusterState) -> Assignment:
+        """Decide one arriving task."""
+        ...
+
+    def place_batch(
+        self, tasks: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        """Decide a job's task list (arrival of a whole job)."""
+        ...
+
+
+class BassPolicy:
+    """Algorithm 1, one decision per arriving task (see ``bass`` module docs
+    for the Case 1.1/1.2/1.3/2 taxonomy)."""
+
+    name = "bass"
+
+    def place(self, task: Task, state: ClusterState) -> Assignment:
+        idle = state.idle
+        minnow = state.minnow()
+        loc = pick_local(task, idle, state.workers)
+
+        if loc is not None and (minnow == loc or idle[loc] <= idle[minnow] + _EPS):
+            # Case 1.1 — local is optimal, no movement (Eq. 1 with BW=∞).
+            return state.commit_local(task, loc)
+
+        if loc is not None:
+            # Case 1.2 / 1.3 — tradeoff governed by the TS ledger.
+            yc_loc = completion_time(task.compute, 0.0, idle[loc])
+            src, rows = state.choose_source(task, minnow, at=idle[minnow])
+            plan = state.ledger.plan_transfer(
+                task.size, rows, not_before=idle[minnow]
+            )
+            tm = plan.end - plan.start if plan.slot_fracs else 0.0
+            yc_min = completion_time(task.compute, 0.0, idle[minnow]) + tm
+            # Algorithm 1 line 8: bandwidth needed so that ΥC_minnow < ΥC_loc.
+            tm_budget = yc_loc - task.compute - idle[minnow]
+            bw_needed = task.size / tm_budget if tm_budget > _EPS else float("inf")
+            if yc_min < yc_loc - _EPS:
+                # Case 1.2 — BW_{i,minnow} ≤ BW_rl: go remote, reserve slots.
+                return state.commit_remote(
+                    task, minnow, src, plan, bw_needed=bw_needed
+                )
+            # Case 1.3 — residue insufficient: stay local.
+            return state.commit_local(task, loc, bw_needed=bw_needed)
+
+        # Case 2 — locality starvation: remote on ND_minnow with reservation.
+        src, rows = state.choose_source(task, minnow, at=idle[minnow])
+        plan = state.ledger.plan_transfer(task.size, rows, not_before=idle[minnow])
+        return state.commit_remote(task, minnow, src, plan)
+
+    def place_batch(
+        self, tasks: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        return [self.place(t, state) for t in tasks]
+
+
+class HdsPolicy:
+    """Hadoop Default Scheduler (Discussion 1): node-driven greedy, local
+    tasks first, bandwidth-oblivious decisions whose transfers still pay."""
+
+    name = "hds"
+
+    def place(self, task: Task, state: ClusterState) -> Assignment:
+        return self.place_batch([task], state)[0]
+
+    def place_batch(
+        self, tasks: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        idle = state.idle
+        unstarted = {t.tid: t for t in tasks}
+        out: List[Assignment] = []
+        # Event heap of (idle_time, node); deterministic tie-break on name.
+        heap: List[Tuple[float, str]] = sorted(
+            (idle[n], n) for n in state.workers
+        )
+        heapq.heapify(heap)
+
+        while unstarted and heap:
+            t_idle, node = heapq.heappop(heap)
+            if abs(idle[node] - t_idle) > _EPS:
+                continue  # stale entry
+            local = [tid for tid, t in unstarted.items() if node in t.replicas]
+            if local:
+                task = unstarted.pop(min(local))
+                out.append(state.commit_local(task, node))
+            else:
+                task = unstarted.pop(min(unstarted))
+                src, rows = nearest_source(task, node, state.ledger)
+                plan = state.ledger.plan_transfer(
+                    task.size, rows, not_before=t_idle
+                )
+                out.append(state.commit_remote(task, node, src, plan))
+            heapq.heappush(heap, (idle[node], node))
+
+        out.sort(key=lambda a: a.tid)
+        return out
+
+
+class BarPolicy:
+    """BAR (Jin et al., CCGrid'11): HDS phase-1 allocation, latest-task
+    remote adjustment with *static* bandwidth beliefs, then realization of
+    the chosen queues against the real ledger."""
+
+    name = "bar"
+
+    def place(self, task: Task, state: ClusterState) -> Assignment:
+        return self.place_batch([task], state)[0]
+
+    def place_batch(
+        self, tasks_seq: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        tasks = {t.tid: t for t in tasks_seq}
+        base_idle = dict(state.idle)
+        fabric = state.fabric
+
+        # Phase 1 + move decisions run on a scratch state (BAR's own beliefs);
+        # the caller-visible ledger only receives the realized transfers.
+        scratch = ClusterState(
+            fabric, state.workers, base_idle, ledger=state.scratch_ledger()
+        )
+        phase1 = HdsPolicy().place_batch(tasks_seq, scratch)
+        queues: Dict[str, List[Assignment]] = {}
+        for a in sorted(phase1, key=lambda a: (a.start, a.tid)):
+            queues.setdefault(a.node, []).append(a)
+
+        def static_tm(task: Task, node: str) -> Tuple[float, Optional[str]]:
+            if node in task.replicas:
+                return 0.0, None
+            best = None
+            for rep in task.replicas:
+                bw = fabric.path_capacity(rep, node)
+                tm = task.size / bw if bw > 0 else float("inf")
+                if best is None or tm < best[0]:
+                    best = (tm, rep)
+            assert best is not None
+            return best
+
+        def recompute(queues: Dict[str, List[Assignment]]) -> None:
+            for node, q in queues.items():
+                t = base_idle.get(node, 0.0)
+                for a in q:
+                    tm, src = static_tm(tasks[a.tid], node)
+                    a.node, a.source, a.transfer = node, src, None
+                    a.start = t + tm
+                    a.finish = a.start + tasks[a.tid].compute
+                    t = a.finish
+
+        recompute(queues)
+
+        while True:
+            all_assign = [a for q in queues.values() for a in q]
+            latest = max(all_assign, key=lambda a: (a.finish, a.tid))
+            task = tasks[latest.tid]
+            # Candidate: append to another node's queue end.
+            best: Optional[Tuple[float, str]] = None
+            for node in state.workers:
+                if node == latest.node:
+                    continue
+                q = queues.setdefault(node, [])
+                t_avail = q[-1].finish if q else base_idle.get(node, 0.0)
+                tm, _src = static_tm(task, node)
+                yc = t_avail + tm + task.compute
+                if yc < latest.finish - _EPS and (best is None or (yc, node) < best):
+                    best = (yc, node)
+            if best is None:
+                break
+            _yc, node = best
+            queues[latest.node].remove(latest)
+            queues[node].append(latest)
+            recompute(queues)
+
+        # --- Realization: BAR's *decisions* used static beliefs; the chosen
+        # per-node queues now replay against the real shared state so
+        # contended moves pay their true movement time (paper §I critique
+        # "disregard available bandwidth", made honest).
+        heads: Dict[str, int] = {n: 0 for n in queues}
+        out: List[Assignment] = []
+        while True:
+            ready = [n for n, q in queues.items() if heads[n] < len(q)]
+            if not ready:
+                break
+            node = min(ready, key=lambda n: (state.idle[n], n))
+            a = queues[node][heads[node]]
+            heads[node] += 1
+            task = tasks[a.tid]
+            if node in task.replicas:
+                out.append(state.commit_local(task, node))
+            else:
+                src, rows = nearest_source(task, node, state.ledger)
+                plan = state.ledger.plan_transfer(
+                    task.size, rows, not_before=state.idle[node]
+                )
+                out.append(state.commit_remote(task, node, src, plan))
+
+        out.sort(key=lambda a: a.tid)
+        return out
+
+
+class PreBassPolicy:
+    """Pre-BASS (Discussion 2 / Example 2): BASS, then prefetch every remote
+    transfer as early as the ledger allows, from the least-loaded holder.
+
+    With ``guard=True`` (the default, and the offline-wrapper behaviour when
+    no shared ledger is passed) the refined schedule is adopted only if it
+    does not finish later than plain BASS — prefetching with a different
+    source can, on adversarial ledgers, push a later task's window back.
+    """
+
+    name = "prebass"
+
+    def __init__(self, guard: bool = True):
+        self.guard = guard
+
+    def place(self, task: Task, state: ClusterState) -> Assignment:
+        return self.place_batch([task], state)[0]
+
+    def place_batch(
+        self, tasks_seq: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        base_mk: Optional[float] = None
+        if self.guard:
+            probe = BassPolicy().place_batch(tasks_seq, state.clone())
+            base_mk = max((a.finish for a in probe), default=0.0)
+        snap = state.snapshot() if self.guard else None
+        out = self._prefetch(tasks_seq, state)
+        refined_mk = max((a.finish for a in out), default=0.0)
+        if base_mk is not None and refined_mk > base_mk + 1e-9:
+            assert snap is not None
+            state.restore(snap)
+            return BassPolicy().place_batch(tasks_seq, state)
+        return out
+
+    def _prefetch(
+        self, tasks_seq: Sequence[Task], state: ClusterState
+    ) -> List[Assignment]:
+        idle0 = dict(state.idle)
+        # Prefetch can start no earlier than the job's arrival (state.now;
+        # 0.0 for the offline wrappers) — replanning at t=0 for a job that
+        # arrived at t=25 would book bandwidth that already elapsed.
+        origin = state.now
+        base = BassPolicy().place_batch(tasks_seq, state)
+        ledger = state.ledger
+        tasks = {t.tid: t for t in tasks_seq}
+
+        # Release every remote transfer, then re-plan in assignment order.
+        remote = [a for a in base if a.transfer is not None]
+        for a in remote:
+            ledger.release(a.transfer)
+
+        # Node availability proxy for "least loaded replica holder".
+        load: Dict[str, float] = dict(idle0)
+        for a in base:
+            load[a.node] = max(load.get(a.node, 0.0), a.finish)
+
+        ready: Dict[int, float] = {}
+        for a in base:
+            if a.transfer is None:
+                ready[a.tid] = 0.0
+                continue
+            task = tasks[a.tid]
+            src, rows = choose_source(task, a.node, ledger, at=origin, load=load)
+            plan = ledger.plan_transfer(task.size, rows, not_before=origin)
+            ledger.commit(plan)
+            a.source, a.transfer = src, plan
+            ready[a.tid] = plan.end
+
+        # Recompute per-node timelines with prefetched readiness.
+        queues: Dict[str, List[Assignment]] = {}
+        for a in sorted(base, key=lambda a: (a.start, a.tid)):
+            queues.setdefault(a.node, []).append(a)
+        out: List[Assignment] = []
+        for node, queue in queues.items():
+            t = idle0.get(node, 0.0)
+            for a in queue:
+                a.start = max(t, ready.get(a.tid, 0.0))
+                a.finish = a.start + tasks[a.tid].compute
+                t = a.finish
+                out.append(a)
+            # Prefetch pulled the node's timeline forward: resync the shared
+            # idle map (BASS's bookkeeping assumed the un-prefetched starts).
+            state.idle[node] = t
+        state.reheap()
+
+        out.sort(key=lambda a: a.tid)
+        return out
+
+
+POLICIES: Dict[str, Callable[[], SchedulingPolicy]] = {
+    "bass": BassPolicy,
+    "hds": HdsPolicy,
+    "bar": BarPolicy,
+    "prebass": PreBassPolicy,
+}
+
+
+def run_policy(
+    policy: SchedulingPolicy,
+    instance: Instance,
+    ledger: Optional[TimeSlotLedger] = None,
+    order: Optional[Sequence[int]] = None,
+) -> Schedule:
+    """Offline wrapper core: one batch decision over a frozen Instance.
+
+    This is what ``schedule_bass``/``schedule_hds``/``schedule_bar``/
+    ``schedule_prebass`` now are — byte-identical to the historical batch
+    schedulers (enforced by the equivalence tests).
+    """
+    state = ClusterState.from_instance(instance, ledger)
+    if order is not None:
+        tasks_by_id = {t.tid: t for t in instance.tasks}
+        tasks: Sequence[Task] = [tasks_by_id[tid] for tid in order]
+    else:
+        tasks = instance.tasks
+    out = policy.place_batch(tasks, state)
+    return Schedule(
+        out, state.ledger, kinds={t.tid: t.kind for t in instance.tasks}
+    )
+
+
+# ---------------------------------------------------------------------------
+# ClusterController — the online event loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JobRecord:
+    """One submitted job: arrival time, tasks, and (once placed) results."""
+
+    jid: int
+    submit_at: float
+    tasks: List[Task]
+    assignments: List[Assignment] = field(default_factory=list)
+    placed: bool = False
+
+    @property
+    def makespan(self) -> float:
+        """Absolute completion time of the job's last task."""
+        return max((a.finish for a in self.assignments), default=self.submit_at)
+
+
+class ClusterController:
+    """The SDN controller as a long-lived service: multi-job arrival
+    streams, dynamic background flows, and raw flow reservations share one
+    :class:`ClusterState` and one :class:`SchedulingPolicy`."""
+
+    def __init__(
+        self,
+        fabric: Fabric,
+        workers: Sequence[str],
+        policy: "SchedulingPolicy | str" = "bass",
+        idle: Optional[Dict[str, float]] = None,
+        slot_duration: float = 1.0,
+        horizon_slots: int = 256,
+        background: Sequence[BackgroundFlow] = (),
+    ) -> None:
+        if isinstance(policy, str):
+            policy = POLICIES[policy]()
+        self.policy = policy
+        self.state = ClusterState(
+            fabric,
+            workers,
+            idle,
+            slot_duration=slot_duration,
+            horizon_slots=horizon_slots,
+        )
+        for bg in background:
+            self.state.observe_flow(bg)
+        self.jobs: Dict[int, JobRecord] = {}
+        self.flows: Dict[object, TransferPlan] = {}
+        self._events: List[Tuple[float, int, str, tuple]] = []
+        self._seq = 0
+        self._next_jid = 0       # monotonic: ids stay unique if jobs are pruned
+        self._auto_flow = 0      # untagged reservations get ("flow", n) keys
+        self.now = 0.0
+
+    @classmethod
+    def from_instance(
+        cls, instance: Instance, policy: "SchedulingPolicy | str" = "bass"
+    ) -> "ClusterController":
+        return cls(
+            instance.fabric,
+            instance.workers,
+            policy,
+            idle=instance.idle,
+            slot_duration=instance.slot_duration,
+            background=instance.background,
+        )
+
+    # -- event submission ---------------------------------------------------
+    def _push(self, at: float, kind: str, payload: tuple) -> None:
+        if at < self.now - _EPS:
+            raise ValueError(f"event at {at} is in the controller's past {self.now}")
+        heapq.heappush(self._events, (at, self._seq, kind, payload))
+        self._seq += 1
+
+    def submit(
+        self,
+        tasks: Sequence[Task],
+        at: float = 0.0,
+        jid: Optional[int] = None,
+    ) -> int:
+        """Queue a job (its full task list) to arrive at time ``at``."""
+        if jid is None:
+            jid = self._next_jid
+        if jid in self.jobs:
+            raise ValueError(f"duplicate job id {jid}")
+        self._next_jid = max(self._next_jid, jid + 1)
+        self.jobs[jid] = JobRecord(jid, at, list(tasks))
+        self._push(at, "job", (jid,))
+        return jid
+
+    def inject_flow(
+        self, flow: BackgroundFlow, at: Optional[float] = None
+    ) -> None:
+        """Queue dynamic background cross-traffic (defaults to its start)."""
+        self._push(flow.start if at is None else at, "flow", (flow,))
+
+    def reserve_transfer_at(
+        self,
+        at: float,
+        size: float,
+        links: Sequence[str],
+        tag: object = None,
+    ) -> None:
+        """Queue a raw flow reservation on explicit links at time ``at`` —
+        the training-side gradient-sync entry (``distributed.dcn``)."""
+        self._push(at, "transfer", (size, tuple(links), tag))
+
+    # -- the loop -----------------------------------------------------------
+    def run_until(self, t: float) -> None:
+        """Process every queued event with fire time ≤ ``t``, in time order
+        (ties: submission order)."""
+        while self._events and self._events[0][0] <= t + _EPS:
+            at, _seq, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, at)
+            self.state.advance(max(self.state.now, at))
+            if kind == "job":
+                (jid,) = payload
+                rec = self.jobs[jid]
+                rec.assignments = self.policy.place_batch(rec.tasks, self.state)
+                rec.placed = True
+            elif kind == "flow":
+                (flow,) = payload
+                self.state.observe_flow(flow)
+            elif kind == "transfer":
+                size, links, tag = payload
+                rows = self.state.ledger.rows(links)
+                plan = self.state.ledger.plan_transfer(size, rows, not_before=at)
+                self.state.ledger.commit(plan)
+                if tag is None:
+                    tag = ("flow", self._auto_flow)
+                    self._auto_flow += 1
+                self.flows[tag] = plan
+        self.now = max(self.now, t)
+
+    def run(self) -> None:
+        """Drain the event queue completely."""
+        while self._events:
+            self.run_until(self._events[0][0])
+
+    # -- results ------------------------------------------------------------
+    def job_schedule(self, jid: int) -> Schedule:
+        rec = self.jobs[jid]
+        return Schedule(
+            list(rec.assignments),
+            self.state.ledger,
+            kinds={t.tid: t.kind for t in rec.tasks},
+        )
+
+    def schedule(self) -> Schedule:
+        """All placed assignments across jobs, as one Schedule."""
+        out = [a for rec in self.jobs.values() for a in rec.assignments]
+        kinds = {
+            t.tid: t.kind for rec in self.jobs.values() for t in rec.tasks
+        }
+        out.sort(key=lambda a: a.tid)
+        return Schedule(out, self.state.ledger, kinds=kinds)
+
+    def job_metrics(self, jid: int):
+        """Per-job Table-I row relative to the job's arrival: MT/RT/JT/LR."""
+        from .simulator import JobMetrics
+
+        rec = self.jobs[jid]
+        if not rec.placed:
+            raise ValueError(f"job {jid} not placed yet (run_until?)")
+        kinds = {t.tid: t.kind for t in rec.tasks}
+        jt = rec.makespan - rec.submit_at
+        maps = [
+            a.finish for a in rec.assignments if kinds.get(a.tid, "map") == "map"
+        ]
+        mt = (max(maps) - rec.submit_at) if maps else jt
+        n = len(rec.assignments)
+        lr = sum(1 for a in rec.assignments if a.local) / n if n else 0.0
+        return JobMetrics(mt=mt, rt=jt - mt, jt=jt, lr=lr)

@@ -7,13 +7,16 @@ holder.  Compute on each node then starts at ``max(node availability,
 transfer end)``, which can pull every later task on that node forward —
 Example 2: TK1's transfer moves from TS4..TS8 to TS1..TS5, node N1 finishes
 at 32 s instead of 35 s and the job at 34 s (last finisher becomes TK8).
+
+The algorithm lives in :class:`repro.core.controller.PreBassPolicy`; this
+wrapper is the historical offline entry point (DESIGN.md §1).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Optional
 
-from .bass import pick_source, schedule_bass
-from .tasks import Assignment, Instance, Schedule
+from .controller import PreBassPolicy, run_policy  # noqa: F401
+from .tasks import Instance, Schedule
 from .timeslot import TimeSlotLedger
 
 
@@ -22,62 +25,10 @@ def schedule_prebass(
 ) -> Schedule:
     """BASS + prefetch refinement; never worse than plain BASS.
 
-    The controller holds the global view, so it evaluates the prefetched
-    schedule against the base one and adopts whichever finishes earlier —
-    prefetching with a different (least-loaded) source can, on adversarial
-    ledgers, push a later task's window back, and the paper's intent
-    ("further reduce the job completion time") is a refinement, not a
-    regression."""
-    base_makespan = schedule_bass(
-        instance, instance.fresh_ledger() if ledger is None else None
-    ).makespan if ledger is None else None
-    out = _prefetch_schedule(instance, ledger)
-    if base_makespan is not None and out.makespan > base_makespan + 1e-9:
-        return schedule_bass(instance, instance.fresh_ledger())
-    return out
-
-
-def _prefetch_schedule(
-    instance: Instance, ledger: Optional[TimeSlotLedger] = None
-) -> Schedule:
-    base = schedule_bass(instance, ledger)
-    ledger = base.ledger
-    tasks = {t.tid: t for t in instance.tasks}
-    idle0 = dict(instance.idle)
-
-    # Release every remote transfer, then re-plan in assignment order.
-    remote = [a for a in base.assignments if a.transfer is not None]
-    for a in remote:
-        ledger.release(a.transfer)
-
-    # Node availability proxy for "least loaded replica holder".
-    load: Dict[str, float] = dict(idle0)
-    for a in base.assignments:
-        load[a.node] = max(load.get(a.node, 0.0), a.finish)
-
-    ready: Dict[int, float] = {}
-    for a in base.assignments:
-        if a.transfer is None:
-            ready[a.tid] = 0.0
-            continue
-        task = tasks[a.tid]
-        src, rows = pick_source(
-            task, a.node, ledger, at=0.0, idle=load, prefer_least_loaded=True
-        )
-        plan = ledger.plan_transfer(task.size, rows, not_before=0.0)
-        ledger.commit(plan)
-        a.source, a.transfer = src, plan
-        ready[a.tid] = plan.end
-
-    # Recompute per-node timelines with prefetched readiness.
-    out: List[Assignment] = []
-    for node, queue in base.by_node().items():
-        t = idle0.get(node, 0.0)
-        for a in queue:
-            a.start = max(t, ready.get(a.tid, 0.0))
-            a.finish = a.start + tasks[a.tid].compute
-            t = a.finish
-            out.append(a)
-
-    out.sort(key=lambda a: a.tid)
-    return Schedule(out, ledger, kinds={t.tid: t.kind for t in instance.tasks})
+    The controller holds the global view, so when it owns the ledger (no
+    shared ledger passed in) it evaluates the prefetched schedule against
+    the base one and adopts whichever finishes earlier — prefetching with a
+    different (least-loaded) source can, on adversarial ledgers, push a
+    later task's window back, and the paper's intent ("further reduce the
+    job completion time") is a refinement, not a regression."""
+    return run_policy(PreBassPolicy(guard=ledger is None), instance, ledger)

@@ -36,30 +36,40 @@ class ReplayReport:
         return not self.violations
 
 
-def replay(instance: Instance, schedule: Schedule, atol: float = 1e-6) -> ReplayReport:
-    tasks = {t.tid: t for t in instance.tasks}
-    violations: List[str] = []
+def _replay_nodes(
+    schedule: Schedule,
+    tasks: Dict[int, Task],
+    idle: Dict[str, float],
+    violations: List[str],
+    arrival: Optional[Dict[int, float]] = None,
+    atol: float = 1e-6,
+) -> Dict[int, float]:
+    """Per-node sequential replay shared by :func:`replay` (one frozen job)
+    and :func:`replay_online` (multi-job arrival streams).
 
-    # 1. Link over-booking (ledger matrix is the committed state).
-    res = schedule.ledger.reserved
-    if (res > 1.0 + 1e-6).any():
-        worst = float(res.max())
-        violations.append(f"link over-booked: max reserved fraction {worst:.6f}")
-
-    # 2. Per-node sequential replay.
+    ``arrival`` maps tid → job submission time; a task can never start (nor
+    its transfer be planned) before its job arrived.
+    """
     finish: Dict[int, float] = {}
     for node, queue in schedule.by_node().items():
-        t = instance.idle.get(node, 0.0)
+        t = idle.get(node, 0.0)
         for a in queue:
             task = tasks[a.tid]
             ready = a.transfer.end if a.transfer is not None else 0.0
+            if arrival is not None:
+                ready = max(ready, arrival.get(a.tid, 0.0))
             start = max(t, ready)
-            end = start + task.compute
-            if start + atol < a.start - atol and abs(start - a.start) > atol:
-                pass  # prefetch may legally start later than possible; check below
             if a.start + atol < start:
                 violations.append(
                     f"task {a.tid} on {node} starts at {a.start} before feasible {start}"
+                )
+            # Schedulers never idle a node: the emitted start must equal the
+            # feasible start exactly (prefetch slack is a bug, not a freedom —
+            # Pre-BASS recomputes starts as max(node avail, transfer end)).
+            if a.start > start + atol:
+                violations.append(
+                    f"task {a.tid} on {node} idles until {a.start} although "
+                    f"feasible at {start}"
                 )
             end = a.start + task.compute  # replay honours the schedule's start
             if abs(end - a.finish) > atol:
@@ -71,12 +81,77 @@ def replay(instance: Instance, schedule: Schedule, atol: float = 1e-6) -> Replay
                     f"task {a.tid} computes at {a.start} before transfer ends "
                     f"at {a.transfer.end}"
                 )
+            if (
+                arrival is not None
+                and a.transfer is not None
+                and a.transfer.slot_fracs
+                and a.transfer.start + atol < arrival.get(a.tid, 0.0)
+            ):
+                violations.append(
+                    f"task {a.tid} transfer starts at {a.transfer.start} "
+                    f"before its job arrived at {arrival[a.tid]}"
+                )
             if a.start + atol < t:
                 violations.append(
                     f"task {a.tid} overlaps previous task on {node}: {a.start} < {t}"
                 )
             t = max(t, end)
             finish[a.tid] = end
+    return finish
+
+
+def _check_ledger(schedule: Schedule, violations: List[str]) -> None:
+    """Link over-booking (the ledger matrix is the committed state)."""
+    res = schedule.ledger.reserved
+    if (res > 1.0 + 1e-6).any():
+        worst = float(res.max())
+        violations.append(f"link over-booked: max reserved fraction {worst:.6f}")
+
+
+def replay(instance: Instance, schedule: Schedule, atol: float = 1e-6) -> ReplayReport:
+    tasks = {t.tid: t for t in instance.tasks}
+    violations: List[str] = []
+    _check_ledger(schedule, violations)
+    finish = _replay_nodes(schedule, tasks, instance.idle, violations, atol=atol)
+
+    missing = set(tasks) - set(finish)
+    if missing:
+        violations.append(f"unscheduled tasks: {sorted(missing)}")
+
+    mk = max(finish.values()) if finish else 0.0
+    return ReplayReport(mk, finish, violations)
+
+
+def replay_online(
+    jobs: Sequence[Tuple[float, Sequence[Task]]],
+    schedule: Schedule,
+    idle: Dict[str, float],
+    atol: float = 1e-6,
+) -> ReplayReport:
+    """Online cross-check: replay a multi-job stream's combined schedule.
+
+    ``jobs`` is the arrival stream ``[(submit_at, tasks), ...]`` (what was
+    fed to :meth:`~repro.core.controller.ClusterController.submit`);
+    ``schedule`` is the controller's combined output and ``idle`` the
+    cluster's initial ``ΥI_j``.  On top of the offline invariants (node
+    exclusivity, transfer-before-compute, no over-booking, no idling past
+    the feasible start) it checks *arrival causality*: no task starts — and
+    no transfer delivers — before its job was submitted.
+    """
+    tasks: Dict[int, Task] = {}
+    arrival: Dict[int, float] = {}
+    violations: List[str] = []
+    for submit_at, job_tasks in jobs:
+        for t in job_tasks:
+            if t.tid in tasks:
+                violations.append(f"duplicate tid {t.tid} across jobs")
+            tasks[t.tid] = t
+            arrival[t.tid] = submit_at
+
+    _check_ledger(schedule, violations)
+    finish = _replay_nodes(
+        schedule, tasks, idle, violations, arrival=arrival, atol=atol
+    )
 
     missing = set(tasks) - set(finish)
     if missing:

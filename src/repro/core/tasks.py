@@ -11,8 +11,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from .timeslot import TimeSlotLedger, TransferPlan
 from .topology import Fabric
 
@@ -80,13 +78,7 @@ class Instance:
         ledger = TimeSlotLedger(self.fabric, self.slot_duration, horizon_slots)
         for bg in self.background:
             rows = ledger.rows(self.fabric.path(bg.src, bg.dst))
-            s0 = ledger.slot_of(bg.start)
-            s1 = ledger.slot_of(max(bg.start, bg.end - 1e-9))
-            ledger._ensure(s1)
-            idx = list(rows)
-            ledger.reserved[idx, s0 : s1 + 1] = np.minimum(
-                ledger.reserved[idx, s0 : s1 + 1] + bg.fraction, 1.0
-            )
+            ledger.occupy(rows, bg.start, bg.end, bg.fraction)
         return ledger
 
 

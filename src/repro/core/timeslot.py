@@ -99,6 +99,28 @@ class TimeSlotLedger:
         resid = (1.0 - self.reserved[idx, slot]) * self.capacity[idx]
         return float(resid.min())
 
+    def path_bandwidth_batch(
+        self, rows_list: Sequence[Sequence[int]], t: float
+    ) -> np.ndarray:
+        """``BW_rl`` for many candidate paths in one numpy pass.
+
+        Element ``i`` equals ``path_bandwidth(rows_list[i], t)`` exactly —
+        the per-candidate min runs over a padded row matrix whose padding
+        repeats one of the candidate's own links, so duplicates cannot
+        change the minimum.
+        """
+        n = len(rows_list)
+        out = np.full(n, float("inf"))
+        live = [i for i in range(n) if rows_list[i]]
+        if not live:
+            return out
+        slot = self.slot_of(t)
+        self._ensure(slot)
+        pad = self._padded_rows([rows_list[i] for i in live])
+        resid = (1.0 - self.reserved[:, slot][pad]) * self.capacity[pad]
+        out[live] = resid.min(axis=1)
+        return out
+
     def min_path_bandwidth(self, rows: Sequence[int], t0: float, t1: float) -> float:
         """Worst-case ``BW_rl`` over the continuous window [t0, t1)."""
         if not rows:
@@ -124,6 +146,10 @@ class TimeSlotLedger:
 
         ``size`` is in capacity-units·seconds (e.g. Mbit when capacity is
         Mbps).  Returns a plan; nothing is committed until :meth:`commit`.
+
+        Dedicated single-path fast version of :meth:`plan_transfer_batch`
+        (the scheduling hot loop plans one chosen path per remote task);
+        the two must stay bit-identical — a property test enforces it.
         """
         if size <= 0 or not rows:
             return TransferPlan(tuple(rows), not_before, not_before, ())
@@ -163,6 +189,87 @@ class TimeSlotLedger:
             return TransferPlan(tuple(rows), start, end, fracs)
         raise RuntimeError("transfer does not fit within max_slots horizon")
 
+    def _padded_rows(self, rows_list: Sequence[Sequence[int]]) -> np.ndarray:
+        """Rectangular [n_candidates, max_path_len] row-index matrix; padding
+        repeats the candidate's own first link so max/min reductions over the
+        link axis are unaffected.  Callers must pass non-empty row lists."""
+        width = max(len(r) for r in rows_list)
+        pad = np.empty((len(rows_list), width), dtype=np.intp)
+        for i, r in enumerate(rows_list):
+            pad[i, : len(r)] = r
+            pad[i, len(r) :] = r[0]
+        return pad
+
+    def plan_transfer_batch(
+        self,
+        size: float,
+        rows_list: Sequence[Sequence[int]],
+        not_before: float = 0.0,
+        bandwidth_cap: Optional[float] = None,
+        max_slots: int = 1 << 16,
+    ) -> List[TransferPlan]:
+        """Greedy paper-policy plans for *all* candidate paths in one numpy
+        pass — the controller scores every (source, destination) option
+        without a Python loop per replica.
+
+        Element ``i`` is bit-identical to planning ``rows_list[i]`` alone
+        against the current ledger state; nothing is committed.  Window
+        escalation is joint: if any candidate cannot fit within
+        ``max_slots`` the call raises, matching a ``plan_transfer`` loop
+        over the same list.
+        """
+        n = len(rows_list)
+        if n == 0:
+            return []
+        plans: List[Optional[TransferPlan]] = [None] * n
+        live: List[int] = []
+        for i, rows in enumerate(rows_list):
+            if size <= 0 or not rows:
+                plans[i] = TransferPlan(tuple(rows), not_before, not_before, ())
+            else:
+                live.append(i)
+        if not live:
+            return plans  # type: ignore[return-value]
+        pad = self._padded_rows([rows_list[i] for i in live])
+        flat = pad.ravel()
+        n_live, width = pad.shape
+        caps = self.capacity[pad].min(axis=1)
+        t0 = float(not_before)
+        s0 = self.slot_of(t0)
+        window = 64
+        while window <= max_slots:
+            self._ensure(s0 + window - 1)
+            # Path residue per candidate per slot over [s0, s0+window).
+            booked = self.reserved[flat, s0 : s0 + window].reshape(
+                n_live, width, window
+            )
+            resid_frac = 1.0 - booked.max(axis=1)
+            bw = resid_frac * caps[:, None]
+            if bandwidth_cap is not None:
+                bw = np.minimum(bw, bandwidth_cap)
+            # Usable seconds per slot (first slot may be partial).
+            secs = np.full(window, self.slot_duration)
+            secs[0] = (s0 + 1) * self.slot_duration - t0
+            cum = np.cumsum(bw * secs, axis=1)
+            hits = [int(np.searchsorted(cum[k], size - _EPS)) for k in range(len(live))]
+            if max(hits) >= window:
+                window *= 4
+                continue
+            for k, i in enumerate(live):
+                hit = hits[k]
+                active = bw[k] > _EPS
+                sel = np.nonzero(active[: hit + 1])[0]
+                first = int(sel[0])
+                start = max(t0, (s0 + first) * self.slot_duration)
+                before = float(cum[k, hit - 1]) if hit > 0 else 0.0
+                t_in = max(t0, (s0 + hit) * self.slot_duration)
+                end = t_in + (size - before) / float(bw[k, hit])
+                fr = resid_frac[k] if bandwidth_cap is None else bw[k] / caps[k]
+                fracs = tuple((s0 + int(j), float(fr[j])) for j in sel)
+                plans[i] = TransferPlan(tuple(rows_list[i]), start, end, fracs)
+            return plans  # type: ignore[return-value]
+        raise RuntimeError("transfer does not fit within max_slots horizon")
+
     def commit(self, plan: TransferPlan) -> None:
         idx = list(plan.links)
         for slot, frac in plan.slot_fracs:
@@ -173,6 +280,20 @@ class TimeSlotLedger:
                     f"over-reservation on slot {slot}: {new.max():.6f} > 1"
                 )
             self.reserved[idx, slot] = np.minimum(new, 1.0)
+
+    def occupy(
+        self, rows: Sequence[int], start: float, end: float, fraction: float
+    ) -> None:
+        """Book ``fraction`` of every row over the continuous window
+        [start, end) — background cross-traffic the controller observes but
+        did not plan (saturates at 1.0 instead of raising)."""
+        s0 = self.slot_of(start)
+        s1 = self.slot_of(max(start, end - _EPS))
+        self._ensure(s1)
+        idx = list(rows)
+        self.reserved[idx, s0 : s1 + 1] = np.minimum(
+            self.reserved[idx, s0 : s1 + 1] + fraction, 1.0
+        )
 
     def release(self, plan: TransferPlan) -> None:
         idx = list(plan.links)

@@ -42,15 +42,31 @@ class Fabric:
     must be reserved together (paper §IV.A: path residue = min over links).
     """
 
+    #: Node roles: ``host`` (compute/storage endpoint — schedulable),
+    #: ``switch`` (forwarding only), ``infra`` (master/controller — carries
+    #: no data traffic and must never join the worker set).
+    ROLES = ("host", "switch", "infra")
+
     def __init__(self) -> None:
         self._links: Dict[str, Link] = {}
         self._adj: Dict[str, List[str]] = {}
+        self._roles: Dict[str, str] = {}
         self._path_cache: Dict[Tuple[str, str], Tuple[str, ...]] = {}
         self._parent: Dict[str, Tuple[str, str]] = {}  # child -> (parent, link)
 
     # -- construction -----------------------------------------------------
-    def add_node(self, name: str) -> None:
-        self._adj.setdefault(name, [])
+    def add_node(self, name: str, role: Optional[str] = None) -> None:
+        """Register a node.  ``role`` tags it explicitly (``host`` |
+        ``switch`` | ``infra``); new nodes default to ``host``, and passing
+        a role re-tags an existing node (builders promote switches that were
+        first seen as uplink parents)."""
+        if role is not None and role not in self.ROLES:
+            raise ValueError(f"unknown node role {role!r} (want one of {self.ROLES})")
+        if name not in self._adj:
+            self._adj[name] = []
+            self._roles[name] = role or "host"
+        elif role is not None:
+            self._roles[name] = role
 
     def add_link(self, name: str, a: str, b: str, capacity: float) -> None:
         if name in self._links:
@@ -62,12 +78,26 @@ class Fabric:
         self._adj[b].append(name)
         self._path_cache.clear()
 
-    def add_uplink(self, name: str, child: str, parent: str, capacity: float) -> None:
+    def add_uplink(
+        self,
+        name: str,
+        child: str,
+        parent: str,
+        capacity: float,
+        role: Optional[str] = None,
+    ) -> None:
         """Tree edge: enables O(depth) LCA routing (all builders are trees).
 
         Paths between tree members avoid per-pair Dijkstra — essential at
         4 000+ hosts where the controller routes tens of thousands of flows.
+
+        ``role`` tags the *child* (default ``host``; a child already tagged,
+        e.g. a switch first seen as some other uplink's parent, keeps its
+        tag).  The parent is tagged ``switch`` when first seen — uplink
+        parents forward traffic by construction.
         """
+        self.add_node(parent, "switch" if parent not in self._adj else None)
+        self.add_node(child, role)
         self.add_link(name, child, parent, capacity)
         self._parent[child] = (parent, name)
 
@@ -79,6 +109,13 @@ class Fabric:
     @property
     def nodes(self) -> List[str]:
         return list(self._adj)
+
+    def role(self, name: str) -> str:
+        """The node's explicit role tag (``host`` | ``switch`` | ``infra``)."""
+        return self._roles[name]
+
+    def nodes_with_role(self, role: str) -> List[str]:
+        return [n for n in self._adj if self._roles[n] == role]
 
     def link(self, name: str) -> Link:
         return self._links[name]
@@ -209,8 +246,8 @@ def paper_fig2_fabric(link_mbps: float = 100.0) -> Fabric:
     f.add_uplink("Link2", "N2", "SwA", link_mbps)
     f.add_uplink("Link3", "N3", "SwB", link_mbps)
     f.add_uplink("Link4", "N4", "SwB", link_mbps)
-    f.add_uplink("Link5", "Master", "Router", link_mbps)
-    f.add_uplink("Link6", "Controller", "Router", link_mbps)
+    f.add_uplink("Link5", "Master", "Router", link_mbps, role="infra")
+    f.add_uplink("Link6", "Controller", "Router", link_mbps, role="infra")
     f.add_uplink("Link7", "SwA", "Router", link_mbps)
     f.add_uplink("Link8", "SwB", "Router", link_mbps)
     return f
@@ -225,7 +262,7 @@ def two_tier_fabric(
     """Generic leaf/spine: hosts ``H<i>`` under leaves ``Sw<j>`` under one spine."""
     f = Fabric()
     for j in range(n_leaves):
-        f.add_uplink(f"Trunk{j}", f"Sw{j}", "Spine", trunk_mbps)
+        f.add_uplink(f"Trunk{j}", f"Sw{j}", "Spine", trunk_mbps, role="switch")
         for i in range(hosts_per_leaf):
             h = j * hosts_per_leaf + i
             f.add_uplink(f"Up{h}", f"H{h}", f"Sw{j}", host_mbps)
@@ -248,7 +285,7 @@ def tpu_dcn_fabric(
     f = Fabric()
     for p in range(n_pods):
         agg = f"pod{p}/agg"
-        f.add_uplink(f"pod{p}/trunk", agg, "dcn-core", pod_trunk_gbytes)
+        f.add_uplink(f"pod{p}/trunk", agg, "dcn-core", pod_trunk_gbytes, role="switch")
         for h in range(hosts_per_pod):
             name = f"pod{p}/host{h}"
             f.add_uplink(f"pod{p}/nic{h}", name, agg, nic_gbytes)
@@ -256,13 +293,10 @@ def tpu_dcn_fabric(
 
 
 def storage_hosts(fabric: Fabric) -> List[str]:
-    """Compute/storage endpoints = degree-1 nodes that are not infra."""
-    infra = {"Master", "Controller", "Spine", "Router", "dcn-core"}
-    return [
-        n
-        for n in fabric.nodes
-        if n not in infra
-        and not n.startswith(("Sw", "Spine", "Router"))
-        and not n.endswith("/agg")
-        and len([l for l in fabric.links.values() if n in (l.a, l.b)]) == 1
-    ]
+    """Compute/storage endpoints — nodes explicitly tagged ``role="host"``.
+
+    The role tag is set at construction (``add_node``/``add_uplink``), so
+    new builders cannot silently leak switches or infra nodes into the
+    worker set the way the old name-prefix filter could.
+    """
+    return fabric.nodes_with_role("host")

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core.controller import ClusterController
 from ..core.timeslot import TimeSlotLedger, TransferPlan
-from ..core.topology import Fabric, tpu_dcn_fabric
+from ..core.topology import Fabric, storage_hosts, tpu_dcn_fabric
 
 Tree = Any
 
@@ -93,7 +94,16 @@ class CrossPodSync:
         slot_duration: float = 0.05,
     ):
         self.fabric = fabric or tpu_dcn_fabric(n_pods, hosts_per_pod)
-        self.ledger = TimeSlotLedger(self.fabric, slot_duration, 4096)
+        # The DCN ledger is the controller's: gradient sync shares it with
+        # input-shard placement (Q2) and checkpoint pushes (Q3).
+        self.controller = ClusterController(
+            self.fabric,
+            storage_hosts(self.fabric),
+            "bass",
+            slot_duration=slot_duration,
+            horizon_slots=4096,
+        )
+        self.ledger = self.controller.state.ledger
         self.n_pods = n_pods
         self.compress = compress
         self.grad_bytes = grad_bytes
@@ -103,11 +113,12 @@ class CrossPodSync:
         eff = self.grad_bytes / 4.0 if self.compress else self.grad_bytes
         return 2.0 * eff * (self.n_pods - 1) / self.n_pods
 
+    def _trunks(self) -> list:
+        return [f"pod{p}/trunk" for p in range(self.n_pods)]
+
     def reserve_step(self, step: int, not_before: float) -> StepFlow:
         """Book TS slots on the pod trunks for step ``step``'s sync."""
-        rows = self.ledger.rows(
-            [f"pod{p}/trunk" for p in range(self.n_pods)]
-        )
+        rows = self.ledger.rows(self._trunks())
         size = self.wire_bytes()
         plan = self.ledger.plan_transfer(size, rows, not_before=not_before)
         self.ledger.commit(plan)
@@ -115,8 +126,38 @@ class CrossPodSync:
         self.flows[step] = flow
         return flow
 
+    def register_steps(
+        self,
+        first_step: int,
+        n_steps: int,
+        cadence_s: float,
+        start_time: float = 0.0,
+    ) -> None:
+        """Register the next ``n_steps`` syncs as recurring controller
+        events at the projected step cadence — Pre-BASS-style, each step's
+        slots are booked when its event fires, one step ahead of the
+        compute that needs them.  Drive with :meth:`advance_to`.
+        """
+        size = self.wire_bytes()
+        for k in range(n_steps):
+            step = first_step + k
+            self.controller.reserve_transfer_at(
+                start_time + k * cadence_s, size, self._trunks(), tag=step
+            )
+
+    def advance_to(self, t: float) -> Dict[int, StepFlow]:
+        """Fire every registered sync event with cadence time ≤ ``t``;
+        returns the newly materialized per-step flows."""
+        before = set(self.flows)
+        self.controller.run_until(t)
+        size = self.wire_bytes()
+        for tag, plan in self.controller.flows.items():
+            if isinstance(tag, int) and tag not in self.flows:
+                self.flows[tag] = StepFlow(tag, plan, size)
+        return {s: f for s, f in self.flows.items() if s not in before}
+
     def projected_sync_seconds(self) -> float:
         """What the reservation implies for the roofline's DCN term."""
-        rows = self.ledger.rows([f"pod{p}/trunk" for p in range(self.n_pods)])
+        rows = self.ledger.rows(self._trunks())
         bw = self.ledger.path_bandwidth(rows, 0.0)
         return self.wire_bytes() / bw if bw > 0 else float("inf")

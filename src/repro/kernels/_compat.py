@@ -1,0 +1,11 @@
+"""Pallas-TPU version shims.
+
+``pltpu.CompilerParams`` is the modern spelling; before jax 0.5 the same
+dataclass was exported as ``TPUCompilerParams``.  Kernels import the alias
+from here so one source tree runs on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

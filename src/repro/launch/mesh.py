@@ -8,25 +8,31 @@ init, smoke tests see the real single device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: make_mesh has no axis_types parameter
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over whatever devices exist (CPU tests)."""
     n = len(jax.devices())
     data = min(data, n)
-    return jax.make_mesh(
-        (data, max(1, min(model, n // data))),
-        ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+    return _make_mesh(
+        (data, max(1, min(model, n // data))), ("data", "model")
     )
 
 

@@ -126,6 +126,24 @@ def _shard_map():
         return sm
 
 
+_CHECK_KW = None
+
+
+def _replication_check_kw(sm) -> str:
+    """jax ≥ 0.7 spells the replication-check kwarg check_vma; older
+    check_rep.  Probed once, cached for every a2a call."""
+    global _CHECK_KW
+    if _CHECK_KW is None:
+        import inspect
+
+        _CHECK_KW = (
+            "check_vma"
+            if "check_vma" in inspect.signature(sm).parameters
+            else "check_rep"
+        )
+    return _CHECK_KW
+
+
 def _moe_block_a2a(
     p: dict, x: jax.Array, cfg: ModelConfig, mesh, rules
 ) -> Tuple[jax.Array, jax.Array]:
@@ -253,11 +271,12 @@ def _moe_block_a2a(
     w_specs = (
         (w_in_spec, w_in_spec, w_out_spec) if swiglu else (w_in_spec, w_out_spec)
     )
+    check_kw = _replication_check_kw(shard_map)
     y, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, router_spec) + w_specs,
         out_specs=(x_spec, P()),
-        check_vma=False,
+        **{check_kw: False},
     )(x, p["router"], *weights)
     return y, aux

@@ -24,10 +24,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.bass import pick_source
-from ..core.tasks import Assignment, Instance, Task
-from ..core.bass import schedule_bass
-from ..core.timeslot import TimeSlotLedger
+from ..core.controller import BassPolicy, ClusterController
+from ..core.tasks import Assignment, Task
 from ..core.topology import Fabric, tpu_dcn_fabric
 from .engine import Request
 
@@ -58,7 +56,17 @@ class BassRouter:
             for i, r in enumerate(self.replicas):
                 fabric.add_uplink(f"nic{i}", r, "agg", nic_bytes_per_s)
         self.fabric = fabric
-        self.ledger = TimeSlotLedger(self.fabric, slot_duration, 2048)
+        # The long-lived controller owns the ledger: every routed request's
+        # context migration is a committed TS reservation that later
+        # requests (and other traffic on a shared fabric) must respect.
+        self.controller = ClusterController(
+            self.fabric,
+            self.replicas,
+            BassPolicy(),
+            slot_duration=slot_duration,
+            horizon_slots=2048,
+        )
+        self.ledger = self.controller.state.ledger
         self.decode_s_per_token = decode_s_per_token
         self.bytes_per_ctx_token = bytes_per_ctx_token
         self.prefix_home: Dict[int, List[str]] = {}   # prefix_hash -> replicas
@@ -72,28 +80,28 @@ class BassRouter:
         holders = [
             r for r in self.prefix_home.get(req.prefix_hash, []) if r in self.replicas
         ]
+        # Cold prefix: no usable holders — route to the coldest replica
+        # (Case 2-style single-holder task; the data is born there).
         task = Task(
             tid=req.rid,
             size=len(req.prompt) * self.bytes_per_ctx_token,
             compute=work_s,
-            replicas=tuple(holders) if holders else tuple(self.replicas[:1]),
+            replicas=tuple(holders) if holders else (self._coldest(),),
         )
-        inst = Instance(
-            fabric=self.fabric,
-            workers=list(self.replicas),
-            idle={r: now + self.backlog.get(r, 0.0) for r in self.replicas},
-            tasks=[task],
-            slot_duration=self.ledger.slot_duration,
+        # ΥI_j = engine backlog (ProgressRate-style estimate), refreshed per
+        # request; the controller then places the request as a one-task job.
+        # Clamp against the controller clock: request timestamps from
+        # concurrent frontends may arrive slightly out of order.
+        at = max(now, self.controller.now)
+        self.controller.state.set_idle(
+            {r: at + self.backlog.get(r, 0.0) for r in self.replicas}
         )
-        # Case 2 shortcut: cold prefix — replicas list was faked; treat as
-        # locality starvation by giving the task no usable holders.
-        if not holders:
-            inst.tasks[0] = Task(
-                tid=task.tid, size=task.size, compute=task.compute,
-                replicas=(self._coldest(),),
-            )
-        sched = schedule_bass(inst, ledger=self.ledger)
-        a = sched.assignments[0]
+        jid = self.controller.submit([task], at=at)
+        self.controller.run_until(at)
+        # The router is a long-lived service: drop the per-request record
+        # once read (the ledger keeps the reservations) or memory grows
+        # with total request count.
+        a = self.controller.jobs.pop(jid).assignments[0]
         self.backlog[a.node] = self.backlog.get(a.node, 0.0) + work_s
         self.prefix_home.setdefault(req.prefix_hash, [])
         if a.node not in self.prefix_home[req.prefix_hash]:

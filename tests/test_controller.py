@@ -1,0 +1,284 @@
+"""Online controller: offline-wrapper equivalence, multi-job metrics
+isolation, batched-ledger agreement, online replay, and node-role tags."""
+import numpy as np
+import pytest
+
+from repro.core import POLICIES, SCHEDULERS
+from repro.core.controller import ClusterController
+from repro.core.examples_fig import example1_instance
+from repro.core.simulator import replay_online
+from repro.core.tasks import BackgroundFlow, Instance, Task
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import (
+    paper_fig2_fabric,
+    storage_hosts,
+    tpu_dcn_fabric,
+    two_tier_fabric,
+)
+
+
+def random_instance(seed: int) -> Instance:
+    rng = np.random.default_rng(seed)
+    n_hosts = int(rng.integers(3, 9))
+    n_tasks = int(rng.integers(1, 16))
+    hpl = (n_hosts + 1) // 2
+    fab = two_tier_fabric(2, hpl, 100.0, 100.0)
+    hosts = [f"H{i}" for i in range(2 * hpl)][:n_hosts]
+    tasks = [
+        Task(
+            tid=i + 1,
+            size=float(rng.uniform(50, 600)),
+            compute=float(rng.uniform(1, 20)),
+            replicas=tuple(rng.choice(hosts, size=min(2, n_hosts), replace=False)),
+        )
+        for i in range(n_tasks)
+    ]
+    idle = {h: float(rng.uniform(0, 30)) for h in hosts}
+    bg = []
+    if rng.random() < 0.5:
+        for _ in range(int(rng.integers(1, 4))):
+            a, b = rng.choice(hosts, 2, replace=False)
+            t0 = float(rng.uniform(0, 30))
+            bg.append(
+                BackgroundFlow(
+                    str(a), str(b), float(rng.uniform(0.2, 0.8)),
+                    t0, t0 + float(rng.uniform(2, 10)),
+                )
+            )
+    return Instance(
+        fabric=fab, workers=hosts, idle=idle, tasks=tasks,
+        slot_duration=1.0, background=bg,
+    )
+
+
+def assert_assignments_equal(got, want):
+    assert len(got) == len(want)
+    for a, b in zip(
+        sorted(got, key=lambda a: a.tid), sorted(want, key=lambda a: a.tid)
+    ):
+        assert (a.tid, a.node, a.source) == (b.tid, b.node, b.source)
+        assert a.start == b.start and a.finish == b.finish
+        if b.transfer is None:
+            assert a.transfer is None
+        else:
+            assert a.transfer == b.transfer
+
+
+# ---------------------------------------------------------------------------
+# Online-arrival equivalence: submit-everything-at-t=0 == offline wrapper
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(POLICIES))
+def test_online_t0_matches_offline_example1(name):
+    offline = SCHEDULERS[name](example1_instance())
+    ctrl = ClusterController.from_instance(example1_instance(), name)
+    ctrl.submit(example1_instance().tasks, at=0.0)
+    ctrl.run()
+    assert_assignments_equal(ctrl.schedule().assignments, offline.assignments)
+    np.testing.assert_array_equal(
+        ctrl.state.ledger.reserved, offline.ledger.reserved
+    )
+
+
+@pytest.mark.parametrize("name", list(POLICIES))
+@pytest.mark.parametrize("seed", [0, 3, 11, 42])
+def test_online_t0_matches_offline_random(name, seed):
+    offline = SCHEDULERS[name](random_instance(seed))
+    inst = random_instance(seed)
+    ctrl = ClusterController.from_instance(inst, name)
+    ctrl.submit(inst.tasks, at=0.0)
+    ctrl.run()
+    assert_assignments_equal(ctrl.schedule().assignments, offline.assignments)
+
+
+# ---------------------------------------------------------------------------
+# Multi-job streams
+# ---------------------------------------------------------------------------
+
+
+def _three_job_stream(seed=5):
+    rng = np.random.default_rng(seed)
+    fab = two_tier_fabric(2, 4, 100.0, 200.0)
+    workers = storage_hosts(fab)
+    jobs, tid = [], 1
+    for j, at in enumerate([0.0, 15.0, 30.0]):
+        tasks = []
+        for _ in range(8):
+            kind = "reduce" if (tid % 4 == 0) else "map"
+            tasks.append(
+                Task(
+                    tid=tid,
+                    size=float(rng.uniform(80, 400)),
+                    compute=float(rng.uniform(2, 10)),
+                    replicas=tuple(rng.choice(workers, 2, replace=False)),
+                    kind=kind,
+                )
+            )
+            tid += 1
+        jobs.append((at, tasks))
+    idle = {w: float(rng.uniform(0, 4.0)) for w in workers}
+    return fab, workers, idle, jobs
+
+
+@pytest.mark.parametrize("name", list(POLICIES))
+def test_online_stream_with_metrics_and_replay(name):
+    fab, workers, idle, jobs = _three_job_stream()
+    ctrl = ClusterController(fab, workers, name, idle=idle)
+    jids = [ctrl.submit(tasks, at=at) for at, tasks in jobs]
+    ctrl.inject_flow(BackgroundFlow(workers[0], workers[-1], 0.6, 5.0, 20.0))
+    ctrl.run()
+
+    # Per-job metrics are relative to each job's own arrival.
+    for jid, (at, tasks) in zip(jids, jobs):
+        m = ctrl.job_metrics(jid)
+        assert m.jt >= 0.0 and 0.0 <= m.lr <= 1.0
+        assert m.jt == pytest.approx(m.mt + m.rt)
+        assert ctrl.jobs[jid].makespan >= at
+        for a in ctrl.jobs[jid].assignments:
+            # no task starts — and no transfer delivers — before arrival
+            assert a.start >= at - 1e-9
+            if a.transfer is not None and a.transfer.slot_fracs:
+                assert a.transfer.start >= at - 1e-9
+
+    rep = replay_online(jobs, ctrl.schedule(), idle)
+    assert rep.ok, rep.violations
+
+
+def test_job_metrics_isolated_between_jobs():
+    """Job A's recorded assignments and metrics are fixed at placement time:
+    a later job arriving cannot rewrite them."""
+    fab, workers, idle, jobs = _three_job_stream()
+    ctrl = ClusterController(fab, workers, "bass", idle=idle)
+    j0 = ctrl.submit(jobs[0][1], at=jobs[0][0])
+    ctrl.run_until(10.0)
+    m0 = ctrl.job_metrics(j0)
+    frozen = [(a.tid, a.node, a.start, a.finish) for a in ctrl.jobs[j0].assignments]
+
+    j1 = ctrl.submit(jobs[1][1], at=15.0)
+    ctrl.run()
+    assert [(a.tid, a.node, a.start, a.finish) for a in ctrl.jobs[j0].assignments] == frozen
+    m0b = ctrl.job_metrics(j0)
+    assert (m0.mt, m0.rt, m0.jt, m0.lr) == (m0b.mt, m0b.rt, m0b.jt, m0b.lr)
+    # and the later job's metrics cover only its own tasks
+    assert len(ctrl.jobs[j1].assignments) == len(jobs[1][1])
+
+
+def test_online_arrival_clamps_idle():
+    """A job arriving at t=50 on a long-idle cluster starts no earlier
+    than t=50 (ΥI_j is clamped to the controller clock)."""
+    inst = example1_instance()
+    ctrl = ClusterController.from_instance(inst, "bass")
+    ctrl.submit(inst.tasks, at=50.0)
+    ctrl.run()
+    for a in ctrl.schedule().assignments:
+        assert a.start >= 50.0 - 1e-9
+
+
+def test_events_fire_in_time_order():
+    inst = example1_instance()
+    ctrl = ClusterController.from_instance(inst, "bass")
+    tasks = inst.tasks
+    ctrl.submit(tasks[:5], at=20.0)
+    ctrl.submit(tasks[5:], at=0.0)      # earlier despite later submission
+    ctrl.run_until(10.0)
+    assert ctrl.jobs[1].placed and not ctrl.jobs[0].placed
+    ctrl.run()
+    assert ctrl.jobs[0].placed
+
+
+# ---------------------------------------------------------------------------
+# Batched ledger planning
+# ---------------------------------------------------------------------------
+
+
+def _busy_ledger(seed=0):
+    fab = two_tier_fabric(2, 3, 100.0, 60.0)
+    led = TimeSlotLedger(fab, 1.0, 64)
+    rng = np.random.default_rng(seed)
+    hosts = [f"H{i}" for i in range(6)]
+    for _ in range(10):
+        a, b = rng.choice(hosts, 2, replace=False)
+        rows = led.rows(fab.path(str(a), str(b)))
+        plan = led.plan_transfer(
+            float(rng.uniform(20, 400)), rows, not_before=float(rng.uniform(0, 10))
+        )
+        led.commit(plan)
+    return fab, led, hosts
+
+
+def test_plan_transfer_batch_matches_loop_deterministic():
+    fab, led, hosts = _busy_ledger()
+    dst = "H0"
+    rows_list = [led.rows(fab.path(h, dst)) for h in hosts[1:]] + [()]
+    for size in (1.0, 77.7, 512.0):
+        for nb in (0.0, 0.4, 7.3):
+            batch = led.plan_transfer_batch(size, rows_list, not_before=nb)
+            for rows, plan in zip(rows_list, batch):
+                assert plan == led.plan_transfer(size, rows, not_before=nb)
+
+
+def test_path_bandwidth_batch_matches_loop():
+    fab, led, hosts = _busy_ledger(3)
+    dst = "H5"
+    rows_list = [led.rows(fab.path(h, dst)) for h in hosts[:-1]]
+    for t in (0.0, 2.5, 9.9):
+        batch = led.path_bandwidth_batch(rows_list, t)
+        for rows, bw in zip(rows_list, batch):
+            assert bw == led.path_bandwidth(rows, t)
+
+
+def test_plan_transfer_batch_property():
+    """Hypothesis property: batch ≡ loop on random ledger states."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        size=st.floats(1.0, 900.0),
+        nb=st.floats(0.0, 20.0),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def inner(size, nb, seed):
+        fab, led, hosts = _busy_ledger(seed)
+        dst = hosts[seed % 6]
+        rows_list = [led.rows(fab.path(h, dst)) for h in hosts if h != dst]
+        batch = led.plan_transfer_batch(size, rows_list, not_before=nb)
+        for rows, plan in zip(rows_list, batch):
+            assert plan == led.plan_transfer(size, rows, not_before=nb)
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# Node-role tags
+# ---------------------------------------------------------------------------
+
+
+def test_builder_roles_are_explicit():
+    f = paper_fig2_fabric()
+    assert sorted(storage_hosts(f)) == ["N1", "N2", "N3", "N4"]
+    assert f.role("SwA") == "switch" and f.role("Router") == "switch"
+    assert f.role("Master") == "infra" and f.role("Controller") == "infra"
+
+    f = two_tier_fabric(2, 3)
+    assert sorted(storage_hosts(f)) == [f"H{i}" for i in range(6)]
+    assert f.role("Sw0") == "switch" and f.role("Spine") == "switch"
+
+    f = tpu_dcn_fabric(2, 2)
+    assert sorted(storage_hosts(f)) == [
+        "pod0/host0", "pod0/host1", "pod1/host0", "pod1/host1"
+    ]
+    assert f.role("pod0/agg") == "switch" and f.role("dcn-core") == "switch"
+
+
+def test_role_validation_and_retag():
+    from repro.core.topology import Fabric
+
+    f = Fabric()
+    with pytest.raises(ValueError):
+        f.add_node("x", role="router")
+    f.add_uplink("l0", "h0", "sw", 10.0)
+    assert f.role("h0") == "host" and f.role("sw") == "switch"
+    f.add_node("h0", role="infra")      # explicit re-tag wins
+    assert storage_hosts(f) == []

@@ -40,11 +40,11 @@ CROSS_POD_SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.distributed.dcn import cross_pod_allreduce
+    from repro.launch.mesh import _make_mesh
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"))
     x = jnp.arange(16.0).reshape(4, 4)
     # replicate x but give each pod a different value via explicit put
     with mesh:

@@ -20,15 +20,14 @@ SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.configs import get_config
+    from repro.launch.mesh import _make_mesh
     from repro.models.moe import moe_block, moe_defs
     from repro.models.params import init_params
     from repro.distributed.actctx import activation_sharding
 
     cfg = get_config("moonshot-v1-16b-a3b", smoke=True)  # E=8, top-2
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _make_mesh((2, 4), ("data", "model"))
     p = init_params(moe_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
 

@@ -1,5 +1,7 @@
 """Example-3 QoS queue model properties."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.qos import (

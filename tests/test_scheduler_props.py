@@ -7,6 +7,8 @@ matching completion times.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SCHEDULERS

@@ -1,6 +1,8 @@
 """Property tests for the Time-Slot ledger (paper §IV.A invariants)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.timeslot import TimeSlotLedger
