@@ -9,6 +9,8 @@
 * bench_table1      — Table I(a)/(b) + Fig. 5 (Wordcount/Sort, 150M…5G)
 * bench_sched_scale — beyond-paper: 4 096-host fleet controller throughput
 * bench_online      — beyond-paper: online multi-job streams (all policies)
+* bench_multipath   — beyond-paper: single- vs multipath BASS on a k=8
+                      fat-tree with 10% random link failures
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -17,6 +19,7 @@ import sys
 
 from . import (
     bench_discussion1,
+    bench_multipath,
     bench_online,
     bench_prebass,
     bench_qos,
@@ -32,6 +35,7 @@ MODULES = [
     bench_table1,
     bench_sched_scale,
     bench_online,
+    bench_multipath,
     bench_roofline,
 ]
 

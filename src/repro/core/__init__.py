@@ -13,7 +13,14 @@ Public API:
 ``QosPort``                     — Discussion-3 OpenFlow queue model
 ``replay``/``replay_online``/``evaluate_mapreduce`` — verification + metrics
 """
-from .topology import Fabric, paper_fig2_fabric, storage_hosts, two_tier_fabric, tpu_dcn_fabric
+from .topology import (
+    Fabric,
+    UnroutableError,
+    paper_fig2_fabric,
+    storage_hosts,
+    tpu_dcn_fabric,
+    two_tier_fabric,
+)
 from .timeslot import TimeSlotLedger, TransferPlan
 from .tasks import (
     Assignment,
@@ -72,6 +79,7 @@ __all__ = [
     "Task",
     "TimeSlotLedger",
     "TransferPlan",
+    "UnroutableError",
     "completion_time",
     "evaluate_mapreduce",
     "example3_port",

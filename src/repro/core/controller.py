@@ -48,7 +48,7 @@ from .tasks import (
     completion_time,
 )
 from .timeslot import TimeSlotLedger, TransferPlan
-from .topology import Fabric
+from .topology import Fabric, UnroutableError
 
 _EPS = 1e-9
 
@@ -171,6 +171,11 @@ class ClusterState:
         self.background: List[BackgroundFlow] = list(background)
         self.heap = MinnowHeap(self.idle, self.workers)
         self.now = 0.0
+        #: Optional SDN data plane (``repro.net.DataPlane``), attached by
+        #: ClusterController.  When present and carrying failures, source/
+        #: path choices route around dead links; with no failures the code
+        #: paths below are byte-identical to the dataplane-less ones.
+        self.dataplane = None
 
     @classmethod
     def from_instance(
@@ -191,6 +196,10 @@ class ClusterState:
     def minnow(self) -> str:
         return self.heap.minnow(self.idle)
 
+    def _routing_live(self) -> bool:
+        """True when failure-aware routing must be consulted."""
+        return self.dataplane is not None and self.dataplane.has_failures()
+
     def choose_source(
         self,
         task: Task,
@@ -198,7 +207,120 @@ class ClusterState:
         at: float,
         load: Optional[Dict[str, float]] = None,
     ) -> Tuple[str, Tuple[int, ...]]:
-        return choose_source(task, dst, self.ledger, at, load=load)
+        if not self._routing_live():
+            return choose_source(task, dst, self.ledger, at, load=load)
+        # Failure-aware single-path: each replica contributes its best
+        # surviving path; dead replicas drop out of the candidate set.
+        cands: List[str] = []
+        rows_list: List[Tuple[int, ...]] = []
+        for rep in task.replicas:
+            if rep == dst:
+                continue
+            try:
+                # k=1: only the shortest surviving path is consumed, and
+                # Yen's first path is exactly that — skip the spur searches.
+                paths = self.dataplane.candidates(rep, dst, k=1)
+            except UnroutableError:
+                continue
+            cands.append(rep)
+            rows_list.append(self.ledger.rows(paths[0]))
+        if not cands:
+            raise UnroutableError(
+                f"task {task.tid}: no replica has a surviving path to {dst!r}"
+            )
+        bws = self.ledger.path_bandwidth_batch(rows_list, at)
+        best = min(
+            range(len(cands)),
+            key=lambda i: (
+                load.get(cands[i], 0.0) if load is not None else 0.0,
+                -bws[i],
+                len(rows_list[i]),
+                cands[i],
+            ),
+        )
+        return cands[best], rows_list[best]
+
+    def choose_source_path(
+        self,
+        task: Task,
+        dst: str,
+        at: float,
+        load: Optional[Dict[str, float]] = None,
+        k: Optional[int] = None,
+        size: Optional[float] = None,
+    ) -> Tuple[str, Tuple[int, ...], TransferPlan]:
+        """Multipath ``ND_dataSrc``: greedily plan the transfer on *every*
+        surviving (replica, path) pair in one
+        :meth:`TimeSlotLedger.plan_transfer_batch` pass and return the one
+        that completes earliest — Eq. (4)'s argmin applied to paths, not
+        just nodes.  Ties break to fewer hops, replica name, candidate
+        order.  Returns ``(source, rows, plan)`` — the winning plan is the
+        uncommitted greedy plan itself, so callers don't re-plan it.
+        Requires a dataplane; falls back to :meth:`choose_source` without
+        one.  ``size`` overrides ``task.size`` (rerouting scores the
+        *remaining* bytes)."""
+        if self.dataplane is None:
+            src, rows = self.choose_source(task, dst, at, load=load)
+            plan = self.ledger.plan_transfer(
+                task.size if size is None else size, rows, not_before=at
+            )
+            return src, rows, plan
+        pairs: List[Tuple[str, int, Tuple[int, ...]]] = []
+        for rep in task.replicas:
+            if rep == dst:
+                continue
+            try:
+                paths = self.dataplane.candidates(rep, dst, k=k)
+            except UnroutableError:
+                continue
+            for pi, p in enumerate(paths):
+                pairs.append((rep, pi, self.ledger.rows(p)))
+        if not pairs:
+            raise UnroutableError(
+                f"task {task.tid}: no replica has a surviving path to {dst!r}"
+            )
+        plans = self.ledger.plan_transfer_batch(
+            task.size if size is None else size,
+            [r for _, _, r in pairs],
+            not_before=at,
+        )
+        best = min(
+            range(len(pairs)),
+            key=lambda i: (
+                load.get(pairs[i][0], 0.0) if load is not None else 0.0,
+                plans[i].end,
+                len(pairs[i][2]),
+                pairs[i][0],
+                pairs[i][1],
+            ),
+        )
+        return pairs[best][0], pairs[best][2], plans[best]
+
+    def nearest_source(
+        self, task: Task, dst: str
+    ) -> Tuple[str, Tuple[int, ...]]:
+        """Fewest-hop replica, failure-aware when the dataplane carries
+        failures (HDS/BAR stay bandwidth-oblivious but must not book dead
+        links)."""
+        if not self._routing_live():
+            return nearest_source(task, dst, self.ledger)
+        best = None
+        for rep in task.replicas:
+            if rep == dst:
+                continue
+            try:
+                paths = self.dataplane.candidates(rep, dst, k=1)
+            except UnroutableError:
+                continue
+            rows = self.ledger.rows(paths[0])
+            key = (len(rows), rep)
+            if best is None or key < best[0]:
+                best = (key, rep, rows)
+        if best is None:
+            raise UnroutableError(
+                f"task {task.tid}: no replica has a surviving path to {dst!r}"
+            )
+        return best[1], best[2]
 
     def scratch_ledger(self, horizon_slots: int = 256) -> TimeSlotLedger:
         """A fresh ledger seeded with every background flow seen so far —
@@ -310,6 +432,7 @@ class ClusterState:
         dup.background = list(self.background)
         dup.heap = MinnowHeap(dup.idle, dup.workers)
         dup.now = self.now
+        dup.dataplane = self.dataplane  # shared: liveness is global state
         return dup
 
 
@@ -336,9 +459,32 @@ class SchedulingPolicy(Protocol):
 
 class BassPolicy:
     """Algorithm 1, one decision per arriving task (see ``bass`` module docs
-    for the Case 1.1/1.2/1.3/2 taxonomy)."""
+    for the Case 1.1/1.2/1.3/2 taxonomy).
+
+    ``multipath=True`` scores every surviving (replica, candidate-path)
+    pair from the controller's data plane instead of one shortest path per
+    replica — on fabrics with path diversity (fat-tree, multi-spine Clos)
+    the transfer takes whichever parallel path has the most residue.
+    Requires a dataplane-carrying state to differ from base BASS; with
+    ``multipath=False`` (default) behaviour is byte-identical to before.
+    """
 
     name = "bass"
+
+    def __init__(self, multipath: bool = False, k_paths: Optional[int] = None):
+        self.multipath = multipath
+        self.k_paths = k_paths
+
+    def _source(
+        self, state: ClusterState, task: Task, dst: str, at: float
+    ) -> Tuple[str, Tuple[int, ...], Optional[TransferPlan]]:
+        """(source, rows, plan) — the multipath scorer already produced the
+        winning greedy plan; single-path mode returns ``None`` and the
+        caller plans the rows itself."""
+        if self.multipath:
+            return state.choose_source_path(task, dst, at, k=self.k_paths)
+        src, rows = state.choose_source(task, dst, at=at)
+        return src, rows, None
 
     def place(self, task: Task, state: ClusterState) -> Assignment:
         idle = state.idle
@@ -352,10 +498,11 @@ class BassPolicy:
         if loc is not None:
             # Case 1.2 / 1.3 — tradeoff governed by the TS ledger.
             yc_loc = completion_time(task.compute, 0.0, idle[loc])
-            src, rows = state.choose_source(task, minnow, at=idle[minnow])
-            plan = state.ledger.plan_transfer(
-                task.size, rows, not_before=idle[minnow]
-            )
+            src, rows, plan = self._source(state, task, minnow, at=idle[minnow])
+            if plan is None:
+                plan = state.ledger.plan_transfer(
+                    task.size, rows, not_before=idle[minnow]
+                )
             tm = plan.end - plan.start if plan.slot_fracs else 0.0
             yc_min = completion_time(task.compute, 0.0, idle[minnow]) + tm
             # Algorithm 1 line 8: bandwidth needed so that ΥC_minnow < ΥC_loc.
@@ -370,8 +517,11 @@ class BassPolicy:
             return state.commit_local(task, loc, bw_needed=bw_needed)
 
         # Case 2 — locality starvation: remote on ND_minnow with reservation.
-        src, rows = state.choose_source(task, minnow, at=idle[minnow])
-        plan = state.ledger.plan_transfer(task.size, rows, not_before=idle[minnow])
+        src, rows, plan = self._source(state, task, minnow, at=idle[minnow])
+        if plan is None:
+            plan = state.ledger.plan_transfer(
+                task.size, rows, not_before=idle[minnow]
+            )
         return state.commit_remote(task, minnow, src, plan)
 
     def place_batch(
@@ -411,7 +561,7 @@ class HdsPolicy:
                 out.append(state.commit_local(task, node))
             else:
                 task = unstarted.pop(min(unstarted))
-                src, rows = nearest_source(task, node, state.ledger)
+                src, rows = state.nearest_source(task, node)
                 plan = state.ledger.plan_transfer(
                     task.size, rows, not_before=t_idle
                 )
@@ -512,7 +662,7 @@ class BarPolicy:
             if node in task.replicas:
                 out.append(state.commit_local(task, node))
             else:
-                src, rows = nearest_source(task, node, state.ledger)
+                src, rows = state.nearest_source(task, node)
                 plan = state.ledger.plan_transfer(
                     task.size, rows, not_before=state.idle[node]
                 )
@@ -584,7 +734,9 @@ class PreBassPolicy:
                 ready[a.tid] = 0.0
                 continue
             task = tasks[a.tid]
-            src, rows = choose_source(task, a.node, ledger, at=origin, load=load)
+            # state-level choice: failure-aware when the dataplane carries
+            # dead links (identical to the module fn otherwise).
+            src, rows = state.choose_source(task, a.node, at=origin, load=load)
             plan = ledger.plan_transfer(task.size, rows, not_before=origin)
             ledger.commit(plan)
             a.source, a.transfer = src, plan
@@ -657,6 +809,7 @@ class JobRecord:
     tasks: List[Task]
     assignments: List[Assignment] = field(default_factory=list)
     placed: bool = False
+    rerouted: int = 0  # transfers re-planned after a path died
 
     @property
     def makespan(self) -> float:
@@ -678,6 +831,7 @@ class ClusterController:
         slot_duration: float = 1.0,
         horizon_slots: int = 256,
         background: Sequence[BackgroundFlow] = (),
+        k_paths: int = 4,
     ) -> None:
         if isinstance(policy, str):
             policy = POLICIES[policy]()
@@ -691,12 +845,25 @@ class ClusterController:
         )
         for bg in background:
             self.state.observe_flow(bg)
+        # The SDN data plane: link liveness, k-shortest-path candidates,
+        # per-switch flow tables.  Lazy import keeps core→net one-way at
+        # module load (net imports core.topology/timeslot).
+        from ..net.dataplane import DataPlane
+
+        self.dataplane = DataPlane(fabric, k=k_paths)
+        self.state.dataplane = self.dataplane
         self.jobs: Dict[int, JobRecord] = {}
         self.flows: Dict[object, TransferPlan] = {}
+        self.reroute_log: List[object] = []     # RerouteRecords, in fire order
         self._events: List[Tuple[float, int, str, tuple]] = []
         self._seq = 0
         self._next_jid = 0       # monotonic: ids stay unique if jobs are pruned
         self._auto_flow = 0      # untagged reservations get ("flow", n) keys
+        self._idle0 = dict(self.state.idle)     # initial ΥI_j, for re-timelining
+        self._live_jobs: Dict[int, float] = {}  # jid -> latest transfer end
+        self._suspended: List[Tuple[object, Tuple[str, ...], float]] = []
+        self._expiry: List[Tuple[float, int, object]] = []  # (end, gen, cookie)
+        self._flow_gen: Dict[object, int] = {}
         self.now = 0.0
 
     @classmethod
@@ -752,6 +919,45 @@ class ClusterController:
         the training-side gradient-sync entry (``distributed.dcn``)."""
         self._push(at, "transfer", (size, tuple(links), tag))
 
+    # -- network churn ------------------------------------------------------
+    def fail_link(self, name: str, at: Optional[float] = None) -> None:
+        """Queue a link failure: in-flight transfers on it reroute when it
+        fires (UnroutableError if a victim has no surviving path)."""
+        self.state.fabric.link(name)  # validate early: KeyError on unknown
+        self._push(self.now if at is None else at, "link_down", (name,))
+
+    def recover_link(self, name: str, at: Optional[float] = None) -> None:
+        # Validate like fail_link: a typo'd recovery would otherwise be a
+        # silent no-op that stalls suspended flows forever.
+        self.state.fabric.link(name)
+        self._push(self.now if at is None else at, "link_up", (name,))
+
+    def fail_switch(self, node: str, at: Optional[float] = None) -> None:
+        """Queue a switch failure — every incident link goes down."""
+        if not self.state.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self._push(self.now if at is None else at, "switch_down", (node,))
+
+    def recover_switch(self, node: str, at: Optional[float] = None) -> None:
+        if not self.state.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self._push(self.now if at is None else at, "switch_up", (node,))
+
+    def inject_net(self, event) -> None:
+        """Queue a ``repro.net.events`` NetworkEvent at its own ``at``."""
+        from ..net.events import LinkDown, LinkUp, SwitchDown, SwitchUp
+
+        if isinstance(event, LinkDown):
+            self.fail_link(event.link, at=event.at)
+        elif isinstance(event, LinkUp):
+            self.recover_link(event.link, at=event.at)
+        elif isinstance(event, SwitchDown):
+            self.fail_switch(event.node, at=event.at)
+        elif isinstance(event, SwitchUp):
+            self.recover_switch(event.node, at=event.at)
+        else:
+            raise TypeError(f"not a network event: {event!r}")
+
     # -- the loop -----------------------------------------------------------
     def run_until(self, t: float) -> None:
         """Process every queued event with fire time ≤ ``t``, in time order
@@ -760,29 +966,227 @@ class ClusterController:
             at, _seq, kind, payload = heapq.heappop(self._events)
             self.now = max(self.now, at)
             self.state.advance(max(self.state.now, at))
+            self._gc_tables(at)
             if kind == "job":
                 (jid,) = payload
                 rec = self.jobs[jid]
                 rec.assignments = self.policy.place_batch(rec.tasks, self.state)
                 rec.placed = True
+                for a in rec.assignments:
+                    if a.transfer is not None and a.transfer.slot_fracs:
+                        self._install(("job", jid, a.tid), a.source, a.node,
+                                      a.transfer)
+                        self._live_jobs[jid] = max(
+                            self._live_jobs.get(jid, 0.0), a.transfer.end
+                        )
             elif kind == "flow":
                 (flow,) = payload
                 self.state.observe_flow(flow)
             elif kind == "transfer":
                 size, links, tag = payload
-                rows = self.state.ledger.rows(links)
-                plan = self.state.ledger.plan_transfer(size, rows, not_before=at)
-                self.state.ledger.commit(plan)
                 if tag is None:
                     tag = ("flow", self._auto_flow)
                     self._auto_flow += 1
-                self.flows[tag] = plan
+                dead = self.dataplane.all_dead_links()
+                if any(l in dead for l in links):
+                    # Requested links are down: suspend until recovery.
+                    self._suspended.append((tag, links, size))
+                else:
+                    rows = self.state.ledger.rows(links)
+                    plan = self.state.ledger.plan_transfer(
+                        size, rows, not_before=at
+                    )
+                    self.state.ledger.commit(plan)
+                    self.flows[tag] = plan
+            elif kind == "link_down":
+                (name,) = payload
+                self.dataplane.fail_link(name)
+                self._reroute_dead(at)
+            elif kind == "link_up":
+                (name,) = payload
+                self.dataplane.recover_link(name)
+                self._resume_flows(at)
+            elif kind == "switch_down":
+                (node,) = payload
+                self.dataplane.fail_switch(node)
+                self._reroute_dead(at)
+            elif kind == "switch_up":
+                (node,) = payload
+                self.dataplane.recover_switch(node)
+                self._resume_flows(at)
         self.now = max(self.now, t)
+        self._gc_tables(self.now)
 
     def run(self) -> None:
         """Drain the event queue completely."""
         while self._events:
             self.run_until(self._events[0][0])
+
+    # -- data-plane bookkeeping ---------------------------------------------
+    def _install(self, cookie, src: Optional[str], dst: str,
+                 plan: TransferPlan) -> None:
+        """Push the transfer's per-switch rules; schedule their expiry."""
+        if src is None:
+            return
+        links = self.state.ledger.link_names(plan.links)
+        self.dataplane.tables.install_path(cookie, src, dst, links)
+        gen = self._flow_gen.get(cookie, 0) + 1
+        self._flow_gen[cookie] = gen
+        heapq.heappush(self._expiry, (plan.end, gen, cookie))
+
+    def _gc_tables(self, now: float) -> None:
+        """Uninstall rules of transfers that have completed by ``now``.
+
+        Generation guard: a reroute reinstalls under the same cookie with a
+        later end — the stale expiry entry must not strip the new rules.
+        """
+        while self._expiry and self._expiry[0][0] <= now + _EPS:
+            _end, gen, cookie = heapq.heappop(self._expiry)
+            if self._flow_gen.get(cookie) == gen:
+                self.dataplane.tables.uninstall(cookie)
+                del self._flow_gen[cookie]
+
+    # -- failure-aware rerouting --------------------------------------------
+    def _reroute_dead(self, at: float) -> None:
+        """Re-plan every in-flight transfer whose path just died.
+
+        Semantics (DESIGN.md §4): slots consumed before the failure slot
+        stay booked (those bytes arrived); the failure slot and everything
+        after are released, and the remaining bytes are re-planned on the
+        best surviving (replica, path) candidate starting at ``at``.
+        Raises :class:`UnroutableError` when a victim has no surviving
+        path — there are no silent stalls.
+        """
+        from ..net.events import RerouteRecord
+
+        ledger = self.state.ledger
+        dead_names = self.dataplane.all_dead_links()
+        dead_rows = {ledger.rows((n,))[0] for n in dead_names}
+        touched_nodes = set()
+        rerouted_tids = set()
+
+        # Only jobs with a transfer still in flight can be affected; the
+        # index self-prunes (completed / popped jobs drop out here), so a
+        # long-lived controller's failure handling stays O(in-flight).
+        for jid, latest_end in list(self._live_jobs.items()):
+            rec = self.jobs.get(jid)
+            if rec is None or latest_end <= at + _EPS:
+                del self._live_jobs[jid]
+                continue
+            tasks = None
+            for a in rec.assignments:
+                plan = a.transfer
+                if plan is None or not plan.slot_fracs:
+                    continue
+                if plan.end <= at + _EPS or not (set(plan.links) & dead_rows):
+                    continue
+                if tasks is None:
+                    tasks = {tk.tid: tk for tk in rec.tasks}
+                task = tasks[a.tid]
+                old_names = ledger.link_names(plan.links)
+                # Remaining bytes come from the *current* plan, not
+                # task.size — after an earlier reroute the plan already
+                # carries only the then-remaining bytes.
+                total = ledger.plan_bytes(plan)
+                kept = ledger.release_after(plan, at)
+                delivered = ledger.plan_bytes(kept)
+                remaining = max(total - delivered, 0.0)
+                # A transfer that had not started yet keeps its queue
+                # position (its original start), it does not jump to the
+                # failure instant — rerouting must never act as prefetch.
+                nb = max(at, plan.start)
+                src, _rows, new_plan = self.state.choose_source_path(
+                    task, a.node, nb, size=remaining
+                )
+                ledger.commit(new_plan)
+                cookie = ("job", rec.jid, a.tid)
+                self.dataplane.tables.uninstall(cookie)
+                self._install(cookie, src, a.node, new_plan)
+                self.reroute_log.append(RerouteRecord(
+                    at=at, flow=cookie, dead_links=tuple(sorted(
+                        dead_names & set(old_names))),
+                    src=src, dst=a.node,
+                    old_path=old_names,
+                    new_path=ledger.link_names(new_plan.links),
+                    delivered=delivered, remaining=remaining,
+                    old_end=plan.end, new_end=new_plan.end,
+                ))
+                a.source, a.transfer = src, new_plan
+                rec.rerouted += 1
+                rerouted_tids.add(a.tid)
+                touched_nodes.add(a.node)
+                self._live_jobs[jid] = max(
+                    self._live_jobs.get(jid, 0.0), new_plan.end
+                )
+
+        # Raw flows (explicit-link reservations, e.g. grad sync) cannot
+        # detour — suspend their remainder until the links recover.
+        for tag, plan in list(self.flows.items()):
+            if not plan.slot_fracs or plan.end <= at + _EPS:
+                continue
+            if not (set(plan.links) & dead_rows):
+                continue
+            total = ledger.plan_bytes(plan)
+            kept = ledger.release_after(plan, at)
+            delivered = ledger.plan_bytes(kept)
+            self.flows[tag] = kept
+            self._suspended.append(
+                (tag, ledger.link_names(plan.links), total - delivered)
+            )
+
+        if touched_nodes:
+            self._retime_nodes(touched_nodes, rerouted_tids)
+
+    def _resume_flows(self, at: float) -> None:
+        """Re-plan suspended raw flows whose links are all alive again."""
+        dead = self.dataplane.all_dead_links()
+        still = []
+        for tag, links, remaining in self._suspended:
+            if any(l in dead for l in links):
+                still.append((tag, links, remaining))
+                continue
+            rows = self.state.ledger.rows(links)
+            plan = self.state.ledger.plan_transfer(
+                remaining, rows, not_before=at
+            )
+            self.state.ledger.commit(plan)
+            self.flows[tag] = plan
+        self._suspended = still
+
+    def _retime_nodes(self, nodes, rerouted_tids=frozenset()) -> None:
+        """Recompute the compute timeline of every touched node.
+
+        Mirrors the replay oracle: tasks keep their committed order (old
+        start, tid), each starts at max(previous finish, its transfer's
+        end, its job's arrival), never before the node's initial idle
+        time.  Tasks whose transfer was *not* rerouted additionally never
+        move earlier than their committed start — external idle estimates
+        (``set_idle`` backlog refreshes) are folded into committed starts
+        and must not be rewound by a retime that only knows ``_idle0``.
+        The shared idle map and minnow heap are resynced.
+        """
+        for node in nodes:
+            items = [
+                (rec, a)
+                for rec in self.jobs.values()
+                for a in rec.assignments
+                if a.node == node
+            ]
+            items.sort(key=lambda ra: (ra[1].start, ra[1].tid))
+            t = self._idle0.get(node, 0.0)
+            for rec, a in items:
+                ready = rec.submit_at
+                if a.transfer is not None and a.transfer.slot_fracs:
+                    ready = max(ready, a.transfer.end)
+                task_compute = a.finish - a.start  # TP is start-invariant
+                start = max(t, ready)
+                if a.tid not in rerouted_tids:
+                    start = max(start, a.start)  # committed history holds
+                a.start = start
+                a.finish = start + task_compute
+                t = a.finish
+            self.state.idle[node] = max(t, self.state.now)
+        self.state.reheap()
 
     # -- results ------------------------------------------------------------
     def job_schedule(self, jid: int) -> Schedule:
@@ -817,4 +1221,5 @@ class ClusterController:
         mt = (max(maps) - rec.submit_at) if maps else jt
         n = len(rec.assignments)
         lr = sum(1 for a in rec.assignments if a.local) / n if n else 0.0
-        return JobMetrics(mt=mt, rt=jt - mt, jt=jt, lr=lr)
+        return JobMetrics(mt=mt, rt=jt - mt, jt=jt, lr=lr,
+                          rerouted=rec.rerouted)

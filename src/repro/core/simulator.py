@@ -176,6 +176,7 @@ class JobMetrics:
     rt: float
     jt: float
     lr: float
+    rerouted: int = 0  # transfers re-planned after link/switch failures
 
 
 def evaluate_mapreduce(

@@ -296,11 +296,56 @@ class TimeSlotLedger:
         )
 
     def release(self, plan: TransferPlan) -> None:
+        """Exact inverse of :meth:`commit` — cancel a reserved transfer."""
         idx = list(plan.links)
         for slot, frac in plan.slot_fracs:
             self.reserved[idx, slot] = np.maximum(
                 self.reserved[idx, slot] - frac, 0.0
             )
+
+    def plan_bytes(self, plan: TransferPlan, until: Optional[float] = None) -> float:
+        """Capacity-units·seconds the plan delivers by ``until`` (default:
+        the whole plan — i.e. the transfer's total size as booked)."""
+        if not plan.slot_fracs:
+            return 0.0
+        cap = float(self.capacity[list(plan.links)].min())
+        t1 = plan.end if until is None else min(float(until), plan.end)
+        total = 0.0
+        for slot, frac in plan.slot_fracs:
+            lo = max(plan.start, slot * self.slot_duration)
+            hi = min(t1, (slot + 1) * self.slot_duration)
+            if hi > lo:
+                total += frac * cap * (hi - lo)
+        return total
+
+    def release_after(self, plan: TransferPlan, t: float) -> TransferPlan:
+        """Release the unconsumed tail of a committed plan (reroute support).
+
+        Every slot at/after ``t``'s slot is released; slots that completed
+        strictly before it stay committed.  The boundary slot — the one
+        ``t`` falls inside — is released *whole*: its bytes are forfeited
+        and must be retransmitted (see DESIGN.md §4; since controller
+        replans always use ``not_before >= t``, the freed past fraction
+        can never be double-booked).  Returns the kept (truncated) plan,
+        whose :meth:`plan_bytes` is exactly the delivered size.
+        """
+        if not plan.slot_fracs or t >= plan.end:
+            return plan
+        if t <= plan.start:
+            cut = plan.slot_fracs[0][0]
+        else:
+            cut = self.slot_of(t)
+        keep = tuple((s, f) for s, f in plan.slot_fracs if s < cut)
+        idx = list(plan.links)
+        for slot, frac in plan.slot_fracs:
+            if slot >= cut:
+                self.reserved[idx, slot] = np.maximum(
+                    self.reserved[idx, slot] - frac, 0.0
+                )
+        if not keep:
+            return TransferPlan(plan.links, plan.start, plan.start, ())
+        new_end = min(plan.end, cut * self.slot_duration)
+        return TransferPlan(plan.links, plan.start, new_end, keep)
 
     # -- convenience --------------------------------------------------------
     def transfer_time(

@@ -21,6 +21,18 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 
+class UnroutableError(ValueError):
+    """No (surviving) path exists between two endpoints.
+
+    Raised by ``Fabric.path`` on disconnected pairs and by the routing
+    layer — ``repro.net.paths`` and the controller's failure-aware
+    rerouting — when every candidate path is down.  Subclasses
+    ``ValueError`` (the historical ``Fabric.path`` exception) so existing
+    callers keep working.  Defined here so ``core`` can raise/catch it
+    without importing ``net``.
+    """
+
+
 @dataclass(frozen=True)
 class Link:
     """An undirected link with a symmetric capacity (paper's model)."""
@@ -53,6 +65,8 @@ class Fabric:
         self._roles: Dict[str, str] = {}
         self._path_cache: Dict[Tuple[str, str], Tuple[str, ...]] = {}
         self._parent: Dict[str, Tuple[str, str]] = {}  # child -> (parent, link)
+        self._nontree_links: set = set()  # links added outside add_uplink
+        self._version = 0
 
     # -- construction -----------------------------------------------------
     def add_node(self, name: str, role: Optional[str] = None) -> None:
@@ -76,7 +90,13 @@ class Fabric:
         self._links[name] = Link(name, a, b, capacity)
         self._adj[a].append(name)
         self._adj[b].append(name)
+        # Mutation invalidates every cached routing artifact: the Dijkstra
+        # path cache AND the tree-LCA shortcut — a cross link can make tree
+        # walks non-minimal, so any non-uplink edge disables them for good
+        # (``add_uplink`` re-registers its edge as a tree edge below).
         self._path_cache.clear()
+        self._nontree_links.add(name)
+        self._version += 1
 
     def add_uplink(
         self,
@@ -99,9 +119,15 @@ class Fabric:
         self.add_node(parent, "switch" if parent not in self._adj else None)
         self.add_node(child, role)
         self.add_link(name, child, parent, capacity)
+        self._nontree_links.discard(name)
         self._parent[child] = (parent, name)
 
     # -- queries -----------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter — path engines key their caches on it."""
+        return self._version
+
     @property
     def links(self) -> Dict[str, Link]:
         return dict(self._links)
@@ -119,6 +145,25 @@ class Fabric:
 
     def link(self, name: str) -> Link:
         return self._links[name]
+
+    def has_node(self, name: str) -> bool:
+        return name in self._adj
+
+    def incident_links(self, node: str) -> Tuple[str, ...]:
+        """Names of every link touching ``node`` (insertion order)."""
+        return tuple(self._adj[node])
+
+    def neighbors(self, node: str) -> Tuple[str, ...]:
+        return tuple(self._links[l].other(node) for l in self._adj[node])
+
+    def path_nodes(self, src: str, links: Sequence[str]) -> Tuple[str, ...]:
+        """Node sequence visited by walking ``links`` (a path) from ``src``."""
+        out = [src]
+        cur = src
+        for name in links:
+            cur = self._links[name].other(cur)
+            out.append(cur)
+        return tuple(out)
 
     def path(self, src: str, dst: str) -> Tuple[str, ...]:
         """Ordered link names on the min-hop path src→dst.
@@ -154,7 +199,7 @@ class Fabric:
                     prev[v] = (u, lname)
                     heapq.heappush(pq, (nd, v))
         if dst not in prev and dst != src:
-            raise ValueError(f"no path {src!r} -> {dst!r}")
+            raise UnroutableError(f"no path {src!r} -> {dst!r}")
         rev: List[str] = []
         node = dst
         while node != src:
@@ -166,9 +211,14 @@ class Fabric:
         return out
 
     def _tree_path(self, src: str, dst: str) -> Optional[Tuple[str, ...]]:
-        """LCA path when both endpoints live in the builder's tree."""
+        """LCA path when both endpoints live in the builder's tree.
+
+        Declines (→ Dijkstra fallback) as soon as any non-uplink edge
+        exists: a cross link can shorten paths the tree walk would miss
+        (the ``add_link``-after-``path()`` staleness bug).
+        """
         par = self._parent
-        if not par:
+        if not par or self._nontree_links:
             return None
         # Ancestor chains (node, link-to-parent) up to the root.
         def chain(n: str) -> Optional[List[Tuple[str, str]]]:

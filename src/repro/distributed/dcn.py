@@ -147,14 +147,33 @@ class CrossPodSync:
 
     def advance_to(self, t: float) -> Dict[int, StepFlow]:
         """Fire every registered sync event with cadence time ≤ ``t``;
-        returns the newly materialized per-step flows."""
+        returns the newly materialized per-step flows.
+
+        Also refreshes steps whose plan the controller replaced — a trunk
+        failure suspends the flow's unconsumed remainder and recovery
+        re-plans it, so the controller-side plan is authoritative."""
         before = set(self.flows)
         self.controller.run_until(t)
         size = self.wire_bytes()
         for tag, plan in self.controller.flows.items():
-            if isinstance(tag, int) and tag not in self.flows:
+            if not isinstance(tag, int):
+                continue
+            cur = self.flows.get(tag)
+            if cur is None or cur.plan is not plan:
                 self.flows[tag] = StepFlow(tag, plan, size)
         return {s: f for s, f in self.flows.items() if s not in before}
+
+    # -- network churn (SDN data plane) ------------------------------------
+    def fail_link(self, name: str, at: Optional[float] = None) -> None:
+        """A DCN trunk died: the in-flight sync's unconsumed slots are
+        released and its remainder suspends until :meth:`recover_link`
+        (explicit-link flows cannot detour — a pod trunk has no sibling)."""
+        self.controller.fail_link(name, at=at)
+        self.controller.run_until(self.controller.now)
+
+    def recover_link(self, name: str, at: Optional[float] = None) -> None:
+        self.controller.recover_link(name, at=at)
+        self.controller.run_until(self.controller.now)
 
     def projected_sync_seconds(self) -> float:
         """What the reservation implies for the roofline's DCN term."""

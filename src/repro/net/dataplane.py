@@ -1,0 +1,100 @@
+"""The SDN data plane: link liveness + path engine + flow tables.
+
+One :class:`DataPlane` sits under each ``ClusterController``.  It owns
+
+* the **liveness overlay** — failed links/switches are state *here*, not
+  mutations of the shared ``Fabric`` (the fabric stays the wiring diagram;
+  the data plane knows what is currently forwarding);
+* the **path engine** — k-shortest-path candidates per endpoint pair,
+  filtered through the overlay by :meth:`candidates`;
+* the **flow tables** — the per-switch rules of every in-flight transfer.
+
+With no failures injected, :meth:`candidates` returns the cached engine
+set whose first element is ``Fabric.path(src, dst)`` verbatim — so a
+controller that never sees churn behaves byte-identically to the
+pre-data-plane code.
+"""
+from __future__ import annotations
+
+from typing import FrozenSet, Optional, Set, Tuple
+
+from ..core.timeslot import TimeSlotLedger
+from ..core.topology import Fabric
+from .flowtable import FlowTables
+from .paths import Path, PathEngine, UnroutableError
+
+
+class DataPlane:
+    def __init__(self, fabric: Fabric, k: int = 4) -> None:
+        self.fabric = fabric
+        self.engine = PathEngine(fabric, k=k)
+        self.tables = FlowTables(fabric)
+        self.dead_links: Set[str] = set()    # individually failed
+        self.dead_switches: Set[str] = set()
+        self._dead_all: Optional[FrozenSet[str]] = None  # overlay cache
+
+    # -- liveness overlay ---------------------------------------------------
+    def fail_link(self, name: str) -> None:
+        self.fabric.link(name)  # KeyError on unknown link
+        self.dead_links.add(name)
+        self._dead_all = None
+
+    def recover_link(self, name: str) -> None:
+        self.dead_links.discard(name)
+        self._dead_all = None
+
+    def fail_switch(self, node: str) -> None:
+        if not self.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self.dead_switches.add(node)
+        self._dead_all = None
+
+    def recover_switch(self, node: str) -> None:
+        self.dead_switches.discard(node)
+        self._dead_all = None
+
+    def all_dead_links(self) -> FrozenSet[str]:
+        """Explicitly failed links plus every link touching a dead switch."""
+        if self._dead_all is None:
+            dead = set(self.dead_links)
+            for sw in self.dead_switches:
+                dead.update(self.fabric.incident_links(sw))
+            self._dead_all = frozenset(dead)
+        return self._dead_all
+
+    def has_failures(self) -> bool:
+        return bool(self.dead_links or self.dead_switches)
+
+    def link_alive(self, name: str) -> bool:
+        return name not in self.all_dead_links()
+
+    def host_alive(self, node: str) -> bool:
+        """A host can send/receive iff it is up and has a live incident link."""
+        if node in self.dead_switches:
+            return False
+        dead = self.all_dead_links()
+        return any(l not in dead for l in self.fabric.incident_links(node))
+
+    # -- routing ------------------------------------------------------------
+    def candidates(
+        self, src: str, dst: str, k: Optional[int] = None
+    ) -> Tuple[Path, ...]:
+        """Surviving candidate paths src→dst (raises UnroutableError)."""
+        if src in self.dead_switches or dst in self.dead_switches:
+            raise UnroutableError(f"endpoint down: {src!r} -> {dst!r}")
+        return self.engine.route(src, dst, self.all_dead_links(), k=k)
+
+    def usable(self, src: str, dst: str) -> bool:
+        try:
+            self.candidates(src, dst, k=1)
+            return True
+        except UnroutableError:
+            return False
+
+    def best_path(
+        self, ledger: TimeSlotLedger, src: str, dst: str, t: float,
+        k: Optional[int] = None,
+    ) -> Path:
+        """Best surviving path by residual bandwidth at ``t``."""
+        cands = self.candidates(src, dst, k=k)
+        return cands[self.engine.best(ledger, cands, t)]

@@ -1,0 +1,227 @@
+"""k-shortest-path engine — the data plane's multipath routing table.
+
+The control plane (``core.topology.Fabric``) resolves *one* min-hop path
+per node pair; real SDN data planes hold several candidates per pair so the
+controller can load-balance (ECMP), steer around congestion, and fail over
+when a link dies.  This module provides:
+
+* :func:`k_shortest_paths` — Yen's algorithm over a ``Fabric`` with
+  hop-count metric.  ``k=1`` returns exactly ``Fabric.path(src, dst)``
+  (byte-identical — the regression the tier-1 tests pin), so single-path
+  callers lose nothing by routing through the engine.
+* :class:`PathEngine` — a per-fabric cache of candidate sets keyed on the
+  fabric's mutation ``version``, with dead-link-aware :meth:`route` (the
+  failure-rerouting entry) and vectorized scoring: candidates materialize
+  as ``[n_paths, n_links]`` incidence rows so one
+  :meth:`~repro.core.timeslot.TimeSlotLedger.path_bandwidth_batch` pass
+  prices every path.
+
+Ties break deterministically everywhere: Dijkstra relaxes links in sorted
+name order with a lexicographic node tie-break (same discipline as
+``Fabric.path``), and Yen's candidate pool orders by (hop count, link-name
+sequence).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.timeslot import TimeSlotLedger
+from ..core.topology import Fabric, UnroutableError  # noqa: F401  (re-export)
+
+Path = Tuple[str, ...]
+
+
+def _dijkstra(
+    fabric: Fabric,
+    src: str,
+    dst: str,
+    banned_links: FrozenSet[str],
+    banned_nodes: FrozenSet[str],
+) -> Optional[Path]:
+    """Hop-count Dijkstra that can exclude links/nodes (Yen spur searches).
+
+    Mirrors ``Fabric.path``'s relaxation order exactly so that with no
+    exclusions the two agree link-for-link.
+    """
+    if src == dst:
+        return ()
+    dist: Dict[str, int] = {src: 0}
+    prev: Dict[str, Tuple[str, str]] = {}
+    pq: List[Tuple[int, str]] = [(0, src)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if u == dst:
+            break
+        if d > dist.get(u, 1 << 30):
+            continue
+        for lname in sorted(fabric.incident_links(u)):
+            if lname in banned_links:
+                continue
+            v = fabric.link(lname).other(u)
+            if v in banned_nodes:
+                continue
+            nd = d + 1
+            if nd < dist.get(v, 1 << 30):
+                dist[v] = nd
+                prev[v] = (u, lname)
+                heapq.heappush(pq, (nd, v))
+    if dst not in prev:
+        return None
+    rev: List[str] = []
+    node = dst
+    while node != src:
+        pnode, via = prev[node]
+        rev.append(via)
+        node = pnode
+    return tuple(reversed(rev))
+
+
+def k_shortest_paths(
+    fabric: Fabric,
+    src: str,
+    dst: str,
+    k: int,
+    banned_links: Iterable[str] = (),
+    banned_nodes: Iterable[str] = (),
+) -> Tuple[Path, ...]:
+    """Up to ``k`` loop-free min-hop paths src→dst (Yen's algorithm).
+
+    Fewer than ``k`` paths are returned when the graph holds fewer;
+    :class:`UnroutableError` is raised when there is none at all.  With no
+    exclusions the first path is ``Fabric.path(src, dst)`` verbatim.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    bl, bn = frozenset(banned_links), frozenset(banned_nodes)
+    if src == dst:
+        return ((),)
+    if not bl and not bn:
+        first: Optional[Path] = fabric.path(src, dst)
+    else:
+        first = _dijkstra(fabric, src, dst, bl, bn)
+    if first is None:
+        raise UnroutableError(f"no surviving path {src!r} -> {dst!r}")
+    found: List[Path] = [first]
+    seen = {first}
+    pool: List[Tuple[int, Path]] = []  # (hops, path) candidate heap
+    while len(found) < k:
+        prev_path = found[-1]
+        prev_nodes = fabric.path_nodes(src, prev_path)
+        for j in range(len(prev_path)):
+            spur_node = prev_nodes[j]
+            root = prev_path[:j]
+            # Paths already found that share this root may not be rediscovered:
+            # ban their next link out of the spur node.
+            spur_bl = set(bl)
+            for p in found:
+                if len(p) > j and p[:j] == root:
+                    spur_bl.add(p[j])
+            spur_bn = bn | set(prev_nodes[:j])
+            spur = _dijkstra(fabric, spur_node, dst, frozenset(spur_bl), spur_bn)
+            if spur is None:
+                continue
+            cand = root + spur
+            if cand not in seen:
+                seen.add(cand)
+                heapq.heappush(pool, (len(cand), cand))
+        if not pool:
+            break
+        _, best = heapq.heappop(pool)
+        found.append(best)
+    return tuple(found)
+
+
+class PathEngine:
+    """Cached k-shortest-path candidate sets over one :class:`Fabric`.
+
+    Caches key on ``(src, dst, k)`` and are dropped wholesale whenever the
+    fabric's ``version`` moves (link added) — the engine can never serve a
+    pre-mutation path.
+    """
+
+    def __init__(self, fabric: Fabric, k: int = 4) -> None:
+        self.fabric = fabric
+        self.k = int(k)
+        self._cache: Dict[Tuple[str, str, int], Tuple[Path, ...]] = {}
+        # Detour results under a specific dead-link set; keyed on the set
+        # so liveness changes miss naturally (and the fast path below never
+        # consults it).
+        self._fail_cache: Dict[
+            Tuple[str, str, int, FrozenSet[str]], Tuple[Path, ...]
+        ] = {}
+        self._version = fabric.version
+
+    def _fresh(self) -> None:
+        if self.fabric.version != self._version:
+            self._cache.clear()
+            self._fail_cache.clear()
+            self._version = self.fabric.version
+
+    def paths(self, src: str, dst: str, k: Optional[int] = None) -> Tuple[Path, ...]:
+        """The cached candidate set (all links assumed alive)."""
+        kk = self.k if k is None else int(k)
+        self._fresh()
+        key = (src, dst, kk)
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = k_shortest_paths(self.fabric, src, dst, kk)
+            self._cache[key] = hit
+        return hit
+
+    def route(
+        self,
+        src: str,
+        dst: str,
+        dead_links: Iterable[str] = (),
+        k: Optional[int] = None,
+    ) -> Tuple[Path, ...]:
+        """Surviving candidates src→dst given ``dead_links``.
+
+        Fast path: filter the cached candidate set.  If every cached
+        candidate died, re-run Yen with the dead links excluded — a detour
+        longer than the cached k-set can still exist.  Raises
+        :class:`UnroutableError` when nothing survives.
+        """
+        dead = frozenset(dead_links)
+        cands = self.paths(src, dst, k)
+        if not dead:
+            return cands
+        alive = tuple(p for p in cands if not (dead & frozenset(p)))
+        if alive:
+            return alive
+        kk = self.k if k is None else int(k)
+        key = (src, dst, kk, dead)
+        hit = self._fail_cache.get(key)
+        if hit is None:
+            hit = k_shortest_paths(self.fabric, src, dst, kk, banned_links=dead)
+            self._fail_cache[key] = hit
+        return hit
+
+    # -- vectorized scoring -------------------------------------------------
+    def incidence(
+        self, ledger: TimeSlotLedger, paths: Sequence[Path]
+    ) -> np.ndarray:
+        """``[n_paths, n_links]`` 0/1 incidence matrix in ledger row order."""
+        m = np.zeros((len(paths), len(ledger.capacity)))
+        for i, p in enumerate(paths):
+            if p:
+                m[i, list(ledger.rows(p))] = 1.0
+        return m
+
+    def score(
+        self, ledger: TimeSlotLedger, paths: Sequence[Path], t: float
+    ) -> np.ndarray:
+        """Residual path bandwidth of every candidate at ``t`` — one
+        :meth:`TimeSlotLedger.path_bandwidth_batch` numpy pass."""
+        return ledger.path_bandwidth_batch([ledger.rows(p) for p in paths], t)
+
+    def best(
+        self, ledger: TimeSlotLedger, paths: Sequence[Path], t: float
+    ) -> int:
+        """Index of the best candidate: most residual bandwidth, ties to
+        fewer hops then candidate order (Yen order is deterministic)."""
+        bws = self.score(ledger, paths, t)
+        return min(range(len(paths)), key=lambda i: (-bws[i], len(paths[i]), i))

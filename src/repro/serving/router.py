@@ -26,8 +26,12 @@ import numpy as np
 
 from ..core.controller import BassPolicy, ClusterController
 from ..core.tasks import Assignment, Task
-from ..core.topology import Fabric, tpu_dcn_fabric
+from ..core.topology import Fabric, UnroutableError, tpu_dcn_fabric
 from .engine import Request
+
+#: Backlog surcharge (seconds) pricing an unreachable replica out of the
+#: minnow choice while it is partitioned from the fabric.
+_DEAD_BACKLOG_S = 1e15
 
 
 @dataclass
@@ -75,10 +79,32 @@ class BassRouter:
     def update_backlog(self, backlog: Dict[str, float]) -> None:
         self.backlog.update(backlog)
 
+    # -- network churn (SDN data plane) ------------------------------------
+    def fail_link(self, name: str) -> None:
+        """A replica NIC/fabric link died: reroute in-flight migrations now
+        and steer subsequent requests away from unreachable replicas."""
+        self.controller.fail_link(name)
+        self.controller.run_until(self.controller.now)
+
+    def recover_link(self, name: str) -> None:
+        self.controller.recover_link(name)
+        self.controller.run_until(self.controller.now)
+
+    def _alive(self, replica: str) -> bool:
+        return self.controller.dataplane.host_alive(replica)
+
     def route(self, req: Request, now: float = 0.0) -> RouteDecision:
+        if not any(self._alive(r) for r in self.replicas):
+            # No silent stalls: parking a request on a partitioned replica
+            # would strand it behind the 1e15 s backlog surcharge.
+            raise UnroutableError(
+                f"request {req.rid}: every replica is unreachable"
+            )
         work_s = req.max_new * self.decode_s_per_token
         holders = [
-            r for r in self.prefix_home.get(req.prefix_hash, []) if r in self.replicas
+            r
+            for r in self.prefix_home.get(req.prefix_hash, [])
+            if r in self.replicas and self._alive(r)
         ]
         # Cold prefix: no usable holders — route to the coldest replica
         # (Case 2-style single-holder task; the data is born there).
@@ -92,9 +118,16 @@ class BassRouter:
         # request; the controller then places the request as a one-task job.
         # Clamp against the controller clock: request timestamps from
         # concurrent frontends may arrive slightly out of order.
+        # Unreachable replicas (dead NIC / partitioned) are priced out of the
+        # minnow choice instead of removed — recovery needs no rebuild.
         at = max(now, self.controller.now)
         self.controller.state.set_idle(
-            {r: at + self.backlog.get(r, 0.0) for r in self.replicas}
+            {
+                r: at + self.backlog.get(r, 0.0)
+                if self._alive(r)
+                else at + _DEAD_BACKLOG_S
+                for r in self.replicas
+            }
         )
         jid = self.controller.submit([task], at=at)
         self.controller.run_until(at)
@@ -115,4 +148,5 @@ class BassRouter:
         )
 
     def _coldest(self) -> str:
-        return min(self.replicas, key=lambda r: (self.backlog.get(r, 0.0), r))
+        live = [r for r in self.replicas if self._alive(r)] or self.replicas
+        return min(live, key=lambda r: (self.backlog.get(r, 0.0), r))

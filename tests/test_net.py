@@ -1,0 +1,536 @@
+"""SDN data-plane tests: k-shortest paths, flow tables, failure rerouting.
+
+Covers the acceptance scenarios of the ``repro.net`` subsystem:
+
+* k=1 routing is byte-identical to ``Fabric.path`` on the Fig. 2 testbed
+  and leaf/spine builders;
+* ECMP spread on a k=4 fat-tree (sequential transfers fan out over the
+  equal-cost core paths);
+* path-cache staleness regression (``add_link`` after a ``path()`` query);
+* ``release_after`` / ``plan_bytes`` partial-release invariants;
+* fail-link mid-transfer → the job still completes (later, finite);
+* fail-all-paths → explicit ``UnroutableError``;
+* router / DCN consumers survive injected failures.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import BassPolicy, ClusterController, HdsPolicy
+from repro.core.simulator import replay_online
+from repro.core.tasks import Task
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import (
+    Fabric,
+    UnroutableError,
+    paper_fig2_fabric,
+    storage_hosts,
+    two_tier_fabric,
+)
+from repro.net import (
+    DataPlane,
+    FlowTables,
+    LinkDown,
+    PathEngine,
+    fat_tree_fabric,
+    k_shortest_paths,
+    oversubscribed_leaf_spine,
+)
+
+
+# ---------------------------------------------------------------------------
+# k-shortest paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "fab", [paper_fig2_fabric(), two_tier_fabric(3, 4)], ids=["fig2", "leafspine"]
+)
+def test_k1_byte_identical_to_fabric_path(fab):
+    nodes = fab.nodes
+    for a in nodes:
+        for b in nodes:
+            if a != b:
+                assert k_shortest_paths(fab, a, b, 1) == (fab.path(a, b),)
+
+
+def test_yen_candidates_fat_tree():
+    ft = fat_tree_fabric(4)
+    paths = k_shortest_paths(ft, "pod0/h0_0", "pod1/h0_0", 8)
+    # (k/2)^2 = 4 equal-cost 6-hop inter-pod paths, then 8-hop detours.
+    assert [len(p) for p in paths[:4]] == [6, 6, 6, 6]
+    assert len(set(paths)) == len(paths)
+    for p in paths:
+        # each candidate is a real loop-free src→dst walk
+        nodes = ft.path_nodes("pod0/h0_0", p)
+        assert nodes[-1] == "pod1/h0_0"
+        assert len(set(nodes)) == len(nodes)
+    # lengths are non-decreasing (Yen pops candidates best-first)
+    lens = [len(p) for p in paths]
+    assert lens == sorted(lens)
+
+
+def test_unroutable_raises():
+    fab = Fabric()
+    fab.add_node("A")
+    fab.add_node("B")
+    with pytest.raises(UnroutableError):
+        k_shortest_paths(fab, "A", "B", 1)
+
+
+def test_ecmp_spread_on_fat_tree():
+    """Concurrent pod0→pod1 transfers fan out over all four core switches.
+
+    The pairs differ (per-host uplinks are never the shared bottleneck);
+    what they contend on is the edge→agg→core tier, and residue-driven
+    path choice must spread them across distinct cores.
+    """
+    ft = fat_tree_fabric(4, link_mbps=100.0)
+    ledger = TimeSlotLedger(ft, 1.0, 64)
+    engine = PathEngine(ft, k=4)
+    pairs = [(f"pod0/h{e}_{i}", f"pod1/h{e}_{i}") for e in (0, 1) for i in (0, 1)]
+    cores = []
+    for src, dst in pairs:
+        cands = engine.paths(src, dst)
+        i = engine.best(ledger, cands, 0.0)
+        plan = ledger.plan_transfer(400.0, ledger.rows(cands[i]), not_before=0.0)
+        ledger.commit(plan)
+        nodes = ft.path_nodes(src, cands[i])
+        cores.append([n for n in nodes if n.startswith("core")][0])
+    assert len(set(cores)) == 4  # all four cores carry one transfer each
+
+
+def test_incidence_matrix_matches_rows():
+    ft = fat_tree_fabric(4)
+    ledger = TimeSlotLedger(ft, 1.0, 16)
+    engine = PathEngine(ft, k=4)
+    paths = engine.paths("pod0/h0_0", "pod3/h1_0")
+    m = engine.incidence(ledger, paths)
+    assert m.shape == (len(paths), len(ledger.capacity))
+    for i, p in enumerate(paths):
+        assert m[i].sum() == len(p)
+        assert set(np.nonzero(m[i])[0]) == set(ledger.rows(p))
+
+
+def test_path_engine_cache_invalidates_on_mutation():
+    fab = Fabric()
+    fab.add_uplink("l1", "A", "M", 100.0)
+    fab.add_uplink("l2", "B", "M", 100.0)
+    engine = PathEngine(fab, k=2)
+    assert engine.paths("A", "B") == (("l1", "l2"),)
+    fab.add_link("direct", "A", "B", 100.0)
+    assert engine.paths("A", "B")[0] == ("direct",)
+
+
+# ---------------------------------------------------------------------------
+# Fabric staleness regression (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_path_cache_invalidated_by_add_link():
+    fab = Fabric()
+    fab.add_uplink("l1", "A", "M", 100.0)
+    fab.add_uplink("l2", "B", "M", 100.0)
+    # Query first: caches the 2-hop tree path.
+    assert fab.path("A", "B") == ("l1", "l2")
+    fab.add_link("direct", "A", "B", 100.0)
+    # The shortcut must be visible — stale tree/LCA answers are the bug.
+    assert fab.path("A", "B") == ("direct",)
+    assert fab.path("B", "A") == ("direct",)
+
+
+def test_fabric_version_counts_mutations():
+    fab = Fabric()
+    v0 = fab.version
+    fab.add_uplink("l1", "A", "M", 100.0)
+    assert fab.version > v0
+
+
+# ---------------------------------------------------------------------------
+# Flow tables
+# ---------------------------------------------------------------------------
+
+
+def test_flow_table_install_trace_uninstall():
+    ft = fat_tree_fabric(4)
+    tables = FlowTables(ft)
+    path = k_shortest_paths(ft, "pod0/h0_0", "pod1/h1_0", 1)[0]
+    rules = tables.install_path("xfer1", "pod0/h0_0", "pod1/h1_0", path)
+    assert len(rules) == len(path)  # one rule per hop except the destination
+    assert tables.trace("pod0/h0_0", "pod1/h1_0") == path
+    # dump is per-node inspectable
+    first_hop = ft.path_nodes("pod0/h0_0", path)[0]
+    assert any(r.cookie == "xfer1" for r in tables.dump(first_hop))
+    assert tables.uninstall("xfer1") == len(path)
+    assert tables.n_rules() == 0
+    with pytest.raises(LookupError):
+        tables.trace("pod0/h0_0", "pod1/h1_0")
+
+
+def test_flow_table_reroute_overrides_lookup():
+    ft = fat_tree_fabric(4)
+    tables = FlowTables(ft)
+    src, dst = "pod0/h0_0", "pod1/h0_0"
+    p1, p2 = k_shortest_paths(ft, src, dst, 2)
+    tables.install_path("t", src, dst, p1)
+    tables.uninstall("t")
+    tables.install_path("t", src, dst, p2)
+    assert tables.trace(src, dst) == p2
+
+
+def test_controller_installs_and_expires_rules():
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    ctrl.submit([Task(tid=1, size=500.0, compute=2.0, replicas=("H0",))], at=0.0)
+    ctrl.run_until(0.0)
+    assert ctrl.dataplane.tables.n_rules() > 0
+    a = ctrl.jobs[0].assignments[0]
+    # advancing the clock past the transfer's end garbage-collects its
+    # rules — no trailing event required
+    ctrl.run_until(a.transfer.end + 1.0)
+    assert ctrl.dataplane.tables.n_rules() == 0
+
+
+# ---------------------------------------------------------------------------
+# Ledger: release / release_after (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _contended_ledger():
+    led = TimeSlotLedger(paper_fig2_fabric(100.0), 1.0, 64)
+    rows = led.rows(led.fabric.path("N2", "N1"))
+    led.reserved[list(rows), 2:5] = 0.35  # pre-existing contention
+    return led, rows
+
+
+def test_release_after_start_is_full_release():
+    led, rows = _contended_ledger()
+    before = led.reserved.copy()
+    plan = led.plan_transfer(700.0, rows, not_before=0.5)
+    led.commit(plan)
+    kept = led.release_after(plan, plan.start)
+    assert kept.slot_fracs == ()
+    np.testing.assert_allclose(led.reserved, before, atol=1e-12)
+
+
+def test_release_after_midway_conserves_bytes():
+    led, rows = _contended_ledger()
+    plan = led.plan_transfer(650.0, rows, not_before=0.0)
+    led.commit(plan)
+    total = led.plan_bytes(plan)
+    assert total == pytest.approx(650.0, rel=1e-6)
+    t_fail = (plan.start + plan.end) / 2.0
+    kept = led.release_after(plan, t_fail)
+    delivered = led.plan_bytes(kept)
+    # Forfeit-boundary-slot semantics: delivered counts whole slots that
+    # completed strictly before t_fail's slot.
+    assert 0.0 <= delivered < total
+    assert kept.end <= t_fail + 1e-9
+    # Replanning the remainder then releasing both restores a clean matrix.
+    rest = led.plan_transfer(total - delivered, rows, not_before=t_fail)
+    led.commit(rest)
+    assert led.plan_bytes(rest) == pytest.approx(total - delivered, rel=1e-6)
+    led.release(rest)
+    led.release_after(kept, 0.0)
+    assert led.reserved[:, :2].max() == 0.0
+    assert led.reserved[:, 5:].max() == 0.0
+
+
+def test_release_after_past_end_is_noop():
+    led, rows = _contended_ledger()
+    plan = led.plan_transfer(300.0, rows, not_before=0.0)
+    led.commit(plan)
+    after = led.reserved.copy()
+    assert led.release_after(plan, plan.end + 1.0) is plan
+    np.testing.assert_allclose(led.reserved, after, atol=0)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(size=st.floats(20.0, 900.0), nb=st.floats(0.0, 8.0),
+           frac=st.floats(0.0, 0.7))
+    @settings(max_examples=40, deadline=None)
+    def test_commit_release_roundtrip_contended(size, nb, frac):
+        """commit→release restores the reserved-fraction matrix exactly,
+        including on ledgers carrying prior contention."""
+        led = TimeSlotLedger(paper_fig2_fabric(100.0), 1.0, 64)
+        rows = led.rows(led.fabric.path("N3", "N1"))
+        led.reserved[list(rows), 1:6] = frac
+        before = led.reserved.copy()
+        plan = led.plan_transfer(size, rows, not_before=nb)
+        led.commit(plan)
+        led.release(plan)
+        n = before.shape[1]
+        np.testing.assert_allclose(led.reserved[:, :n], before, atol=1e-12)
+
+    @given(size=st.floats(50.0, 900.0), t_frac=st.floats(0.0, 1.2))
+    @settings(max_examples=40, deadline=None)
+    def test_release_after_partitions_release(size, t_frac):
+        """release_after(t) + release(kept) ≡ release(plan) for any t."""
+        led = TimeSlotLedger(paper_fig2_fabric(100.0), 1.0, 64)
+        rows = led.rows(led.fabric.path("N4", "N2"))
+        before = led.reserved.copy()
+        plan = led.plan_transfer(size, rows, not_before=0.0)
+        led.commit(plan)
+        t = plan.start + t_frac * (plan.end - plan.start)
+        kept = led.release_after(plan, t)
+        led.release(kept)
+        n = before.shape[1]
+        np.testing.assert_allclose(led.reserved[:, :n], before, atol=1e-12)
+
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Failure-aware rerouting through the controller
+# ---------------------------------------------------------------------------
+
+
+def _remote_job():
+    """Two tasks whose replicas live on leaf 0, workers on leaf 1 — every
+    placement needs a cross-spine transfer."""
+    return [
+        Task(tid=1, size=2000.0, compute=5.0, replicas=("H0",)),
+        Task(tid=2, size=1500.0, compute=4.0, replicas=("H1",)),
+    ]
+
+
+def test_fail_link_mid_transfer_job_completes():
+    fab = oversubscribed_leaf_spine(2, 2, 2, host_mbps=100.0, spine_mbps=100.0)
+    baseline = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    baseline.submit(_remote_job(), at=0.0)
+    baseline.run()
+    base_mk = baseline.jobs[0].makespan
+
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    ctrl.submit(_remote_job(), at=0.0)
+    ctrl.run_until(0.0)
+    victim = ctrl.jobs[0].assignments[0]
+    assert victim.transfer is not None
+    t_fail = (victim.transfer.start + victim.transfer.end) / 2.0
+    dead = ctrl.state.ledger.link_names(victim.transfer.links)[1]  # spine hop
+    ctrl.fail_link(dead, at=t_fail)
+    ctrl.run()
+
+    rec = ctrl.jobs[0]
+    assert rec.rerouted >= 1
+    assert len(ctrl.reroute_log) >= 1
+    assert np.isfinite(rec.makespan)
+    assert rec.makespan >= base_mk - 1e-9  # failure can't speed the job up
+    assert (ctrl.state.ledger.reserved <= 1.0 + 1e-6).all()
+    # the rerouted plan avoids the dead link
+    for a in rec.assignments:
+        if a.transfer is not None and a.transfer.slot_fracs:
+            assert dead not in ctrl.state.ledger.link_names(a.transfer.links)
+    # replay oracle: recomputed timeline is causally consistent
+    rep = replay_online([(0.0, _remote_job())], ctrl.schedule(),
+                        {w: 0.0 for w in ["H2", "H3"]})
+    assert rep.ok, rep.violations[:3]
+    assert ctrl.job_metrics(0).rerouted == rec.rerouted
+
+
+def test_fail_all_paths_raises_unroutable():
+    fab = oversubscribed_leaf_spine(2, 2, 2, host_mbps=100.0, spine_mbps=100.0)
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    ctrl.submit(_remote_job(), at=0.0)
+    ctrl.run_until(0.0)
+    ctrl.fail_link("ls/L0S0", at=3.0)
+    ctrl.fail_link("ls/L0S1", at=3.0)
+    with pytest.raises(UnroutableError):
+        ctrl.run()
+
+
+def test_switch_failure_reroutes_and_recovers():
+    fab = oversubscribed_leaf_spine(2, 2, 2, host_mbps=100.0, spine_mbps=100.0)
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy(multipath=True))
+    ctrl.submit(_remote_job(), at=0.0)
+    ctrl.run_until(0.0)
+    ctrl.fail_switch("Spine0", at=2.0)
+    ctrl.recover_switch("Spine0", at=40.0)
+    ctrl.run()
+    rec = ctrl.jobs[0]
+    assert np.isfinite(rec.makespan)
+    assert not ctrl.dataplane.has_failures()
+    for a in rec.assignments:
+        if a.transfer is not None and a.transfer.slot_fracs:
+            names = ctrl.state.ledger.link_names(a.transfer.links)
+            # transfers planned/rerouted during the outage avoid Spine0
+            if a.transfer.start >= 2.0 - 1e-9 and a.transfer.end <= 40.0:
+                assert not any(n.endswith("S0") for n in names)
+
+
+def test_fail_and_recover_validate_names():
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    with pytest.raises(KeyError):
+        ctrl.fail_link("no-such-link")
+    with pytest.raises(KeyError):
+        ctrl.recover_link("no-such-link")  # typo'd recovery must not no-op
+    with pytest.raises(ValueError):
+        ctrl.fail_switch("no-such-node")
+    with pytest.raises(ValueError):
+        ctrl.recover_switch("no-such-node")
+
+
+def test_retime_respects_external_idle_estimates():
+    """A reroute retime must not rewind starts that encoded ``set_idle``
+    backlog estimates (the router feeds those in per request)."""
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H0", "H3"], BassPolicy())
+    ctrl.state.set_idle({"H0": 20.0, "H3": 30.0})
+    # Local task on H0: committed start = the 20 s backlog estimate.
+    ctrl.submit([Task(tid=1, size=0.0, compute=5.0, replicas=("H0",))], at=0.0)
+    # Remote task: H2 (leaf 1, non-worker) → H0 crosses a spine link.
+    ctrl.submit([Task(tid=2, size=800.0, compute=3.0, replicas=("H2",))], at=0.0)
+    ctrl.run_until(0.0)
+    a1 = ctrl.jobs[0].assignments[0]
+    a2 = ctrl.jobs[1].assignments[0]
+    assert a1.start == pytest.approx(20.0)
+    spine = [n for n in ctrl.state.ledger.link_names(a2.transfer.links)
+             if n.startswith("ls/")][0]
+    ctrl.fail_link(spine, at=(a2.transfer.start + a2.transfer.end) / 2.0)
+    ctrl.run()
+    assert ctrl.jobs[0].rerouted == 0 and ctrl.jobs[1].rerouted == 1
+    assert a1.start == pytest.approx(20.0)  # history not rewound
+
+
+def test_inject_net_event_api():
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H2", "H3"], BassPolicy())
+    ctrl.submit(_remote_job(), at=0.0)
+    ctrl.run_until(0.0)
+    ctrl.inject_net(LinkDown("ls/L0S0", at=1.0))
+    ctrl.run()
+    assert "ls/L0S0" in ctrl.dataplane.dead_links
+
+
+def test_multipath_bass_survives_random_failures_on_fat_tree():
+    """BASS-multipath completes every job on a fat-tree with link churn."""
+    ft = fat_tree_fabric(4, link_mbps=100.0)
+    hosts = storage_hosts(ft)
+    rng = np.random.default_rng(3)
+    tasks = []
+    for i in range(12):
+        reps = tuple(rng.choice(hosts, size=2, replace=False))
+        tasks.append(Task(tid=i + 1, size=float(rng.uniform(200, 900)),
+                          compute=float(rng.uniform(2, 8)), replicas=reps))
+    ctrl = ClusterController(ft, hosts, BassPolicy(multipath=True))
+    ctrl.submit(tasks, at=0.0)
+    # kill two switch-layer links mid-run (10%-ish churn on the core tier)
+    ctrl.fail_link("ea/p0e0a0", at=4.0)
+    ctrl.fail_link("ac/p1a0c0", at=6.0)
+    ctrl.run()
+    rec = ctrl.jobs[0]
+    assert len(rec.assignments) == len(tasks)
+    assert np.isfinite(rec.makespan)
+    assert (ctrl.state.ledger.reserved <= 1.0 + 1e-6).all()
+
+
+def test_multipath_equals_singlepath_without_diversity():
+    """On a tree fabric (one path per pair) multipath BASS ≡ base BASS."""
+    fab = two_tier_fabric(2, 3)
+    hosts = storage_hosts(fab)
+    rng = np.random.default_rng(0)
+    tasks = [
+        Task(tid=i + 1, size=float(rng.uniform(100, 500)),
+             compute=float(rng.uniform(2, 9)),
+             replicas=tuple(rng.choice(hosts, size=2, replace=False)))
+        for i in range(10)
+    ]
+    a = ClusterController(fab, hosts, BassPolicy())
+    b = ClusterController(fab, hosts, BassPolicy(multipath=True))
+    for c in (a, b):
+        c.submit(tasks, at=0.0)
+        c.run()
+    for x, y in zip(a.jobs[0].assignments, b.jobs[0].assignments):
+        assert (x.tid, x.node, x.source, x.start, x.finish) == (
+            y.tid, y.node, y.source, y.start, y.finish
+        )
+
+
+def test_prebass_routes_around_failures():
+    """Pre-BASS's prefetch re-plan must not book dead links (its source
+    choice is the state-level failure-aware one)."""
+    from repro.core.controller import PreBassPolicy
+
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H2", "H3"], PreBassPolicy())
+    ctrl.fail_link("ls/L0S0", at=0.0)
+    ctrl.submit(_remote_job(), at=1.0)
+    ctrl.run()
+    for a in ctrl.jobs[0].assignments:
+        if a.transfer is not None and a.transfer.slot_fracs:
+            names = ctrl.state.ledger.link_names(a.transfer.links)
+            assert "ls/L0S0" not in names
+
+
+def test_hds_routes_around_failures_too():
+    """Bandwidth-oblivious policies must still not book dead links."""
+    fab = oversubscribed_leaf_spine(2, 2, 2)
+    ctrl = ClusterController(fab, ["H2", "H3"], HdsPolicy())
+    ctrl.fail_link("ls/L0S0", at=0.0)
+    ctrl.submit(_remote_job(), at=1.0)
+    ctrl.run()
+    for a in ctrl.jobs[0].assignments:
+        if a.transfer is not None and a.transfer.slot_fracs:
+            names = ctrl.state.ledger.link_names(a.transfer.links)
+            assert "ls/L0S0" not in names
+
+
+# ---------------------------------------------------------------------------
+# Consumers survive injected failures
+# ---------------------------------------------------------------------------
+
+
+def test_router_survives_replica_nic_failure():
+    from repro.serving.engine import Request
+    from repro.serving.router import BassRouter
+
+    router = BassRouter(["r0", "r1", "r2"])
+    d0 = router.route(Request(rid=1, prompt="x" * 64, max_new=8,
+                              prefix_hash=7), now=0.0)
+    router.fail_link("nic0")  # r0's only link
+    alive = {"r1", "r2"}
+    for rid in range(2, 6):
+        d = router.route(Request(rid=rid, prompt="y" * 32, max_new=8,
+                                 prefix_hash=100 + rid), now=0.1 * rid)
+        assert d.replica in alive
+    router.recover_link("nic0")
+    # r0 is eligible again once recovered
+    router.backlog.update({"r1": 99.0, "r2": 99.0})
+    d = router.route(Request(rid=9, prompt="z" * 32, max_new=8,
+                             prefix_hash=999), now=1.0)
+    assert d.replica == "r0"
+
+
+def test_router_raises_when_all_replicas_dead():
+    from repro.serving.engine import Request
+    from repro.serving.router import BassRouter
+
+    router = BassRouter(["r0", "r1"])
+    router.fail_link("nic0")
+    router.fail_link("nic1")
+    with pytest.raises(UnroutableError):
+        router.route(Request(rid=1, prompt="x" * 16, max_new=4,
+                             prefix_hash=1), now=0.0)
+
+
+def test_dcn_sync_suspends_and_resumes_across_trunk_failure():
+    from repro.distributed.dcn import CrossPodSync
+
+    sync = CrossPodSync(n_pods=2, hosts_per_pod=4, grad_bytes=200e9)
+    sync.register_steps(first_step=0, n_steps=3, cadence_s=1.0)
+    sync.advance_to(0.0)
+    plan0 = sync.flows[0].plan
+    t_fail = (plan0.start + plan0.end) / 2.0
+    sync.fail_link("pod0/trunk", at=t_fail)
+    sync.advance_to(t_fail)
+    # recovery: the suspended remainder is re-planned; later steps fire
+    sync.recover_link("pod0/trunk", at=t_fail + 5.0)
+    sync.advance_to(10.0)
+    assert set(sync.flows) == {0, 1, 2}
+    for f in sync.flows.values():
+        assert np.isfinite(f.plan.end)
+    assert sync.flows[0].plan.end >= t_fail + 5.0 - 1e-9  # resumed after outage
+    assert (sync.ledger.reserved <= 1.0 + 1e-6).all()
