@@ -4,11 +4,18 @@ network cluster" future work, delivered).
 BASS as a central controller for a TPU fleet: tasks = input-shard fetches
 over the DCN fabric.  Derived value = scheduled tasks/second.  The 1000+
 node requirement means the controller must place tens of thousands of
-flows per epoch in seconds — O(m·(log n + R)) with the lazy minnow heap +
-LCA routing + vectorized TS ledger.  CSV: ``name,us_per_call,derived``.
+flows per epoch in seconds — the wavefront placement engine
+(``repro.core.wavefront``) plans batches against the TS ledger with fused
+frontier-skipped scans instead of per-candidate window re-scans, byte-
+identical to the sequential greedy loop.  CSV: ``name,us_per_call,derived``.
+
+``--smoke`` runs the small config only and enforces a coarse tasks/s
+floor (CI guard against decision-loop regressions); ``--json PATH``
+appends machine-readable rows (see ``benchmarks/run.py --json``).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -17,27 +24,73 @@ from repro.core.bass import schedule_bass
 from repro.core.tasks import Instance, Task
 from repro.core.topology import tpu_dcn_fabric
 
+CONFIGS = [
+    (2, 128, 4000),      # 256 hosts
+    (4, 256, 10000),     # 1 024 hosts
+    (16, 256, 40000),    # 4 096 hosts — the ≥5× acceptance config
+    (64, 256, 100000),   # 16 384 hosts — fleet scale, completes in seconds
+]
 
-def run() -> list:
+#: Coarse CI floor for the smoke config (pre-wavefront: ~6.7k tasks/s on a
+#: dev box; wavefront: ~15k).  Set far below both so only a real
+#: decision-loop regression (or a hopeless runner) trips it.
+SMOKE_FLOOR_TASKS_PER_S = 2500.0
+
+
+def git_sha() -> str:
+    import subprocess
+
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — best-effort provenance
+        return "unknown"
+
+
+def write_json(rows, path: str) -> None:
+    """Machine-readable benchmark rows: name, us_per_call, derived, git
+    sha — the perf-trajectory artifact CI uploads per run."""
+    import json
+
+    sha = git_sha()
+    out = [
+        {"name": r[0], "us_per_call": float(r[1]),
+         "derived": r[2] if isinstance(r[2], str) else float(r[2]),
+         "git_sha": sha}
+        for r in rows
+    ]
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+def fleet_instance(pods: int, hosts: int, n_tasks: int) -> Instance:
+    n_hosts = pods * hosts
+    fab = tpu_dcn_fabric(n_pods=pods, hosts_per_pod=hosts)
+    workers = [f"pod{p}/host{h}" for p in range(pods) for h in range(hosts)]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, n_hosts, size=(n_tasks, 3))
+    tasks = [
+        Task(
+            tid=i,
+            size=float(256e6 + (i % 7) * 64e6),     # 256–640 MB shards
+            compute=float(0.05),
+            replicas=tuple(workers[j] for j in idx[i]),
+        )
+        for i in range(n_tasks)
+    ]
+    idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
+    return Instance(fabric=fab, workers=workers, idle=idle, tasks=tasks,
+                    slot_duration=0.1)
+
+
+def run(configs=None) -> list:
     rows = []
-    for pods, hosts, n_tasks in [(2, 128, 4000), (4, 256, 10000), (16, 256, 40000)]:
+    for pods, hosts, n_tasks in configs if configs is not None else CONFIGS:
         n_hosts = pods * hosts
-        fab = tpu_dcn_fabric(n_pods=pods, hosts_per_pod=hosts)
-        workers = [f"pod{p}/host{h}" for p in range(pods) for h in range(hosts)]
-        rng = np.random.default_rng(0)
-        idx = rng.integers(0, n_hosts, size=(n_tasks, 3))
-        tasks = [
-            Task(
-                tid=i,
-                size=float(256e6 + (i % 7) * 64e6),     # 256–640 MB shards
-                compute=float(0.05),
-                replicas=tuple(workers[j] for j in idx[i]),
-            )
-            for i in range(n_tasks)
-        ]
-        idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
-        inst = Instance(fabric=fab, workers=workers, idle=idle, tasks=tasks,
-                        slot_duration=0.1)
+        inst = fleet_instance(pods, hosts, n_tasks)
         t0 = time.perf_counter()
         sched = schedule_bass(inst)
         dt = time.perf_counter() - t0
@@ -53,8 +106,25 @@ def run() -> list:
 
 
 def main() -> None:
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config only + coarse tasks/s floor")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write machine-readable rows (JSON)")
+    args = ap.parse_args()
+    configs = CONFIGS[:1] if args.smoke else CONFIGS
+    rows = run(configs)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        write_json(rows, args.json)
+    if args.smoke:
+        name, _us, derived = rows[0]
+        if derived < SMOKE_FLOOR_TASKS_PER_S:
+            raise SystemExit(
+                f"{name}: {derived} tasks/s below the "
+                f"{SMOKE_FLOOR_TASKS_PER_S} floor"
+            )
 
 
 if __name__ == "__main__":

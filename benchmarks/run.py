@@ -15,6 +15,7 @@
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 from . import (
@@ -27,6 +28,7 @@ from . import (
     bench_sched_scale,
     bench_table1,
 )
+from .bench_sched_scale import write_json
 
 MODULES = [
     bench_discussion1,
@@ -41,15 +43,24 @@ MODULES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write every row as machine-readable JSON "
+                         "(name, us_per_call, derived, git sha)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
     for mod in MODULES:
         try:
             for row in mod.run():
+                rows.append(row)
                 print(",".join(str(x) for x in row), flush=True)
         except Exception as e:  # noqa: BLE001 — keep the harness running
             failures += 1
             print(f"{mod.__name__},ERROR,{type(e).__name__}:{e}", flush=True)
+    if args.json:
+        write_json(rows, args.json)
     if failures:
         sys.exit(1)
 

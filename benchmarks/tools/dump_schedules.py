@@ -1,0 +1,67 @@
+"""Schedule-dump tool: byte-exact dumps of the paper + fleet workloads.
+
+Run before and after a scheduler change; an empty diff proves the change
+is byte-identical (floats serialized via ``float.hex``).  Used to verify
+the wavefront placement engine (DESIGN.md §5) emits the same bytes as
+the sequential greedy loop on the Fig. 2, Table-I and fleet workloads.
+
+    PYTHONPATH=src python benchmarks/tools/dump_schedules.py OUTFILE
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2]))
+
+from benchmarks.bench_sched_scale import CONFIGS, fleet_instance  # noqa: E402
+from repro.core import SCHEDULERS  # noqa: E402
+from repro.core.examples_fig import example1_instance  # noqa: E402
+from repro.core.workloads import SORT, WORDCOUNT, make_instance  # noqa: E402
+
+
+def fx(v):
+    if v is None:
+        return "None"
+    return float(v).hex()
+
+
+def dump_schedule(out, label, sched):
+    out.write(f"== {label}\n")
+    for a in sorted(sched.assignments, key=lambda a: a.tid):
+        t = a.transfer
+        if t is None:
+            tr = "-"
+        else:
+            fr = ";".join(f"{s}:{fx(f)}" for s, f in t.slot_fracs)
+            tr = f"links={','.join(map(str, t.links))} start={fx(t.start)} end={fx(t.end)} fracs={fr}"
+        out.write(
+            f"{a.tid} node={a.node} src={a.source} start={fx(a.start)} "
+            f"finish={fx(a.finish)} bw={fx(a.bw_needed)} {tr}\n"
+        )
+
+
+def main() -> None:
+    path = sys.argv[1]
+    with open(path, "w") as out:
+        fig2 = example1_instance()
+        for name in ("bass", "prebass", "hds", "bar"):
+            dump_schedule(out, f"fig2_{name}", SCHEDULERS[name](fig2))
+        for jobname, job in (("wordcount", WORDCOUNT), ("sort", SORT)):
+            for mb in (150, 600):
+                for seed in (0, 1):
+                    inst, _, _ = make_instance(job, mb, seed=seed)
+                    for name in ("bass", "prebass", "hds", "bar"):
+                        dump_schedule(
+                            out,
+                            f"table1_{jobname}_{mb}_{seed}_{name}",
+                            SCHEDULERS[name](inst),
+                        )
+        for pods, hosts, n in CONFIGS[:3]:  # fleet configs up to 4 096 hosts
+            inst = fleet_instance(pods, hosts, n)
+            dump_schedule(out, f"fleet_{pods * hosts}h_{n}t_bass",
+                          SCHEDULERS["bass"](inst))
+
+
+if __name__ == "__main__":
+    main()

@@ -37,8 +37,6 @@ from typing import (
     Tuple,
 )
 
-import numpy as np
-
 from .tasks import (
     Assignment,
     BackgroundFlow,
@@ -54,26 +52,55 @@ _EPS = 1e-9
 
 
 class MinnowHeap:
-    """Lazy min-heap over worker idle times (deterministic name tie-break).
+    """Position-indexed min-heap over worker idle times (deterministic
+    name tie-break).
 
-    ``ND_minnow`` lookups stay O(log n) amortized across thousands of
-    placements; stale entries are repaired on pop instead of deleted.
+    One entry per worker, kept exact by :meth:`update` (an
+    increase/decrease-key sift), so ``ND_minnow`` is an O(1) peek and a
+    placement costs one O(log n) sift — no stale-entry repair loops, and
+    the heap never grows past n.  The selected minimum is the same
+    ``(idle, name)`` tuple order the historical lazy heap resolved, so
+    every policy decision is unchanged.
     """
 
     def __init__(self, idle: Dict[str, float], workers: Sequence[str]):
         self._heap = [(idle[n], n) for n in workers]
         heapq.heapify(self._heap)
+        self._pos = {e[1]: i for i, e in enumerate(self._heap)}
 
-    def minnow(self, idle: Dict[str, float]) -> str:
-        h = self._heap
-        while True:
-            t, n = h[0]
-            if abs(idle[n] - t) <= _EPS:
-                return n
-            heapq.heapreplace(h, (idle[n], n))
+    def minnow(self, idle: Optional[Dict[str, float]] = None) -> str:
+        """The worker with minimal (idle, name); ``idle`` is accepted for
+        backwards compatibility and ignored — entries are kept exact."""
+        return self._heap[0][1]
 
     def update(self, node: str, new_idle: float) -> None:
-        heapq.heappush(self._heap, (new_idle, node))
+        h, pos = self._heap, self._pos
+        i = pos[node]
+        item = (new_idle, node)
+        while i > 0:  # sift up
+            parent = (i - 1) >> 1
+            if item < h[parent]:
+                h[i] = h[parent]
+                pos[h[i][1]] = i
+                i = parent
+            else:
+                break
+        n = len(h)
+        while True:  # sift down
+            c = 2 * i + 1
+            if c >= n:
+                break
+            r = c + 1
+            if r < n and h[r] < h[c]:
+                c = r
+            if h[c] < item:
+                h[i] = h[c]
+                pos[h[i][1]] = i
+                i = c
+            else:
+                break
+        h[i] = item
+        pos[node] = i
 
 
 def pick_minnow(idle: Dict[str, float], workers: Sequence[str]) -> str:
@@ -84,7 +111,11 @@ def pick_minnow(idle: Dict[str, float], workers: Sequence[str]) -> str:
 def pick_local(
     task: Task, idle: Dict[str, float], workers: Sequence[str]
 ) -> Optional[str]:
-    """``ND_loc``: least-loaded *available* replica holder, or None (Case 2)."""
+    """``ND_loc``: least-loaded *available* replica holder, or None (Case 2).
+
+    ``workers`` is any membership container; pass a set at fleet scale —
+    a list turns every placement into an O(n_workers · R) string scan
+    (``ClusterState.workers_set`` exists for exactly this)."""
     holders = [n for n in task.replicas if n in workers]
     if not holders:
         return None
@@ -159,6 +190,7 @@ class ClusterState:
     ) -> None:
         self.fabric = fabric
         self.workers = list(workers)
+        self.workers_set = frozenset(self.workers)
         idle = idle or {}
         self.idle: Dict[str, float] = {
             n: float(idle.get(n, 0.0)) for n in self.workers
@@ -421,6 +453,7 @@ class ClusterState:
         dup = ClusterState.__new__(ClusterState)
         dup.fabric = self.fabric
         dup.workers = list(self.workers)
+        dup.workers_set = self.workers_set
         dup.idle = dict(self.idle)
         dup.ledger = TimeSlotLedger.__new__(TimeSlotLedger)
         dup.ledger.fabric = self.ledger.fabric
@@ -429,6 +462,7 @@ class ClusterState:
         dup.ledger._names = self.ledger._names
         dup.ledger.capacity = self.ledger.capacity
         dup.ledger.reserved = self.ledger.reserved.copy()
+        dup.ledger.batch_scan_cells = 0
         dup.background = list(self.background)
         dup.heap = MinnowHeap(dup.idle, dup.workers)
         dup.now = self.now
@@ -489,7 +523,7 @@ class BassPolicy:
     def place(self, task: Task, state: ClusterState) -> Assignment:
         idle = state.idle
         minnow = state.minnow()
-        loc = pick_local(task, idle, state.workers)
+        loc = pick_local(task, idle, state.workers_set)
 
         if loc is not None and (minnow == loc or idle[loc] <= idle[minnow] + _EPS):
             # Case 1.1 — local is optimal, no movement (Eq. 1 with BW=∞).
@@ -527,6 +561,18 @@ class BassPolicy:
     def place_batch(
         self, tasks: Sequence[Task], state: ClusterState
     ) -> List[Assignment]:
+        """Batch arrivals route through the wavefront engine
+        (``core.wavefront``): one broadcasted (task × replica × path)
+        scoring pass per wave instead of per-task ledger re-scans —
+        bit-identical to the per-task ``place`` loop, which remains the
+        fallback while failure-aware routing is live (dead-link detours
+        are per-task state the wave speculation does not model)."""
+        if len(tasks) > 1 and not state._routing_live():
+            from .wavefront import WavefrontPlanner
+
+            return WavefrontPlanner.for_state(state).place_batch(
+                tasks, multipath=self.multipath, k_paths=self.k_paths
+            )
         return [self.place(t, state) for t in tasks]
 
 
@@ -680,6 +726,11 @@ class PreBassPolicy:
     no shared ledger is passed) the refined schedule is adopted only if it
     does not finish later than plain BASS — prefetching with a different
     source can, on adversarial ledgers, push a later task's window back.
+
+    Both the guard probe and the base pass route through
+    ``BassPolicy.place_batch`` and therefore the wavefront engine; only
+    the prefetch re-plan loop is inherently sequential (each re-plan's
+    window depends on the previous release/commit pair).
     """
 
     name = "prebass"
@@ -969,16 +1020,7 @@ class ClusterController:
             self._gc_tables(at)
             if kind == "job":
                 (jid,) = payload
-                rec = self.jobs[jid]
-                rec.assignments = self.policy.place_batch(rec.tasks, self.state)
-                rec.placed = True
-                for a in rec.assignments:
-                    if a.transfer is not None and a.transfer.slot_fracs:
-                        self._install(("job", jid, a.tid), a.source, a.node,
-                                      a.transfer)
-                        self._live_jobs[jid] = max(
-                            self._live_jobs.get(jid, 0.0), a.transfer.end
-                        )
+                self._drain(self.jobs[jid])
             elif kind == "flow":
                 (flow,) = payload
                 self.state.observe_flow(flow)
@@ -1021,6 +1063,23 @@ class ClusterController:
         """Drain the event queue completely."""
         while self._events:
             self.run_until(self._events[0][0])
+
+    def _drain(self, rec: "JobRecord") -> None:
+        """Place one arrived job's task list and install its flow rules.
+
+        ``policy.place_batch`` routes through the wavefront engine
+        (``core.wavefront``) whenever the data plane carries no failures,
+        so a fleet-scale arrival is planned in broadcast waves rather than
+        per-task ledger re-scans — byte-identical either way."""
+        rec.assignments = self.policy.place_batch(rec.tasks, self.state)
+        rec.placed = True
+        for a in rec.assignments:
+            if a.transfer is not None and a.transfer.slot_fracs:
+                self._install(("job", rec.jid, a.tid), a.source, a.node,
+                              a.transfer)
+                self._live_jobs[rec.jid] = max(
+                    self._live_jobs.get(rec.jid, 0.0), a.transfer.end
+                )
 
     # -- data-plane bookkeeping ---------------------------------------------
     def _install(self, cookie, src: Optional[str], dst: str,

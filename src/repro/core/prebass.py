@@ -9,7 +9,11 @@ Example 2: TK1's transfer moves from TS4..TS8 to TS1..TS5, node N1 finishes
 at 32 s instead of 35 s and the job at 34 s (last finisher becomes TK8).
 
 The algorithm lives in :class:`repro.core.controller.PreBassPolicy`; this
-wrapper is the historical offline entry point (DESIGN.md §1).
+wrapper is the historical offline entry point (DESIGN.md §1).  Both the
+guard probe and the base BASS pass route through the wavefront engine
+(``core.wavefront``, DESIGN.md §5); only the prefetch re-plan loop is
+inherently sequential (each re-plan's window depends on the previous
+release/commit pair).
 """
 from __future__ import annotations
 

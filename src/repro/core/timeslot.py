@@ -22,9 +22,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..kernels import ts_plan
 from .topology import Fabric
 
 _EPS = 1e-9
+assert ts_plan.EPS == _EPS, "ts_plan kernel and ledger must share one epsilon"
 
 
 @dataclass(frozen=True)
@@ -64,6 +66,11 @@ class TimeSlotLedger:
             [fabric.link(n).capacity for n in names], dtype=np.float64
         )
         self.reserved = np.zeros((len(names), horizon_slots), dtype=np.float64)
+        #: Instrumentation: candidate·slot cells scanned by
+        #: :meth:`plan_transfer_batch` (the escalation-freeze regression
+        #: test pins that one oversized outlier no longer re-scans the
+        #: whole batch at 4× the window).
+        self.batch_scan_cells = 0
 
     # -- plumbing -----------------------------------------------------------
     def rows(self, link_names: Sequence[str]) -> Tuple[int, ...]:
@@ -76,7 +83,9 @@ class TimeSlotLedger:
         n = self.reserved.shape[1]
         if slot >= n:
             grow = max(slot + 1 - n, n)  # at least double
-            self.reserved = np.pad(self.reserved, ((0, 0), (0, grow)))
+            wider = np.zeros((self.reserved.shape[0], n + grow))
+            wider[:, :n] = self.reserved
+            self.reserved = wider
 
     def slot_of(self, t: float) -> int:
         return int(math.floor(t / self.slot_duration + _EPS))
@@ -200,6 +209,44 @@ class TimeSlotLedger:
             pad[i, len(r) :] = r[0]
         return pad
 
+    def booked_window(
+        self, pad: np.ndarray, s0: np.ndarray, window: int
+    ) -> np.ndarray:
+        """``[n_cand, width, window]`` reserved-fraction gather: candidate
+        ``k``'s padded link rows over slots ``[s0[k], s0[k] + window)``.
+        ``s0`` may be a scalar (shared start) or per-candidate array."""
+        s0 = np.asarray(s0)
+        self._ensure(int(s0.max()) + window - 1)
+        idx = s0.reshape(-1, 1, 1) if s0.ndim else s0
+        return self.reserved[pad[:, :, None], idx + np.arange(window)[None, None, :]]
+
+    def _plan_from_scan(
+        self,
+        rows: Tuple[int, ...],
+        s0: int,
+        t0: float,
+        size: float,
+        bw_row: np.ndarray,
+        resid_row: np.ndarray,
+        cum_row: np.ndarray,
+        hit: int,
+        cap: Optional[float] = None,
+    ) -> TransferPlan:
+        """Materialize one greedy plan from a ``ts_plan.plan_scan`` row —
+        the exact tail arithmetic of :meth:`plan_transfer` (bit-identical).
+        ``cap`` is the candidate's bottleneck capacity, passed only when a
+        ``bandwidth_cap`` squeezed ``bw`` below the residue."""
+        active = bw_row > _EPS
+        sel = np.nonzero(active[: hit + 1])[0]
+        first = int(sel[0])
+        start = max(t0, (s0 + first) * self.slot_duration)
+        before = float(cum_row[hit - 1]) if hit > 0 else 0.0
+        t_in = max(t0, (s0 + hit) * self.slot_duration)
+        end = t_in + (size - before) / float(bw_row[hit])
+        fr = resid_row if cap is None else bw_row / cap
+        fracs = tuple((s0 + int(j), float(fr[j])) for j in sel)
+        return TransferPlan(rows, start, end, fracs)
+
     def plan_transfer_batch(
         self,
         size: float,
@@ -208,15 +255,19 @@ class TimeSlotLedger:
         bandwidth_cap: Optional[float] = None,
         max_slots: int = 1 << 16,
     ) -> List[TransferPlan]:
-        """Greedy paper-policy plans for *all* candidate paths in one numpy
-        pass — the controller scores every (source, destination) option
-        without a Python loop per replica.
+        """Greedy paper-policy plans for *all* candidate paths in one
+        :func:`repro.kernels.ts_plan.plan_scan` pass — the controller
+        scores every (source, destination) option without a Python loop
+        per replica.
 
         Element ``i`` is bit-identical to planning ``rows_list[i]`` alone
         against the current ledger state; nothing is committed.  Window
-        escalation is joint: if any candidate cannot fit within
-        ``max_slots`` the call raises, matching a ``plan_transfer`` loop
-        over the same list.
+        escalation freezes finished candidates: a plan found at window
+        ``W`` is final (the scan is prefix-stable), so only the candidates
+        whose transfer did not fit re-scan at ``4W`` — one oversized
+        outlier no longer forces the whole batch to re-scan.  A candidate
+        that cannot fit within ``max_slots`` raises, matching a
+        ``plan_transfer`` loop over the same list.
         """
         n = len(rows_list)
         if n == 0:
@@ -231,55 +282,73 @@ class TimeSlotLedger:
         if not live:
             return plans  # type: ignore[return-value]
         pad = self._padded_rows([rows_list[i] for i in live])
-        flat = pad.ravel()
-        n_live, width = pad.shape
         caps = self.capacity[pad].min(axis=1)
         t0 = float(not_before)
         s0 = self.slot_of(t0)
         window = 64
+        unresolved = np.arange(len(live))
         while window <= max_slots:
-            self._ensure(s0 + window - 1)
-            # Path residue per candidate per slot over [s0, s0+window).
-            booked = self.reserved[flat, s0 : s0 + window].reshape(
-                n_live, width, window
-            )
-            resid_frac = 1.0 - booked.max(axis=1)
-            bw = resid_frac * caps[:, None]
-            if bandwidth_cap is not None:
-                bw = np.minimum(bw, bandwidth_cap)
+            sub = unresolved
+            booked = self.booked_window(pad[sub], np.asarray(s0), window)
             # Usable seconds per slot (first slot may be partial).
-            secs = np.full(window, self.slot_duration)
-            secs[0] = (s0 + 1) * self.slot_duration - t0
-            cum = np.cumsum(bw * secs, axis=1)
-            hits = [int(np.searchsorted(cum[k], size - _EPS)) for k in range(len(live))]
-            if max(hits) >= window:
-                window *= 4
-                continue
-            for k, i in enumerate(live):
-                hit = hits[k]
-                active = bw[k] > _EPS
-                sel = np.nonzero(active[: hit + 1])[0]
-                first = int(sel[0])
-                start = max(t0, (s0 + first) * self.slot_duration)
-                before = float(cum[k, hit - 1]) if hit > 0 else 0.0
-                t_in = max(t0, (s0 + hit) * self.slot_duration)
-                end = t_in + (size - before) / float(bw[k, hit])
-                fr = resid_frac[k] if bandwidth_cap is None else bw[k] / caps[k]
-                fracs = tuple((s0 + int(j), float(fr[j])) for j in sel)
-                plans[i] = TransferPlan(tuple(rows_list[i]), start, end, fracs)
-            return plans  # type: ignore[return-value]
+            secs = np.full((len(sub), window), self.slot_duration)
+            secs[:, 0] = (s0 + 1) * self.slot_duration - t0
+            sizes = np.full(len(sub), size)
+            self.batch_scan_cells += len(sub) * window
+            resid, bw, cum, hits = ts_plan.plan_scan(
+                booked, caps[sub], secs, sizes, bandwidth_cap
+            )
+            done = hits < window
+            for k in np.nonzero(done)[0]:
+                i = live[sub[k]]
+                plans[i] = self._plan_from_scan(
+                    tuple(rows_list[i]), s0, t0, size,
+                    bw[k], resid[k], cum[k], int(hits[k]),
+                    None if bandwidth_cap is None else float(caps[sub[k]]),
+                )
+            unresolved = sub[~done]
+            if unresolved.size == 0:
+                return plans  # type: ignore[return-value]
+            window *= 4
         raise RuntimeError("transfer does not fit within max_slots horizon")
 
     def commit(self, plan: TransferPlan) -> None:
-        idx = list(plan.links)
-        for slot, frac in plan.slot_fracs:
-            self._ensure(slot)
-            new = self.reserved[idx, slot] + frac
-            if (new > 1.0 + 1e-6).any():
+        """Reserve the plan's slot fractions on every path link — one
+        ``(rows × slots)`` scatter instead of a per-slot Python loop, with
+        a single joint over-reservation check (slots within a plan are
+        distinct, so the scatter equals the sequential loop exactly)."""
+        if not plan.slot_fracs:
+            return
+        if len(plan.slot_fracs) == 1 and len(plan.links) <= 8:
+            # Frontier-landing common case: scalar python floats (same
+            # doubles as the vector scatter, no ufunc dispatch).
+            slot, frac = plan.slot_fracs[0]
+            if slot >= self.reserved.shape[1]:
+                self._ensure(slot)
+            res = self.reserved
+            vals = [res.item(r, slot) + frac for r in plan.links]
+            mx = max(vals)
+            if mx > 1.0 + 1e-6:
                 raise ValueError(
-                    f"over-reservation on slot {slot}: {new.max():.6f} > 1"
+                    f"over-reservation on slot {slot}: {mx:.6f} > 1"
                 )
-            self.reserved[idx, slot] = np.minimum(new, 1.0)
+            for r, v in zip(plan.links, vals):
+                res[r, slot] = v if v < 1.0 else 1.0
+            return
+        slots = [s for s, _ in plan.slot_fracs]
+        fracs = np.array([f for _, f in plan.slot_fracs])
+        self._ensure(max(slots))
+        rr = np.asarray(plan.links)[:, None]  # open mesh: (rows × slots)
+        cc = np.asarray(slots)
+        new = self.reserved[rr, cc] + fracs[None, :]
+        over = new > 1.0 + 1e-6
+        if over.any():
+            col = int(over.any(axis=0).argmax())
+            raise ValueError(
+                f"over-reservation on slot {slots[col]}: "
+                f"{new[:, col].max():.6f} > 1"
+            )
+        self.reserved[rr, cc] = np.minimum(new, 1.0)
 
     def occupy(
         self, rows: Sequence[int], start: float, end: float, fraction: float
@@ -296,12 +365,16 @@ class TimeSlotLedger:
         )
 
     def release(self, plan: TransferPlan) -> None:
-        """Exact inverse of :meth:`commit` — cancel a reserved transfer."""
-        idx = list(plan.links)
-        for slot, frac in plan.slot_fracs:
-            self.reserved[idx, slot] = np.maximum(
-                self.reserved[idx, slot] - frac, 0.0
-            )
+        """Exact inverse of :meth:`commit` — one ``(rows × slots)`` scatter."""
+        if not plan.slot_fracs:
+            return
+        slots = [s for s, _ in plan.slot_fracs]
+        fracs = np.array([f for _, f in plan.slot_fracs])
+        rr = np.asarray(plan.links)[:, None]
+        cc = np.asarray(slots)
+        self.reserved[rr, cc] = np.maximum(
+            self.reserved[rr, cc] - fracs[None, :], 0.0
+        )
 
     def plan_bytes(self, plan: TransferPlan, until: Optional[float] = None) -> float:
         """Capacity-units·seconds the plan delivers by ``until`` (default:
@@ -310,13 +383,11 @@ class TimeSlotLedger:
             return 0.0
         cap = float(self.capacity[list(plan.links)].min())
         t1 = plan.end if until is None else min(float(until), plan.end)
-        total = 0.0
-        for slot, frac in plan.slot_fracs:
-            lo = max(plan.start, slot * self.slot_duration)
-            hi = min(t1, (slot + 1) * self.slot_duration)
-            if hi > lo:
-                total += frac * cap * (hi - lo)
-        return total
+        slots = np.array([s for s, _ in plan.slot_fracs])
+        fracs = np.array([f for _, f in plan.slot_fracs])
+        lo = np.maximum(plan.start, slots * self.slot_duration)
+        hi = np.minimum(t1, (slots + 1) * self.slot_duration)
+        return float((fracs * cap * np.clip(hi - lo, 0.0, None)).sum())
 
     def release_after(self, plan: TransferPlan, t: float) -> TransferPlan:
         """Release the unconsumed tail of a committed plan (reroute support).
@@ -337,11 +408,14 @@ class TimeSlotLedger:
             cut = self.slot_of(t)
         keep = tuple((s, f) for s, f in plan.slot_fracs if s < cut)
         idx = list(plan.links)
-        for slot, frac in plan.slot_fracs:
-            if slot >= cut:
-                self.reserved[idx, slot] = np.maximum(
-                    self.reserved[idx, slot] - frac, 0.0
-                )
+        tail_slots = [s for s, _ in plan.slot_fracs if s >= cut]
+        if tail_slots:
+            tail_fracs = np.array([f for s, f in plan.slot_fracs if s >= cut])
+            rr = np.asarray(idx)[:, None]
+            cc = np.asarray(tail_slots)
+            self.reserved[rr, cc] = np.maximum(
+                self.reserved[rr, cc] - tail_fracs[None, :], 0.0
+            )
         if not keep:
             return TransferPlan(plan.links, plan.start, plan.start, ())
         new_end = min(plan.end, cut * self.slot_duration)

@@ -272,6 +272,33 @@ class Fabric:
         down = [l for _, l in cb[: anc_b[n]]]
         return tuple(up + list(reversed(down)))
 
+    def tree_routing_ok(self) -> bool:
+        """True when LCA tree walks are valid routing (every link is an
+        uplink) — the precondition under which :meth:`parent_chain` lets a
+        caller resolve min-hop paths without touching Dijkstra.  Mirrors
+        the gate inside :meth:`_tree_path`, so external fast-path routers
+        (``core.wavefront``) agree with :meth:`path` on when the shortcut
+        applies."""
+        return bool(self._parent) and not self._nontree_links
+
+    def parent_chain(self, node: str) -> Tuple[Tuple[str, str], ...]:
+        """``((parent, uplink-name), …)`` from ``node`` up to its tree
+        root (empty for a root).  With :meth:`tree_routing_ok`, the
+        min-hop path ``a→b`` is ``a``'s chain up to the lowest common
+        ancestor followed by ``b``'s chain below it, reversed — exactly
+        what :meth:`path` computes."""
+        out = []
+        n = node
+        seen = {n}
+        while n in self._parent:
+            p, link = self._parent[n]
+            out.append((p, link))
+            if p in seen:  # defensive: parent links form a cycle
+                raise ValueError(f"parent chain of {node!r} is not a tree")
+            seen.add(p)
+            n = p
+        return tuple(out)
+
     def path_capacity(self, src: str, dst: str) -> float:
         """Static bottleneck capacity of the src→dst path."""
         names = self.path(src, dst)

@@ -2,7 +2,18 @@
 
 Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd wrapper
 in ``ops.py``; tests sweep shapes/dtypes in interpret mode on CPU.
-"""
-from . import ops, ref
 
-__all__ = ["ops", "ref"]
+Submodules load lazily (PEP 562): ``ts_plan`` is imported by the numpy
+scheduling core on every controller start, and must not drag jax in —
+``ops``/``ref`` (which import jax at module scope) materialize only when
+first touched.
+"""
+import importlib
+
+__all__ = ["ops", "ref", "ts_plan"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,167 @@
+"""Time-slot planning scan — the ledger/wavefront inner kernel.
+
+The greedy paper-policy transfer plan (``TimeSlotLedger.plan_transfer``)
+reduces, per candidate path, to a fixed four-step scan over a slot window:
+
+1. **residue**   ``resid = 1 - max over path links of booked``  (path residue
+   per slot — the "cummax" over the link axis of the gathered window),
+2. **bandwidth** ``bw = resid * bottleneck_capacity`` (optionally capped),
+3. **cumsum**    ``cum = cumsum(bw * secs)`` (cumulative deliverable,
+   first slot possibly partial),
+4. **searchsorted** ``hit = #{j : cum[j] < size - EPS}`` (first slot at
+   which the transfer completes; ``hit == W`` means "does not fit").
+
+:func:`plan_scan` runs that scan for *every* candidate in one array pass
+over a ``[n_cand, n_links_padded, window]`` gather of the ledger.  Two
+backends exist:
+
+* ``numpy`` (default, the **reference**): bit-identical to a
+  ``plan_transfer`` loop — ``repro.core`` relies on this for the
+  paper-semantics guarantee, so it stays the default everywhere.
+* ``pallas``: a JAX/Pallas TPU kernel (float32, Hillis–Steele prefix sum)
+  for fleet-scale controllers co-located with accelerators.  Backends
+  **agree bit-wise on float64-safe inputs** — inputs whose values and all
+  intermediates are exactly representable at both precisions (dyadic
+  fractions of moderate magnitude, e.g. ledger fractions in 1/2^k, pow-2
+  capacities, integer sizes); under exact arithmetic the summation-order
+  difference between sequential and tree prefix sums vanishes.
+  ``tests/test_wavefront.py`` pins this contract in interpret mode.
+
+Select with ``set_backend("pallas")`` or ``REPRO_TS_PLAN_BACKEND=pallas``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+EPS = 1e-9  # must equal repro.core.timeslot._EPS
+
+
+def plan_scan_numpy(
+    booked: np.ndarray,        # [n_cand, L, W] reserved fractions (gathered)
+    caps: np.ndarray,          # [n_cand] bottleneck capacity per candidate
+    secs: np.ndarray,          # [n_cand, W] usable seconds per slot
+    sizes: np.ndarray,         # [n_cand] bytes (capacity-units·sec) to move
+    bandwidth_cap: Optional[float] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Reference scan; row ``k`` is bit-identical to ``plan_transfer`` run
+    on candidate ``k`` alone (same expressions, numpy ``cumsum`` is a
+    sequential accumulation per row)."""
+    resid = 1.0 - booked.max(axis=1)
+    bw = resid * caps[:, None]
+    if bandwidth_cap is not None:
+        bw = np.minimum(bw, bandwidth_cap)
+    cum = np.cumsum(bw * secs, axis=1)
+    # searchsorted-left on each nondecreasing row: first j with cum[j] >= v.
+    hit = (cum < (sizes - EPS)[:, None]).sum(axis=1)
+    return resid, bw, cum, hit
+
+
+def _pad_to(x: np.ndarray, shape) -> np.ndarray:
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    return np.pad(x, pads)
+
+
+def plan_scan_pallas(
+    booked: np.ndarray,
+    caps: np.ndarray,
+    secs: np.ndarray,
+    sizes: np.ndarray,
+    bandwidth_cap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+):
+    """Pallas-TPU backend (float32).  Agrees with :func:`plan_scan_numpy`
+    bit-wise on float64-safe inputs (module docstring); lazy jax import so
+    the numpy scheduling path never touches jax."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from ._compat import CompilerParams
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n, L, W = booked.shape
+    BN, LP = 8, max(8, L)
+    WP = max(128, -(-W // 128) * 128)
+    NP = -(-n // BN) * BN
+    bk = _pad_to(np.asarray(booked, np.float32), (NP, LP, WP))
+    cp = _pad_to(np.asarray(caps, np.float32)[:, None], (NP, 1))
+    sc = _pad_to(np.asarray(secs, np.float32), (NP, WP))
+    sz = _pad_to(np.asarray(sizes, np.float32)[:, None], (NP, 1))
+    cap = None if bandwidth_cap is None else float(bandwidth_cap)
+
+    def kernel(bk_ref, cp_ref, sc_ref, sz_ref, resid_ref, bw_ref, cum_ref, hit_ref):
+        resid = 1.0 - jnp.max(bk_ref[...], axis=1)
+        bw = resid * cp_ref[...]
+        if cap is not None:
+            bw = jnp.minimum(bw, cap)
+        cum = bw * sc_ref[...]
+        k = 1
+        while k < WP:  # Hillis–Steele inclusive prefix sum along the lanes
+            shifted = jnp.concatenate(
+                [jnp.zeros((BN, k), jnp.float32), cum[:, : WP - k]], axis=1
+            )
+            cum = cum + shifted
+            k *= 2
+        lane = jax.lax.broadcasted_iota(jnp.int32, (BN, WP), 1)
+        below = (cum < (sz_ref[...] - np.float32(EPS))) & (lane < W)
+        resid_ref[...] = resid
+        bw_ref[...] = bw
+        cum_ref[...] = cum
+        hit_ref[...] = jnp.sum(below.astype(jnp.int32), axis=1, keepdims=True)
+
+    grid = (NP // BN,)
+    resid, bw, cum, hit = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BN, LP, WP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(bk, cp, sc, sz)
+    return (
+        np.asarray(resid)[:n, :W],
+        np.asarray(bw)[:n, :W],
+        np.asarray(cum)[:n, :W],
+        np.asarray(hit)[:n, 0],
+    )
+
+
+_BACKENDS = {"numpy": plan_scan_numpy, "pallas": plan_scan_pallas}
+_backend = os.environ.get("REPRO_TS_PLAN_BACKEND", "numpy")
+
+
+def set_backend(name: str) -> None:
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown ts_plan backend {name!r} (want {sorted(_BACKENDS)})")
+    global _backend
+    _backend = name
+
+
+def get_backend() -> str:
+    return _backend
+
+
+def plan_scan(booked, caps, secs, sizes, bandwidth_cap=None):
+    """Dispatch to the selected backend (numpy unless opted out)."""
+    return _BACKENDS[_backend](booked, caps, secs, sizes, bandwidth_cap)

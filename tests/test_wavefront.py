@@ -1,0 +1,282 @@
+"""Wavefront placement engine — byte-identity and kernel-contract tests.
+
+The engine's whole contract is: whatever ``BassPolicy.place_batch``
+produces through the wavefront must be *bit-identical* (every float, every
+slot fraction) to the sequential ``place`` loop — across contended
+ledgers, bandwidth caps, multipath fat-trees, and controller runs with
+mid-stream link failures (which drop the engine back to the sequential
+path without changing a byte).
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import BassPolicy, ClusterState
+from repro.core.tasks import Task
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import two_tier_fabric
+from repro.kernels import ts_plan
+
+
+def canon(assignments):
+    """Hashable bit-exact image of a schedule (floats via ``hex``)."""
+    out = []
+    for a in sorted(assignments, key=lambda a: a.tid):
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source,
+            a.start.hex(), a.finish.hex(),
+            None if a.bw_needed is None else float(a.bw_needed).hex(),
+            None if t is None else (
+                t.links, float(t.start).hex(), float(t.end).hex(),
+                tuple((s, float(f).hex()) for s, f in t.slot_fracs),
+            ),
+        ))
+    return tuple(out)
+
+
+def test_wavefront_fleet_slice_identical():
+    """A deterministic slice of the fleet benchmark config — the deep
+    frontier-skip / scalar micro-scan regime."""
+    from benchmarks.bench_sched_scale import fleet_instance
+
+    inst = fleet_instance(2, 32, 600)
+    pol = BassPolicy()
+    s_seq = ClusterState.from_instance(inst)
+    seq = [pol.place(t, s_seq) for t in inst.tasks]
+    s_wf = ClusterState.from_instance(inst)
+    wf = pol.place_batch(inst.tasks, s_wf)
+    assert canon(wf) == canon(seq)
+
+
+def test_wavefront_speculation_resume_path_identical():
+    """A contended 3 000-task batch drives the full adaptive-speculation
+    lifecycle — waves on → hit-rate gate turns them off → re-probe at
+    ``_spec_resume`` — and must stay bit-identical throughout."""
+    from benchmarks.bench_sched_scale import fleet_instance
+    from repro.core.wavefront import WavefrontPlanner
+
+    inst = fleet_instance(2, 32, 3000)
+    pol = BassPolicy()
+    s_seq = ClusterState.from_instance(inst)
+    seq = [pol.place(t, s_seq) for t in inst.tasks]
+    s_wf = ClusterState.from_instance(inst)
+    wf = pol.place_batch(inst.tasks, s_wf)
+    assert canon(wf) == canon(seq)
+    planner = WavefrontPlanner.for_state(s_wf)
+    # the off → resume → probe transition actually executed
+    assert planner._spec_resume > 0, "hit-rate gate never disabled waves"
+    assert planner.stats["waves"] >= 2, "re-probe after resume never ran"
+
+
+class _SequentialBass(BassPolicy):
+    """The historical per-task loop, as a policy (reference oracle)."""
+
+    def place_batch(self, tasks, state):
+        return [self.place(t, state) for t in tasks]
+
+
+def _controller_run(policy):
+    from repro.core.controller import ClusterController
+    from repro.core.topology import storage_hosts
+    from repro.net.fattree import fat_tree_fabric
+
+    fab = fat_tree_fabric(4)  # path diversity: failures reroute, not strand
+    hosts = storage_hosts(fab)
+    rng = np.random.default_rng(7)
+    idle = {h: float(rng.uniform(0, 30)) for h in hosts}
+    ctl = ClusterController(fab, hosts, policy, idle=idle, slot_duration=1.0)
+    for jid in range(3):
+        tasks = [
+            Task(tid=jid * 100 + i, size=float(rng.uniform(100, 900)),
+                 compute=float(rng.uniform(1, 8)),
+                 replicas=tuple(rng.choice(hosts, 3, replace=False)))
+            for i in range(8)
+        ]
+        ctl.submit(tasks, at=float(jid) * 3.0)
+    # mid-stream churn: kill a link that carries an in-flight transfer
+    # (both controllers are identical up to t=4, so both pick the same one)
+    ctl.run_until(3.9)
+    victim = max(
+        (a for rec in ctl.jobs.values() for a in rec.assignments
+         if a.transfer is not None and a.transfer.slot_fracs),
+        key=lambda a: (a.transfer.end, a.tid),
+    )
+    dead = ctl.state.ledger.link_names(victim.transfer.links)[1]
+    ctl.fail_link(dead, at=4.0)
+    ctl.recover_link(dead, at=9.0)
+    ctl.run()
+    return ctl
+
+
+def test_wavefront_controller_with_midstream_failures_identical():
+    """Jobs placed before/during/after a link failure: the wavefront
+    controller (which must fall back to the sequential path while
+    failures are live) stays bit-identical to the sequential policy,
+    reroutes included."""
+    c_wf = _controller_run("bass")
+    c_seq = _controller_run(_SequentialBass())
+    assert canon(c_wf.schedule().assignments) == canon(
+        c_seq.schedule().assignments
+    )
+    assert len(c_wf.reroute_log) == len(c_seq.reroute_log) > 0
+    for a, b in zip(c_wf.reroute_log, c_seq.reroute_log):
+        assert (a.flow, a.old_path, a.new_path, a.delivered, a.remaining) == (
+            b.flow, b.old_path, b.new_path, b.delivered, b.remaining
+        )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized commit/release/plan_bytes ≡ the historical per-slot loops
+# ---------------------------------------------------------------------------
+
+
+def _commit_loop(led, plan):
+    """The pre-vectorization reference implementation."""
+    idx = list(plan.links)
+    for slot, frac in plan.slot_fracs:
+        led._ensure(slot)
+        new = led.reserved[idx, slot] + frac
+        if (new > 1.0 + 1e-6).any():
+            raise ValueError(
+                f"over-reservation on slot {slot}: {new.max():.6f} > 1"
+            )
+        led.reserved[idx, slot] = np.minimum(new, 1.0)
+
+
+def _release_loop(led, plan):
+    idx = list(plan.links)
+    for slot, frac in plan.slot_fracs:
+        led.reserved[idx, slot] = np.maximum(led.reserved[idx, slot] - frac, 0.0)
+
+
+def _plan_bytes_loop(led, plan, until=None):
+    if not plan.slot_fracs:
+        return 0.0
+    cap = float(led.capacity[list(plan.links)].min())
+    t1 = plan.end if until is None else min(float(until), plan.end)
+    total = 0.0
+    for slot, frac in plan.slot_fracs:
+        lo = max(plan.start, slot * led.slot_duration)
+        hi = min(t1, (slot + 1) * led.slot_duration)
+        if hi > lo:
+            total += frac * cap * (hi - lo)
+    return total
+
+
+def _contended_pair():
+    fab = two_tier_fabric(2, 4, 100.0, 100.0)
+    a = TimeSlotLedger(fab, 1.0, 64)
+    b = TimeSlotLedger(fab, 1.0, 64)
+    return fab, a, b
+
+
+def test_scatter_commit_release_match_reference_loops():
+    fab, led_v, led_r = _contended_pair()
+    rng = np.random.default_rng(11)
+    hosts = [f"H{i}" for i in range(8)]
+    plans = []
+    for k in range(40):
+        s, d = rng.choice(hosts, 2, replace=False)
+        rows = led_v.rows(fab.path(str(s), str(d)))
+        plan = led_v.plan_transfer(float(rng.uniform(20, 700)), rows,
+                                   not_before=float(rng.uniform(0, 15)))
+        plans.append(plan)
+        led_v.commit(plan)
+        _commit_loop(led_r, plan)
+        n = min(led_v.reserved.shape[1], led_r.reserved.shape[1])
+        assert np.array_equal(led_v.reserved[:, :n], led_r.reserved[:, :n])
+        assert _plan_bytes_loop(led_v, plan) == pytest.approx(
+            led_v.plan_bytes(plan), rel=1e-12, abs=1e-12
+        )
+        assert _plan_bytes_loop(led_v, plan, until=plan.start + 1.7) == (
+            pytest.approx(led_v.plan_bytes(plan, until=plan.start + 1.7),
+                          rel=1e-12, abs=1e-12)
+        )
+    for plan in plans[::3]:
+        led_v.release(plan)
+        _release_loop(led_r, plan)
+        n = min(led_v.reserved.shape[1], led_r.reserved.shape[1])
+        assert np.array_equal(led_v.reserved[:, :n], led_r.reserved[:, :n])
+
+
+def test_scatter_commit_overbooking_raises_like_loop():
+    fab, led_v, led_r = _contended_pair()
+    rows = led_v.rows(fab.path("H1", "H0"))
+    p1 = led_v.plan_transfer(300.0, rows, not_before=0.0)
+    led_v.commit(p1)
+    _commit_loop(led_r, p1)
+    with pytest.raises(ValueError, match="over-reservation"):
+        led_v.commit(p1)  # identical double-book must trip the joint check
+    with pytest.raises(ValueError, match="over-reservation"):
+        _commit_loop(led_r, p1)
+
+
+# ---------------------------------------------------------------------------
+# plan_transfer_batch: frozen window escalation
+# ---------------------------------------------------------------------------
+
+
+def test_escalation_freezes_finished_candidates():
+    """One 100× outlier no longer forces every candidate to re-scan at 4×
+    the window (regression for the joint-escalation waste)."""
+    fab = two_tier_fabric(2, 5, 100.0, 1000.0)
+    led = TimeSlotLedger(fab, 1.0, 64)
+    # Throttle H1's uplink to a trickle for a long stretch: its transfer
+    # needs ~100× the window of everyone else's.
+    up1 = led.rows(["Up1"])
+    led.occupy(up1, 0.0, 20000.0, 0.99)
+    rows_list = [led.rows(fab.path(f"H{i}", "H0")) for i in range(1, 9)]
+    size = 3000.0  # outlier: 3000s at 1 Mbps residue; others: 30 s
+    led.batch_scan_cells = 0
+    batch = led.plan_transfer_batch(size, rows_list, not_before=0.0)
+    for rows, plan in zip(rows_list, batch):
+        assert plan == led.plan_transfer(size, rows, not_before=0.0)
+    # Frozen escalation: the first window scans all 8 candidates; only the
+    # outlier re-scans at 256/1024/4096.  The old joint escalation cost
+    # ~8×(64+256+1024+4096) cells.
+    outlier_windows = 64 + 256 + 1024 + 4096
+    assert led.batch_scan_cells <= 8 * 64 + outlier_windows
+    assert batch[0].end >= 90 * batch[1].end  # it really is the outlier
+
+
+# ---------------------------------------------------------------------------
+# ts_plan kernel: numpy reference ≡ Pallas backend (float64-safe inputs)
+# ---------------------------------------------------------------------------
+
+
+def _safe_inputs(seed, n=11, L=4, W=64):
+    """Inputs whose values and intermediates are exact in f32 and f64:
+    dyadic fractions, power-of-two capacities, integer sizes."""
+    rng = np.random.default_rng(seed)
+    booked = rng.integers(0, 9, size=(n, L, W)) / 8.0
+    caps = 2.0 ** rng.integers(2, 7, size=n)
+    secs = np.ones((n, W))
+    secs[:, 0] = 0.5
+    sizes = rng.integers(1, 300, size=n).astype(float)
+    return booked, caps, secs, sizes
+
+
+@pytest.mark.parametrize("bandwidth_cap", [None, 16.0])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ts_plan_backends_agree_bitwise(seed, bandwidth_cap):
+    pytest.importorskip("jax")
+    booked, caps, secs, sizes = _safe_inputs(seed)
+    ref = ts_plan.plan_scan_numpy(booked, caps, secs, sizes, bandwidth_cap)
+    got = ts_plan.plan_scan_pallas(booked, caps, secs, sizes, bandwidth_cap)
+    for r, g, name in zip(ref, got, ("resid", "bw", "cum", "hit")):
+        assert np.array_equal(
+            np.asarray(r, np.float64), np.asarray(g, np.float64)
+        ), name
+
+
+def test_ts_plan_hit_is_searchsorted():
+    booked, caps, secs, sizes = _safe_inputs(5)
+    _resid, _bw, cum, hit = ts_plan.plan_scan_numpy(booked, caps, secs, sizes)
+    for k in range(len(sizes)):
+        assert hit[k] == int(np.searchsorted(cum[k], sizes[k] - ts_plan.EPS))
+
+
+def test_ts_plan_backend_selection():
+    assert ts_plan.get_backend() == "numpy"
+    with pytest.raises(ValueError):
+        ts_plan.set_backend("nope")
