@@ -1,0 +1,195 @@
+"""Benchmark: failure-storm fast path (batched reroute + degraded wavefront).
+
+A k-ary fat-tree carries ≥10k in-flight shard transfers when a spine
+(core) switch dies mid-stream.  The controller must replan every victim
+at line rate: this benchmark times `ClusterController._reroute_dead`
+under both engines — the batched `core.reroute` engine and the recorded
+sequential per-victim loop (`reroute_engine = "sequential"`) — on
+byte-identical controllers, asserts their reroute logs and schedules
+agree bit-for-bit, and reports the speedup.  It also measures wavefront
+placement throughput on the same fabric healthy vs. degraded (one core
+down), the regime that used to fall back to the ~4×-slower sequential
+`place` loop.
+
+Derived values: victims replanned per second (reroute rows), tasks/s
+(placement rows), and the two acceptance ratios — batched-vs-sequential
+speedup (≥ 5× on the full config) and healthy-vs-degraded placement
+ratio (≤ 1.5×).  CSV: ``name,us_per_call,derived``.
+
+``--smoke`` runs the small config only (CI: byte-equality of the two
+engines is still asserted; thresholds are enforced on the full config,
+which runs locally via ``benchmarks.run``).  ``--json PATH`` appends
+machine-readable rows.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.controller import BassPolicy, ClusterController
+from repro.core.tasks import Task
+from repro.core.topology import storage_hosts
+from repro.net.fattree import fat_tree_fabric
+
+# (fat-tree arity, tasks) — every task is a cross-pod remote transfer.
+CONFIGS = [
+    (4, 2000),       # 16 hosts — smoke config
+    (8, 10000),      # 128 hosts, ≥10k in-flight — the acceptance config
+]
+
+T_KILL = 0.5
+DEAD_CORE = "core0_0"
+SPEEDUP_FLOOR = 5.0       # batched vs sequential on the full config
+DEGRADED_RATIO_CEIL = 1.5  # healthy tasks/s vs degraded tasks/s
+
+
+def storm_setup(k: int, n_tasks: int):
+    """Sources in the lower pods, workers in the upper pods: every
+    placement moves a shard across the core layer."""
+    fab = fat_tree_fabric(k, link_mbps=100.0)
+    hosts = storage_hosts(fab)
+    half = len(hosts) // 2
+    sources, workers = hosts[:half], hosts[half:]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(sources), size=(n_tasks, 3))
+    tasks = [
+        Task(
+            tid=i,
+            size=float(256 + (i % 7) * 64),   # ~26–64 slots at 100 units
+            compute=0.05,
+            replicas=tuple(sources[j] for j in idx[i]),
+        )
+        for i in range(n_tasks)
+    ]
+    idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
+    return fab, workers, tasks, idle
+
+
+def _controller(fab, workers, idle, engine: str) -> ClusterController:
+    ctrl = ClusterController(
+        fab, workers, BassPolicy(multipath=True), idle=idle,
+        slot_duration=0.1,
+    )
+    ctrl.reroute_engine = engine
+    return ctrl
+
+
+def _canon_log(log):
+    return [
+        (r.flow, r.old_path, r.new_path, float(r.delivered).hex(),
+         float(r.remaining).hex(), float(r.new_end).hex())
+        for r in log
+    ]
+
+
+def _canon_sched(ctrl):
+    out = []
+    for a in ctrl.schedule().assignments:
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    return out
+
+
+def run_reroute_leg(k: int, n_tasks: int, engine: str):
+    fab, workers, tasks, idle = storm_setup(k, n_tasks)
+    ctrl = _controller(fab, workers, idle, engine)
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)
+    in_flight = sum(
+        1 for rec in ctrl.jobs.values() for a in rec.assignments
+        if a.transfer is not None and a.transfer.slot_fracs
+        and a.transfer.end > T_KILL
+    )
+    ctrl.fail_switch(DEAD_CORE, at=T_KILL)
+    t0 = time.perf_counter()
+    ctrl.run_until(T_KILL)
+    dt = time.perf_counter() - t0
+    return ctrl, dt, in_flight, len(ctrl.reroute_log)
+
+
+def run_placement_leg(k: int, n_tasks: int, degraded: bool):
+    fab, workers, tasks, idle = storm_setup(k, n_tasks)
+    ctrl = _controller(fab, workers, idle, "batched")
+    if degraded:
+        ctrl.fail_switch(DEAD_CORE, at=0.0)
+    ctrl.submit(tasks, at=0.0)
+    t0 = time.perf_counter()
+    ctrl.run_until(0.0)
+    dt = time.perf_counter() - t0
+    assert len(ctrl.jobs[0].assignments) == n_tasks
+    return dt
+
+
+def run(configs=None) -> list:
+    rows = []
+    for k, n_tasks in configs if configs is not None else CONFIGS:
+        n_hosts = k ** 3 // 4
+        tag = f"failover_{n_hosts}h_{n_tasks}t"
+
+        c_seq, dt_seq, in_flight, v_seq = run_reroute_leg(k, n_tasks,
+                                                          "sequential")
+        c_bat, dt_bat, _inf2, v_bat = run_reroute_leg(k, n_tasks, "batched")
+        assert in_flight >= n_tasks * 0.9, "workload lost its in-flight set"
+        assert v_bat == v_seq > 0
+        assert _canon_log(c_bat.reroute_log) == _canon_log(c_seq.reroute_log)
+        assert _canon_sched(c_bat) == _canon_sched(c_seq)
+        speedup = dt_seq / dt_bat
+        rows.append((f"{tag}_seq", dt_seq / v_seq * 1e6,
+                     round(v_seq / dt_seq, 1)))
+        rows.append((f"{tag}_batched", dt_bat / v_bat * 1e6,
+                     round(v_bat / dt_bat, 1)))
+        rows.append((f"{tag}_speedup", 0.0, round(speedup, 2)))
+
+        dt_healthy = run_placement_leg(k, n_tasks, degraded=False)
+        dt_degraded = run_placement_leg(k, n_tasks, degraded=True)
+        ratio = dt_degraded / dt_healthy
+        rows.append((f"{tag}_place_healthy", dt_healthy / n_tasks * 1e6,
+                     round(n_tasks / dt_healthy, 0)))
+        rows.append((f"{tag}_place_degraded", dt_degraded / n_tasks * 1e6,
+                     round(n_tasks / dt_degraded, 0)))
+        rows.append((f"{tag}_place_ratio", 0.0, round(ratio, 2)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config only (byte-equality still asserted)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write machine-readable rows (JSON)")
+    args = ap.parse_args()
+    configs = CONFIGS[:1] if args.smoke else CONFIGS
+    rows = run(configs)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        from benchmarks.bench_sched_scale import write_json
+
+        write_json(rows, args.json)
+    if not args.smoke:
+        by_name = {r[0]: r[2] for r in rows}
+        for k, n_tasks in configs:
+            if (k, n_tasks) != CONFIGS[-1]:
+                continue  # thresholds bind on the acceptance config only
+            tag = f"failover_{k ** 3 // 4}h_{n_tasks}t"
+            if by_name[f"{tag}_speedup"] < SPEEDUP_FLOOR:
+                raise SystemExit(
+                    f"{tag}: batched reroute speedup "
+                    f"{by_name[f'{tag}_speedup']} below {SPEEDUP_FLOOR}x"
+                )
+            if by_name[f"{tag}_place_ratio"] > DEGRADED_RATIO_CEIL:
+                raise SystemExit(
+                    f"{tag}: degraded placement {by_name[f'{tag}_place_ratio']}x "
+                    f"slower than healthy (ceil {DEGRADED_RATIO_CEIL}x)"
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@
 * bench_online      — beyond-paper: online multi-job streams (all policies)
 * bench_multipath   — beyond-paper: single- vs multipath BASS on a k=8
                       fat-tree with 10% random link failures
+* bench_failover_scale — beyond-paper: spine-kill storm over ≥10k in-flight
+                      transfers (batched vs sequential reroute engine) +
+                      wavefront placement throughput on a degraded fabric
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -20,6 +23,7 @@ import sys
 
 from . import (
     bench_discussion1,
+    bench_failover_scale,
     bench_multipath,
     bench_online,
     bench_prebass,
@@ -38,6 +42,7 @@ MODULES = [
     bench_sched_scale,
     bench_online,
     bench_multipath,
+    bench_failover_scale,
     bench_roofline,
 ]
 

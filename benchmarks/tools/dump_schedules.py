@@ -3,7 +3,11 @@
 Run before and after a scheduler change; an empty diff proves the change
 is byte-identical (floats serialized via ``float.hex``).  Used to verify
 the wavefront placement engine (DESIGN.md §5) emits the same bytes as
-the sequential greedy loop on the Fig. 2, Table-I and fleet workloads.
+the sequential greedy loop on the Fig. 2, Table-I and fleet workloads,
+and the batched reroute engine (DESIGN.md §6) on a failure-storm fleet
+workload (schedules **and** reroute log; the storm section is emitted
+per reroute engine, so the two blocks must be byte-identical to each
+other within one dump as well as across code changes).
 
     PYTHONPATH=src python benchmarks/tools/dump_schedules.py OUTFILE
 """
@@ -61,6 +65,32 @@ def main() -> None:
             inst = fleet_instance(pods, hosts, n)
             dump_schedule(out, f"fleet_{pods * hosts}h_{n}t_bass",
                           SCHEDULERS["bass"](inst))
+        for engine in ("batched", "sequential"):
+            dump_failure_storm(out, engine)
+
+
+def dump_failure_storm(out, engine):
+    """Spine-kill fleet storm: schedule + reroute log under one engine."""
+    from benchmarks.bench_failover_scale import (  # noqa: E402
+        DEAD_CORE, T_KILL, _controller, storm_setup,
+    )
+
+    fab, workers, tasks, idle = storm_setup(4, 600)
+    ctrl = _controller(fab, workers, idle, engine)
+    ctrl.submit(tasks, at=0.0)
+    ctrl.fail_switch(DEAD_CORE, at=T_KILL)
+    ctrl.fail_link("ea/p3e0a0", at=1.0)
+    ctrl.run_until(2.0)
+    dump_schedule(out, f"failstorm_{engine}", ctrl.schedule())
+    out.write(f"== failstorm_{engine}_reroute_log\n")
+    for r in ctrl.reroute_log:
+        out.write(
+            f"{r.flow} at={fx(r.at)} dead={','.join(r.dead_links)} "
+            f"{r.src}->{r.dst} old={'/'.join(r.old_path)} "
+            f"new={'/'.join(r.new_path)} delivered={fx(r.delivered)} "
+            f"remaining={fx(r.remaining)} old_end={fx(r.old_end)} "
+            f"new_end={fx(r.new_end)}\n"
+        )
 
 
 if __name__ == "__main__":

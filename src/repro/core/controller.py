@@ -139,7 +139,7 @@ def choose_source(
     """
     cands = [rep for rep in task.replicas if rep != dst]
     assert cands, f"task {task.tid} has no off-node replica"
-    rows_list = [ledger.rows(ledger.fabric.path(rep, dst)) for rep in cands]
+    rows_list = [ledger.path_rows(rep, dst) for rep in cands]
     bws = ledger.path_bandwidth_batch(rows_list, at)
     best = min(
         range(len(cands)),
@@ -161,7 +161,7 @@ def nearest_source(
     for rep in task.replicas:
         if rep == dst:
             continue
-        rows = ledger.rows(ledger.fabric.path(rep, dst))
+        rows = ledger.path_rows(rep, dst)
         key = (len(rows), rep)
         if best is None or key < best[0]:
             best = (key, rep, rows)
@@ -463,6 +463,8 @@ class ClusterState:
         dup.ledger.capacity = self.ledger.capacity
         dup.ledger.reserved = self.ledger.reserved.copy()
         dup.ledger.batch_scan_cells = 0
+        dup.ledger._path_rows = self.ledger._path_rows  # shared read cache
+        dup.ledger._path_rows_version = self.ledger._path_rows_version
         dup.background = list(self.background)
         dup.heap = MinnowHeap(dup.idle, dup.workers)
         dup.now = self.now
@@ -564,10 +566,11 @@ class BassPolicy:
         """Batch arrivals route through the wavefront engine
         (``core.wavefront``): one broadcasted (task × replica × path)
         scoring pass per wave instead of per-task ledger re-scans —
-        bit-identical to the per-task ``place`` loop, which remains the
-        fallback while failure-aware routing is live (dead-link detours
-        are per-task state the wave speculation does not model)."""
-        if len(tasks) > 1 and not state._routing_live():
+        bit-identical to the per-task ``place`` loop, including under
+        live failure-aware routing (the planner threads the data plane's
+        dead-link set through candidate enumeration, so degraded batches
+        keep wavefront throughput instead of reverting to the loop)."""
+        if len(tasks) > 1:
             from .wavefront import WavefrontPlanner
 
             return WavefrontPlanner.for_state(state).place_batch(
@@ -915,6 +918,15 @@ class ClusterController:
         self._suspended: List[Tuple[object, Tuple[str, ...], float]] = []
         self._expiry: List[Tuple[float, int, object]] = []  # (end, gen, cookie)
         self._flow_gen: Dict[object, int] = {}
+        #: Failure-replan implementation: "batched" (core.reroute engine)
+        #: or "sequential" (the per-victim reference loop — the oracle the
+        #: property tests and bench_failover_scale compare against).
+        self.reroute_engine = "batched"
+        #: Batched-engine telemetry: events handled, victims replanned,
+        #: prescan curve hits vs live re-scores, and invariant-guard
+        #: fallbacks to the sequential oracle (unevenly-booked tails).
+        self.reroute_stats = {"events": 0, "victims": 0, "hits": 0,
+                              "misses": 0, "fallbacks": 0}
         self.now = 0.0
 
     @classmethod
@@ -1068,9 +1080,10 @@ class ClusterController:
         """Place one arrived job's task list and install its flow rules.
 
         ``policy.place_batch`` routes through the wavefront engine
-        (``core.wavefront``) whenever the data plane carries no failures,
-        so a fleet-scale arrival is planned in broadcast waves rather than
-        per-task ledger re-scans — byte-identical either way."""
+        (``core.wavefront``) healthy or degraded — a fleet-scale arrival
+        is planned in broadcast waves rather than per-task ledger
+        re-scans, with dead links priced out of candidate enumeration —
+        byte-identical either way."""
         rec.assignments = self.policy.place_batch(rec.tasks, self.state)
         rec.placed = True
         for a in rec.assignments:
@@ -1115,86 +1128,34 @@ class ClusterController:
         best surviving (replica, path) candidate starting at ``at``.
         Raises :class:`UnroutableError` when a victim has no surviving
         path — there are no silent stalls.
+
+        The batched engine (``core.reroute``, DESIGN.md §6) replans the
+        whole storm in fused array passes, byte-identical to the
+        sequential per-victim loop, which survives as the reference
+        oracle (``reroute_engine = "sequential"``).
         """
-        from ..net.events import RerouteRecord
+        from .reroute import RerouteEngine, sequential_reroute
 
-        ledger = self.state.ledger
-        dead_names = self.dataplane.all_dead_links()
-        dead_rows = {ledger.rows((n,))[0] for n in dead_names}
-        touched_nodes = set()
-        rerouted_tids = set()
+        if self.reroute_engine == "sequential":
+            sequential_reroute(self, at)
+        else:
+            RerouteEngine(self).run(at)
+        self._compact_expiry()
 
-        # Only jobs with a transfer still in flight can be affected; the
-        # index self-prunes (completed / popped jobs drop out here), so a
-        # long-lived controller's failure handling stays O(in-flight).
-        for jid, latest_end in list(self._live_jobs.items()):
-            rec = self.jobs.get(jid)
-            if rec is None or latest_end <= at + _EPS:
-                del self._live_jobs[jid]
-                continue
-            tasks = None
-            for a in rec.assignments:
-                plan = a.transfer
-                if plan is None or not plan.slot_fracs:
-                    continue
-                if plan.end <= at + _EPS or not (set(plan.links) & dead_rows):
-                    continue
-                if tasks is None:
-                    tasks = {tk.tid: tk for tk in rec.tasks}
-                task = tasks[a.tid]
-                old_names = ledger.link_names(plan.links)
-                # Remaining bytes come from the *current* plan, not
-                # task.size — after an earlier reroute the plan already
-                # carries only the then-remaining bytes.
-                total = ledger.plan_bytes(plan)
-                kept = ledger.release_after(plan, at)
-                delivered = ledger.plan_bytes(kept)
-                remaining = max(total - delivered, 0.0)
-                # A transfer that had not started yet keeps its queue
-                # position (its original start), it does not jump to the
-                # failure instant — rerouting must never act as prefetch.
-                nb = max(at, plan.start)
-                src, _rows, new_plan = self.state.choose_source_path(
-                    task, a.node, nb, size=remaining
-                )
-                ledger.commit(new_plan)
-                cookie = ("job", rec.jid, a.tid)
-                self.dataplane.tables.uninstall(cookie)
-                self._install(cookie, src, a.node, new_plan)
-                self.reroute_log.append(RerouteRecord(
-                    at=at, flow=cookie, dead_links=tuple(sorted(
-                        dead_names & set(old_names))),
-                    src=src, dst=a.node,
-                    old_path=old_names,
-                    new_path=ledger.link_names(new_plan.links),
-                    delivered=delivered, remaining=remaining,
-                    old_end=plan.end, new_end=new_plan.end,
-                ))
-                a.source, a.transfer = src, new_plan
-                rec.rerouted += 1
-                rerouted_tids.add(a.tid)
-                touched_nodes.add(a.node)
-                self._live_jobs[jid] = max(
-                    self._live_jobs.get(jid, 0.0), new_plan.end
-                )
+    def _compact_expiry(self) -> None:
+        """Drop stale flow-rule expiry entries (lazy-deletion compaction).
 
-        # Raw flows (explicit-link reservations, e.g. grad sync) cannot
-        # detour — suspend their remainder until the links recover.
-        for tag, plan in list(self.flows.items()):
-            if not plan.slot_fracs or plan.end <= at + _EPS:
-                continue
-            if not (set(plan.links) & dead_rows):
-                continue
-            total = ledger.plan_bytes(plan)
-            kept = ledger.release_after(plan, at)
-            delivered = ledger.plan_bytes(kept)
-            self.flows[tag] = kept
-            self._suspended.append(
-                (tag, ledger.link_names(plan.links), total - delivered)
-            )
-
-        if touched_nodes:
-            self._retime_nodes(touched_nodes, rerouted_tids)
+        A reroute reinstalls rules under the same cookie with a newer
+        generation; the superseded heap entry only disappears once its
+        old end time passes.  Across a long failure storm of mass
+        reinstalls the heap would otherwise accumulate one stale entry
+        per reroute — compact whenever stale entries outnumber live
+        cookies."""
+        if len(self._expiry) > 64 and len(self._expiry) > 2 * len(self._flow_gen):
+            self._expiry = [
+                e for e in self._expiry if self._flow_gen.get(e[2]) == e[1]
+            ]
+            heapq.heapify(self._expiry)
 
     def _resume_flows(self, at: float) -> None:
         """Re-plan suspended raw flows whose links are all alive again."""
@@ -1223,18 +1184,27 @@ class ClusterController:
         (``set_idle`` backlog refreshes) are folded into committed starts
         and must not be rewound by a retime that only knows ``_idle0``.
         The shared idle map and minnow heap are resynced.
+
+        One grouping pass over the assignment set feeds every node's
+        replay (the per-node scan is a genuine recurrence and stays in
+        python floats — the same doubles, in the same order); the
+        historical per-node re-scan of all jobs made a storm's retime
+        O(touched nodes × assignments).
         """
-        for node in nodes:
-            items = [
-                (rec, a)
-                for rec in self.jobs.values()
-                for a in rec.assignments
-                if a.node == node
-            ]
-            items.sort(key=lambda ra: (ra[1].start, ra[1].tid))
+        by_node: Dict[str, List[Tuple[float, "Assignment"]]] = {
+            n: [] for n in nodes
+        }
+        for rec in self.jobs.values():
+            submit_at = rec.submit_at
+            for a in rec.assignments:
+                q = by_node.get(a.node)
+                if q is not None:
+                    q.append((submit_at, a))
+        for node, items in by_node.items():
+            items.sort(key=lambda sa: (sa[1].start, sa[1].tid))
             t = self._idle0.get(node, 0.0)
-            for rec, a in items:
-                ready = rec.submit_at
+            for submit_at, a in items:
+                ready = submit_at
                 if a.transfer is not None and a.transfer.slot_fracs:
                     ready = max(ready, a.transfer.end)
                 task_compute = a.finish - a.start  # TP is start-invariant

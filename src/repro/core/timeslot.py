@@ -71,6 +71,8 @@ class TimeSlotLedger:
         #: test pins that one oversized outlier no longer re-scans the
         #: whole batch at 4× the window).
         self.batch_scan_cells = 0
+        self._path_rows: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        self._path_rows_version = fabric.version
 
     # -- plumbing -----------------------------------------------------------
     def rows(self, link_names: Sequence[str]) -> Tuple[int, ...]:
@@ -78,6 +80,26 @@ class TimeSlotLedger:
 
     def link_names(self, rows: Sequence[int]) -> Tuple[str, ...]:
         return tuple(self._names[r] for r in rows)
+
+    def path_rows(self, src: str, dst: str) -> Tuple[int, ...]:
+        """``rows(fabric.path(src, dst))``, cached per endpoint pair.
+
+        The scheduling loop re-derives the same path-row tuples for every
+        placement (every replica of every task); the fabric's own path
+        cache still pays a name→row translation per link per call.  Keyed
+        on ``fabric.version`` so a topology mutation can never serve a
+        pre-mutation row set.
+        """
+        if self.fabric.version != self._path_rows_version:
+            self._path_rows.clear()
+            self._path_rows_version = self.fabric.version
+        hit = self._path_rows.get((src, dst))
+        if hit is None:
+            hit = self.rows(self.fabric.path(src, dst))
+            if len(self._path_rows) > (1 << 18):
+                self._path_rows.clear()
+            self._path_rows[(src, dst)] = hit
+        return hit
 
     def _ensure(self, slot: int) -> None:
         n = self.reserved.shape[1]
@@ -347,6 +369,54 @@ class TimeSlotLedger:
             raise ValueError(
                 f"over-reservation on slot {slots[col]}: "
                 f"{new[:, col].max():.6f} > 1"
+            )
+        self.reserved[rr, cc] = np.minimum(new, 1.0)
+
+    def commit_batch(self, plans: Sequence[TransferPlan]) -> None:
+        """Commit many plans whose (link, slot) cells are pairwise disjoint
+        in one concatenated scatter (the reroute engine's grouped commit).
+
+        Disjointness is the caller's contract — the engine's conflict walk
+        only groups winners whose reads (a superset of their writes) were
+        untouched by every earlier winner in the group — so a plain fancy-
+        index add equals committing the plans one by one, in any order.
+        A single joint over-reservation check mirrors :meth:`commit`.
+        """
+        rr_parts: List[np.ndarray] = []
+        cc_parts: List[np.ndarray] = []
+        vv_parts: List[np.ndarray] = []
+        for plan in plans:
+            n_slots = len(plan.slot_fracs)
+            if not n_slots:
+                continue
+            links = np.asarray(plan.links)
+            slots = np.fromiter(
+                (s for s, _ in plan.slot_fracs), dtype=np.int64, count=n_slots
+            )
+            fracs = np.fromiter(
+                (f for _, f in plan.slot_fracs), dtype=np.float64,
+                count=n_slots,
+            )
+            rr_parts.append(np.repeat(links, n_slots))
+            cc_parts.append(np.tile(slots, links.size))
+            vv_parts.append(np.tile(fracs, links.size))
+        if not rr_parts:
+            return
+        rr = np.concatenate(rr_parts)
+        cc = np.concatenate(cc_parts)
+        self._ensure(int(cc.max()))
+        # The disjointness contract is load-bearing (fancy-index assignment
+        # is last-write-wins): a violation must fail loudly, not silently
+        # drop a reservation.
+        cells = rr * self.reserved.shape[1] + cc
+        if np.unique(cells).size != cells.size:
+            raise ValueError("commit_batch: plans share a (link, slot) cell")
+        new = self.reserved[rr, cc] + np.concatenate(vv_parts)
+        over = new > 1.0 + 1e-6
+        if over.any():
+            k = int(over.argmax())
+            raise ValueError(
+                f"over-reservation on slot {cc[k]}: {new[k]:.6f} > 1"
             )
         self.reserved[rr, cc] = np.minimum(new, 1.0)
 

@@ -124,6 +124,12 @@ class WavefrontPlanner:
         self._spec_on = True
         self._spec_from = 0
         self._spec_resume = 0
+        # Liveness: candidate row sets depend on the data plane's dead
+        # set, so the pair/multi caches key on its mutation counter (a
+        # fail/recover between batches drops them; healthy batches pay
+        # nothing).  ``_dead`` is the current overlay, empty when healthy.
+        self._dead: frozenset = frozenset()
+        self._live_version = -1
         self.stats = {"hits": 0, "misses": 0, "waves": 0, "spec_tasks": 0}
 
     @classmethod
@@ -148,6 +154,16 @@ class WavefrontPlanner:
         state = self.state
         idle = state.idle
         pairs_mode = bool(multipath) and state.dataplane is not None
+        dp = state.dataplane
+        if dp is not None and dp.liveness_version != self._live_version:
+            self._pair_cache.clear()
+            self._multi_cache.clear()
+            self._live_version = dp.liveness_version
+        self._dead = (
+            dp.all_dead_links()
+            if dp is not None and dp.has_failures()
+            else frozenset()
+        )
         self._entries = {}
         self._spec_until = 0
         self._dirty.fill(_NEVER)
@@ -659,7 +675,7 @@ class WavefrontPlanner:
         (all ``choose_source`` consults) and only the winner pays a plan
         scan, frontier-skipped and window-escalated like
         ``plan_transfer``."""
-        if not pairs_mode and self._tree:
+        if not pairs_mode and self._tree and not self._dead:
             got = self._score_tree(task, dst, at)
             if got is not None:
                 return got
@@ -668,7 +684,7 @@ class WavefrontPlanner:
         else:
             cands = self._candidates(task, dst, pairs_mode, k_paths)
         if not cands:
-            if pairs_mode:
+            if pairs_mode or self._dead:
                 raise UnroutableError(
                     f"task {task.tid}: no replica has a surviving path to {dst!r}"
                 )
@@ -896,7 +912,10 @@ class WavefrontPlanner:
         self, task: Task, dst: str, pairs_mode: bool, k_paths: Optional[int]
     ) -> list:
         """[(src, rows_tuple, padded_row_array, bottleneck_cap, hops)] in
-        the exact enumeration order of the sequential scorers."""
+        the exact enumeration order of the sequential scorers.  Under
+        live routing (``self._dead`` non-empty) candidates come from the
+        data plane's surviving sets — dead links price replicas out here,
+        exactly as ``ClusterState.choose_source`` drops them."""
         out: list = []
         if pairs_mode:
             for rep in task.replicas:
@@ -919,6 +938,28 @@ class WavefrontPlanner:
                         self._multi_cache.clear()
                     self._multi_cache[key] = lst
                 out.extend((rep,) + c for c in lst)
+            return out
+        if self._dead:
+            # Failure-aware single path: each replica contributes its best
+            # surviving path (k=1: Yen's first path, no spur searches);
+            # unroutable replicas drop out of the candidate set.
+            for rep in task.replicas:
+                if rep == dst:
+                    continue
+                key = (rep, dst)
+                hit = self._pair_cache.get(key, False)
+                if hit is False:
+                    try:
+                        paths = self.state.dataplane.candidates(rep, dst, k=1)
+                    except UnroutableError:
+                        hit = None
+                    else:
+                        hit = self._mk_cand(self.ledger.rows(paths[0]))
+                    if len(self._pair_cache) > (1 << 18):
+                        self._pair_cache.clear()
+                    self._pair_cache[key] = hit
+                if hit is not None:
+                    out.append((rep,) + hit)
             return out
         for rep in task.replicas:
             if rep == dst:

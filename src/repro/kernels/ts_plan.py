@@ -45,10 +45,25 @@ def plan_scan_numpy(
     secs: np.ndarray,          # [n_cand, W] usable seconds per slot
     sizes: np.ndarray,         # [n_cand] bytes (capacity-units·sec) to move
     bandwidth_cap: Optional[float] = None,
+    overlay: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Reference scan; row ``k`` is bit-identical to ``plan_transfer`` run
     on candidate ``k`` alone (same expressions, numpy ``cumsum`` is a
-    sequential accumulation per row)."""
+    sequential accumulation per row).
+
+    ``overlay`` (same shape as ``booked``, or broadcastable) is an extra
+    reserved-fraction layer folded in as an elementwise max — a masked
+    scan for callers that want cells priced as busier than the ledger
+    records without mutating it (liveness masks, what-if overlays).
+    ``max`` is exact in floating point, so an overlay of 0/1 cells
+    reproduces the overlaid ledger bit-for-bit.  (The reroute engine
+    ultimately prices its phantom-full view by *enumerating* only
+    owner-clean columns — see ``core/reroute.py`` — so nothing in the
+    scheduling core depends on this parameter; it is contract-tested on
+    both backends.)
+    """
+    if overlay is not None:
+        booked = np.maximum(booked, overlay)
     resid = 1.0 - booked.max(axis=1)
     bw = resid * caps[:, None]
     if bandwidth_cap is not None:
@@ -70,11 +85,14 @@ def plan_scan_pallas(
     secs: np.ndarray,
     sizes: np.ndarray,
     bandwidth_cap: Optional[float] = None,
+    overlay: Optional[np.ndarray] = None,
     interpret: Optional[bool] = None,
 ):
     """Pallas-TPU backend (float32).  Agrees with :func:`plan_scan_numpy`
     bit-wise on float64-safe inputs (module docstring); lazy jax import so
-    the numpy scheduling path never touches jax."""
+    the numpy scheduling path never touches jax.  The ``overlay`` layer is
+    folded in on the host (one exact elementwise max) — it feeds the same
+    padded gather, so the kernel body is unchanged."""
     import jax
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
@@ -84,6 +102,8 @@ def plan_scan_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    if overlay is not None:
+        booked = np.maximum(booked, overlay)
     n, L, W = booked.shape
     BN, LP = 8, max(8, L)
     WP = max(128, -(-W // 128) * 128)
@@ -162,6 +182,7 @@ def get_backend() -> str:
     return _backend
 
 
-def plan_scan(booked, caps, secs, sizes, bandwidth_cap=None):
+def plan_scan(booked, caps, secs, sizes, bandwidth_cap=None, overlay=None):
     """Dispatch to the selected backend (numpy unless opted out)."""
-    return _BACKENDS[_backend](booked, caps, secs, sizes, bandwidth_cap)
+    return _BACKENDS[_backend](booked, caps, secs, sizes, bandwidth_cap,
+                               overlay)

@@ -16,7 +16,7 @@ pre-data-plane code.
 """
 from __future__ import annotations
 
-from typing import FrozenSet, Optional, Set, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Set, Tuple
 
 from ..core.timeslot import TimeSlotLedger
 from ..core.topology import Fabric
@@ -32,26 +32,34 @@ class DataPlane:
         self.dead_links: Set[str] = set()    # individually failed
         self.dead_switches: Set[str] = set()
         self._dead_all: Optional[FrozenSet[str]] = None  # overlay cache
+        #: Monotone counter bumped on every liveness mutation — cheap cache
+        #: key for consumers (the wavefront planner) whose candidate sets
+        #: depend on the current dead set.
+        self.liveness_version = 0
 
     # -- liveness overlay ---------------------------------------------------
     def fail_link(self, name: str) -> None:
         self.fabric.link(name)  # KeyError on unknown link
         self.dead_links.add(name)
         self._dead_all = None
+        self.liveness_version += 1
 
     def recover_link(self, name: str) -> None:
         self.dead_links.discard(name)
         self._dead_all = None
+        self.liveness_version += 1
 
     def fail_switch(self, node: str) -> None:
         if not self.fabric.has_node(node):
             raise ValueError(f"unknown node {node!r}")
         self.dead_switches.add(node)
         self._dead_all = None
+        self.liveness_version += 1
 
     def recover_switch(self, node: str) -> None:
         self.dead_switches.discard(node)
         self._dead_all = None
+        self.liveness_version += 1
 
     def all_dead_links(self) -> FrozenSet[str]:
         """Explicitly failed links plus every link touching a dead switch."""
@@ -83,6 +91,25 @@ class DataPlane:
         if src in self.dead_switches or dst in self.dead_switches:
             raise UnroutableError(f"endpoint down: {src!r} -> {dst!r}")
         return self.engine.route(src, dst, self.all_dead_links(), k=k)
+
+    def candidates_batch(
+        self, pairs: Sequence[Tuple[str, str]], k: Optional[int] = None
+    ) -> Dict[Tuple[str, str], Tuple[Path, ...]]:
+        """Surviving candidates for many pairs in one engine pass.
+
+        Pairs with a dead endpoint or no surviving path map to ``()``
+        instead of raising — the batched reroute engine drops dead
+        replicas per victim and raises only when a victim has none left.
+        """
+        dead = self.all_dead_links()
+        live = [
+            p for p in pairs
+            if p[0] not in self.dead_switches and p[1] not in self.dead_switches
+        ]
+        out = self.engine.route_batch(live, dead, k=k)
+        for p in pairs:
+            out.setdefault(p, ())
+        return out
 
     def usable(self, src: str, dst: str) -> bool:
         try:

@@ -32,32 +32,42 @@ class FlowRule:
 
 
 class FlowTable:
-    """A single node's flow table."""
+    """A single node's flow table.
+
+    Rules are bucketed by cookie (one transfer = one cookie, and a node
+    appears at most once on a path), so the reroute storm's mass
+    uninstalls are one dict pop instead of a scan of every rule the node
+    carries.  Bucket order is install order, so ``dump``/``lookup``
+    iterate rules exactly as the historical flat list did.
+    """
 
     def __init__(self, node: str) -> None:
         self.node = node
-        self._rules: List[FlowRule] = []
+        self._rules: Dict[Hashable, List[FlowRule]] = {}
+        self._n = 0
 
     def install(self, rule: FlowRule) -> None:
-        self._rules.append(rule)
+        self._rules.setdefault(rule.cookie, []).append(rule)
+        self._n += 1
 
     def uninstall(self, cookie: Hashable) -> int:
-        before = len(self._rules)
-        self._rules = [r for r in self._rules if r.cookie != cookie]
-        return before - len(self._rules)
+        gone = len(self._rules.pop(cookie, ()))
+        self._n -= gone
+        return gone
 
     def lookup(self, src: str, dst: str) -> Optional[FlowRule]:
         """Highest-priority rule matching the endpoint pair (ties: latest)."""
-        hits = [r for r in self._rules if r.match == (src, dst)]
+        hits = [r for rs in self._rules.values() for r in rs
+                if r.match == (src, dst)]
         if not hits:
             return None
         return max(enumerate(hits), key=lambda ir: (ir[1].priority, ir[0]))[1]
 
     def dump(self) -> List[FlowRule]:
-        return list(self._rules)
+        return [r for rs in self._rules.values() for r in rs]
 
     def __len__(self) -> int:
-        return len(self._rules)
+        return self._n
 
 
 class FlowTables:
@@ -66,6 +76,10 @@ class FlowTables:
     def __init__(self, fabric: Fabric) -> None:
         self.fabric = fabric
         self._tables: Dict[str, FlowTable] = {}
+        # cookie → nodes holding its rules, so a reroute storm's mass
+        # uninstalls touch only the tables that actually carry the cookie
+        # instead of scanning every table in the fabric.
+        self._cookie_nodes: Dict[Hashable, Tuple[str, ...]] = {}
         self._prio = 0
 
     def table(self, node: str) -> FlowTable:
@@ -92,11 +106,16 @@ class FlowTables:
             rule = FlowRule(hop, (src, dst), link, cookie, priority=self._prio)
             self.table(hop).install(rule)
             out.append(rule)
+        held = self._cookie_nodes.get(cookie, ())
+        self._cookie_nodes[cookie] = held + tuple(nodes[:-1])
         return out
 
     def uninstall(self, cookie: Hashable) -> int:
         """Remove every rule the cookie installed; returns the count."""
-        return sum(t.uninstall(cookie) for t in self._tables.values())
+        nodes = self._cookie_nodes.pop(cookie, ())
+        return sum(
+            self._tables[n].uninstall(cookie) for n in dict.fromkeys(nodes)
+        )
 
     # -- inspection ---------------------------------------------------------
     def dump(self, node: Optional[str] = None) -> List[FlowRule]:

@@ -152,13 +152,54 @@ class PathEngine:
         self._fail_cache: Dict[
             Tuple[str, str, int, FrozenSet[str]], Tuple[Path, ...]
         ] = {}
+        # Surviving-candidate filter results keyed on the dead set — the
+        # failure-storm hot path asks for the same pair under the same
+        # overlay thousands of times per event.
+        self._alive_cache: Dict[
+            Tuple[str, str, int, FrozenSet[str]], Tuple[Path, ...]
+        ] = {}
+        # Dead-set-aware incidence: per candidate set, each path's links as
+        # an integer id array (engine-local link index), so one boolean
+        # gather prices a whole dead set against every candidate.
+        self._link_idx: Dict[str, int] = {
+            n: i for i, n in enumerate(sorted(fabric.links))
+        }
+        self._path_ids: Dict[Tuple[str, str, int], Tuple[np.ndarray, ...]] = {}
         self._version = fabric.version
 
     def _fresh(self) -> None:
         if self.fabric.version != self._version:
             self._cache.clear()
             self._fail_cache.clear()
+            self._alive_cache.clear()
+            self._path_ids.clear()
+            self._link_idx = {
+                n: i for i, n in enumerate(sorted(self.fabric.links))
+            }
             self._version = self.fabric.version
+
+    def _ids(self, src: str, dst: str, kk: int) -> Tuple[np.ndarray, ...]:
+        """Each cached candidate's links as an id array (incidence rows)."""
+        key = (src, dst, kk)
+        hit = self._path_ids.get(key)
+        if hit is None:
+            li = self._link_idx
+            hit = tuple(
+                np.fromiter((li[n] for n in p), dtype=np.intp, count=len(p))
+                for p in self.paths(src, dst, kk)
+            )
+            self._path_ids[key] = hit
+        return hit
+
+    def dead_vector(self, dead_links: Iterable[str]) -> np.ndarray:
+        """Boolean liveness vector over the engine's link index."""
+        vec = np.zeros(len(self._link_idx), dtype=bool)
+        li = self._link_idx
+        for n in dead_links:
+            i = li.get(n)
+            if i is not None:
+                vec[i] = True
+        return vec
 
     def paths(self, src: str, dst: str, k: Optional[int] = None) -> Tuple[Path, ...]:
         """The cached candidate set (all links assumed alive)."""
@@ -189,16 +230,102 @@ class PathEngine:
         cands = self.paths(src, dst, k)
         if not dead:
             return cands
-        alive = tuple(p for p in cands if not (dead & frozenset(p)))
+        kk = self.k if k is None else int(k)
+        hit = self._alive(src, dst, kk, dead, None)
+        if not hit:
+            raise UnroutableError(f"no surviving path {src!r} -> {dst!r}")
+        return hit
+
+    def _alive(
+        self,
+        src: str,
+        dst: str,
+        kk: int,
+        dead: FrozenSet[str],
+        dead_vec: Optional[np.ndarray],
+    ) -> Tuple[Path, ...]:
+        """Cached surviving-candidate lookup shared by :meth:`route` and
+        :meth:`route_batch` (one eviction bound, one key shape — the two
+        entry points can never drift apart)."""
+        key = (src, dst, kk, dead)
+        hit = self._alive_cache.get(key)
+        if hit is None:
+            if dead_vec is None:
+                dead_vec = self.dead_vector(dead)
+            hit = self._survivors(src, dst, kk, dead, dead_vec)
+            if len(self._alive_cache) > (1 << 18):
+                self._alive_cache.clear()
+            self._alive_cache[key] = hit
+        return hit
+
+    def _survivors(
+        self,
+        src: str,
+        dst: str,
+        kk: int,
+        dead: FrozenSet[str],
+        dead_vec: np.ndarray,
+    ) -> Tuple[Path, ...]:
+        """Incidence-filtered surviving candidates; Yen detour fallback.
+
+        Returns ``()`` when *nothing* survives — cached too, so a pair
+        proven unroutable under this dead set costs one dict hit on every
+        later ask (the failure-storm candidate enumeration re-asks)."""
+        cands = self.paths(src, dst, kk)
+        ids = self._ids(src, dst, kk)
+        alive = tuple(
+            p for p, pid in zip(cands, ids)
+            if not pid.size or not dead_vec[pid].any()
+        )
         if alive:
             return alive
-        kk = self.k if k is None else int(k)
         key = (src, dst, kk, dead)
         hit = self._fail_cache.get(key)
         if hit is None:
-            hit = k_shortest_paths(self.fabric, src, dst, kk, banned_links=dead)
+            try:
+                hit = k_shortest_paths(
+                    self.fabric, src, dst, kk, banned_links=dead
+                )
+            except UnroutableError:
+                hit = ()
+            if len(self._fail_cache) > (1 << 18):
+                self._fail_cache.clear()  # bound flap-accumulated detours
             self._fail_cache[key] = hit
         return hit
+
+    def route_batch(
+        self,
+        pairs: Sequence[Tuple[str, str]],
+        dead_links: Iterable[str] = (),
+        k: Optional[int] = None,
+    ) -> Dict[Tuple[str, str], Tuple[Path, ...]]:
+        """Surviving candidates for many endpoint pairs under one dead set.
+
+        One liveness vector prices every pair's cached incidence rows; the
+        per-(pair, dead-set) results land in the same cache :meth:`route`
+        consults, so a failure storm's repeated pairs are one dict hit
+        each.  Unroutable pairs map to ``()`` instead of raising — batch
+        callers decide per pair (the reroute engine drops dead replicas
+        from a candidate set and raises only when *every* replica died).
+        """
+        self._fresh()
+        dead = frozenset(dead_links)
+        kk = self.k if k is None else int(k)
+        out: Dict[Tuple[str, str], Tuple[Path, ...]] = {}
+        dead_vec: Optional[np.ndarray] = None
+        if dead:
+            dead_vec = self.dead_vector(dead)
+        for src, dst in pairs:
+            if (src, dst) in out:
+                continue
+            if not dead:
+                try:
+                    out[(src, dst)] = self.paths(src, dst, kk)
+                except UnroutableError:
+                    out[(src, dst)] = ()
+                continue
+            out[(src, dst)] = self._alive(src, dst, kk, dead, dead_vec)
+        return out
 
     # -- vectorized scoring -------------------------------------------------
     def incidence(

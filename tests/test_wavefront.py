@@ -4,8 +4,10 @@ The engine's whole contract is: whatever ``BassPolicy.place_batch``
 produces through the wavefront must be *bit-identical* (every float, every
 slot fraction) to the sequential ``place`` loop — across contended
 ledgers, bandwidth caps, multipath fat-trees, and controller runs with
-mid-stream link failures (which drop the engine back to the sequential
-path without changing a byte).
+mid-stream link failures (the engine plans through live failure-aware
+routing — dead links priced out of candidate enumeration — and the
+batched reroute engine replans the victims; see also
+``tests/test_reroute_props.py``).
 """
 import numpy as np
 import pytest
@@ -110,9 +112,9 @@ def _controller_run(policy):
 
 def test_wavefront_controller_with_midstream_failures_identical():
     """Jobs placed before/during/after a link failure: the wavefront
-    controller (which must fall back to the sequential path while
-    failures are live) stays bit-identical to the sequential policy,
-    reroutes included."""
+    controller (planning through live failure-aware routing, batched
+    reroute engine included) stays bit-identical to the sequential
+    policy, reroutes included."""
     c_wf = _controller_run("bass")
     c_seq = _controller_run(_SequentialBass())
     assert canon(c_wf.schedule().assignments) == canon(
@@ -264,6 +266,32 @@ def test_ts_plan_backends_agree_bitwise(seed, bandwidth_cap):
     ref = ts_plan.plan_scan_numpy(booked, caps, secs, sizes, bandwidth_cap)
     got = ts_plan.plan_scan_pallas(booked, caps, secs, sizes, bandwidth_cap)
     for r, g, name in zip(ref, got, ("resid", "bw", "cum", "hit")):
+        assert np.array_equal(
+            np.asarray(r, np.float64), np.asarray(g, np.float64)
+        ), name
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_ts_plan_overlay_masks_cells(seed):
+    """The overlay layer (the reroute engine's phantom-full view) is an
+    exact elementwise max: a 0/1 overlay reproduces the overlaid ledger
+    bit-for-bit, on both backends."""
+    booked, caps, secs, sizes = _safe_inputs(seed)
+    rng = np.random.default_rng(seed + 99)
+    overlay = (rng.random(booked.shape) < 0.2).astype(np.float64)
+    ref = ts_plan.plan_scan_numpy(
+        np.maximum(booked, overlay), caps, secs, sizes
+    )
+    got = ts_plan.plan_scan(booked, caps, secs, sizes, overlay=overlay)
+    for r, g, name in zip(ref, got, ("resid", "bw", "cum", "hit")):
+        assert np.array_equal(r, g), name
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return
+    pal = ts_plan.plan_scan_pallas(booked, caps, secs, sizes,
+                                   overlay=overlay)
+    for r, g, name in zip(ref, pal, ("resid", "bw", "cum", "hit")):
         assert np.array_equal(
             np.asarray(r, np.float64), np.asarray(g, np.float64)
         ), name
