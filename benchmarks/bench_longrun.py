@@ -1,0 +1,287 @@
+"""Benchmark: long-running controller steady state (rolling-horizon TS
+ledger, DESIGN.md §7).
+
+The ROADMAP north star is a controller that serves continuous traffic
+forever.  Before origin-shift compaction the dense ledger was anchored at
+slot 0 and only ever doubled, so memory — and the wavefront engine's
+per-batch full-slot mask — grew with *elapsed simulated time* instead of
+with load: per-submit latency crept up without bound and a week of
+simulated traffic was an OOM.  This benchmark drives the three live
+surfaces over **≥100 000 simulated slots** each and asserts the two
+steady-state properties the compaction exists to provide:
+
+* **bounded memory** — the ledger's live window (``reserved.shape[1]``)
+  stays O(booked horizon), orders of magnitude below the elapsed-slot
+  count, and ``base_slot`` advances with the clock;
+* **flat per-submit latency** — the last-decile median submit cost of the
+  scheduling leg stays within a small factor of the first decile (the
+  uncompacted ledger shows a monotone climb).
+
+Legs:
+
+* ``longrun_sched``  — an online BASS controller placing a steady stream
+  of remote-shard jobs through the wavefront engine (the leg whose
+  latency used to climb: its full-slot mask rebuild is O(live window)).
+* ``longrun_router`` — the serving :class:`~repro.serving.router.BassRouter`
+  routing requests with an advancing clock (50 ms slots).
+* ``longrun_dcn``    — :class:`~repro.distributed.dcn.CrossPodSync` grad
+  syncs registered as recurring controller events.
+* ``longrun_equiv``  — a compacted vs never-compacted controller pair on
+  the same stream: schedules must be byte-identical (the compaction-
+  equivalence acceptance bar, also property-tested in
+  ``tests/test_compaction.py`` and dumped by
+  ``benchmarks/tools/dump_schedules.py``).
+
+CSV: ``name,us_per_call,derived``.  ``--smoke`` shrinks request counts
+(the simulated-slot spans stay ≥100k — slots are cheap, submits are not);
+``--json PATH`` appends machine-readable rows to an existing file (CI
+shares one artifact with ``bench_sched_scale``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.controller import ClusterController
+from repro.core.tasks import Task
+from repro.core.topology import tpu_dcn_fabric
+
+#: Ceiling on the live ledger window (slots) for every leg.  Each leg
+#: simulates ≥100k slots, so an elapsed-time-anchored ledger would sit at
+#: ≥100k columns (it ends >131k after doubling); the live window is the
+#: booked horizon only — typically a few hundred columns here.
+MEM_SLOTS_CEIL = 16_384
+
+#: Last-decile median per-submit latency must stay within this factor of
+#: the first decile (plus an absolute floor so micro-jitter on a loaded
+#: runner cannot trip it).  The uncompacted ledger's ratio grows with the
+#: span — ~10× and climbing at 100k slots on a dev box.
+FLAT_RATIO = 4.0
+FLAT_FLOOR_S = 2e-3
+
+TOTAL_SLOTS = 100_000
+
+
+def _stream(n_hosts_per_pod: int, n_jobs: int, tasks_per_job: int):
+    """Sources in pod0, workers in pod1: every placement is a remote
+    cross-trunk shard fetch (the wavefront's fused path)."""
+    fab = tpu_dcn_fabric(n_pods=2, hosts_per_pod=n_hosts_per_pod)
+    sources = [f"pod0/host{h}" for h in range(n_hosts_per_pod)]
+    workers = [f"pod1/host{h}" for h in range(n_hosts_per_pod)]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(sources), size=(n_jobs * tasks_per_job, 3))
+    jobs = []
+    tid = 0
+    for _ in range(n_jobs):
+        tasks = []
+        for _ in range(tasks_per_job):
+            tasks.append(Task(
+                tid=tid,
+                size=float(25e9 * (1.0 + (tid % 5) * 0.5)),  # 1–3 s at NIC rate
+                compute=0.5,
+                replicas=tuple(sources[j] for j in idx[tid]),
+            ))
+            tid += 1
+        jobs.append(tasks)
+    return fab, workers, jobs
+
+
+def run_sched_leg(n_jobs: int, total_slots: int = TOTAL_SLOTS,
+                  retire: bool = True):
+    """Steady job stream over ``total_slots`` 1-second slots; returns
+    (controller, per-submit latencies, gap between jobs)."""
+    fab, workers, jobs = _stream(16, n_jobs, 8)
+    ctrl = ClusterController(fab, workers, "bass", slot_duration=1.0)
+    if not retire:
+        ctrl.state.ledger.retire_stride = None
+    gap = total_slots / n_jobs
+    lats = []
+    for j, tasks in enumerate(jobs):
+        at = j * gap
+        t0 = time.perf_counter()
+        ctrl.submit(tasks, at=at)
+        ctrl.run_until(at)
+        lats.append(time.perf_counter() - t0)
+    ctrl.run_until(total_slots * 1.0)
+    return ctrl, lats, gap
+
+
+def _canon(ctrl) -> list:
+    out = []
+    for a in sorted(ctrl.schedule().assignments, key=lambda a: a.tid):
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    return out
+
+
+def run_router_leg(n_req: int, total_slots: int = TOTAL_SLOTS):
+    from repro.serving.engine import Request
+    from repro.serving.router import BassRouter
+
+    router = BassRouter([f"rep{i}" for i in range(8)])
+    dur = router.ledger.slot_duration           # 0.05 s → 100k slots = 5000 s
+    span = total_slots * dur
+    rng = np.random.default_rng(1)
+    lats = []
+    for i in range(n_req):
+        now = span * i / n_req
+        req = Request(
+            rid=i,
+            prompt=np.zeros(int(rng.integers(64, 512)), dtype=np.int32),
+            max_new=32,
+            prefix_hash=int(rng.integers(0, 16)),
+        )
+        t0 = time.perf_counter()
+        router.route(req, now=now)
+        lats.append(time.perf_counter() - t0)
+        # Engines drain their backlog between requests (this benchmark has
+        # no real engines; without the decay every replica's queue grows
+        # to the full span and the minnow choice degenerates).
+        router.update_backlog(
+            {r: max(0.0, b - span / n_req)
+             for r, b in router.backlog.items()}
+        )
+    router.controller.run_until(span)
+    return router, lats
+
+
+def run_dcn_leg(n_steps: int, total_slots: int = TOTAL_SLOTS):
+    from repro.distributed.dcn import CrossPodSync
+
+    sync = CrossPodSync(n_pods=2, hosts_per_pod=4, grad_bytes=100e9)
+    dur = sync.ledger.slot_duration             # 0.05 s → 100k slots = 5000 s
+    span = total_slots * dur
+    cadence = span / n_steps
+    sync.register_steps(0, n_steps, cadence_s=cadence)
+    lats = []
+    for k in range(n_steps):
+        t0 = time.perf_counter()
+        sync.advance_to((k + 1) * cadence)
+        lats.append(time.perf_counter() - t0)
+    assert len(sync.flows) == n_steps, "every registered sync materialized"
+    return sync, lats
+
+
+def _decile_medians(lats):
+    n = max(len(lats) // 10, 1)
+    first = float(np.median(lats[:n]))
+    last = float(np.median(lats[-n:]))
+    return first, last
+
+
+def _check_bounded(name: str, ledger, total_slots: int) -> None:
+    width = ledger.reserved.shape[1]
+    assert ledger.base_slot > 0, f"{name}: compaction never engaged"
+    assert width <= MEM_SLOTS_CEIL, (
+        f"{name}: live window {width} slots exceeds ceiling "
+        f"{MEM_SLOTS_CEIL} over {total_slots} simulated slots"
+    )
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    n_jobs, n_req, n_steps = (300, 400, 250) if smoke else (1000, 2000, 1000)
+
+    ctrl, lats, gap = run_sched_leg(n_jobs)
+    led = ctrl.state.ledger
+    _check_bounded("longrun_sched", led, TOTAL_SLOTS)
+    first, last = _decile_medians(lats)
+    assert last <= max(FLAT_RATIO * first, FLAT_FLOOR_S), (
+        f"longrun_sched: per-submit latency climbed {first*1e6:.0f}us -> "
+        f"{last*1e6:.0f}us over {TOTAL_SLOTS} slots (not flat)"
+    )
+    placed = sum(len(rec.assignments) for rec in ctrl.jobs.values())
+    assert placed == n_jobs * 8
+    rows.append((
+        "longrun_sched",
+        float(np.mean(lats)) / 8 * 1e6,
+        f"lat_ratio={last / max(first, 1e-9):.2f}",
+    ))
+    rows.append((
+        "longrun_sched_mem",
+        0.0,
+        f"live_slots={led.reserved.shape[1]};base={led.base_slot};"
+        f"retired={led.retired_slots}",
+    ))
+
+    router, rlats = run_router_leg(n_req)
+    _check_bounded("longrun_router", router.ledger, TOTAL_SLOTS)
+    rows.append((
+        "longrun_router",
+        float(np.mean(rlats)) * 1e6,
+        f"live_slots={router.ledger.reserved.shape[1]};"
+        f"base={router.ledger.base_slot}",
+    ))
+
+    sync, dlats = run_dcn_leg(n_steps)
+    _check_bounded("longrun_dcn", sync.ledger, TOTAL_SLOTS)
+    rows.append((
+        "longrun_dcn",
+        float(np.mean(dlats)) * 1e6,
+        f"live_slots={sync.ledger.reserved.shape[1]};"
+        f"base={sync.ledger.base_slot}",
+    ))
+
+    # Compacted vs never-compacted on one stream: byte-identical output.
+    span = 20_000
+    ca, _, _ = run_sched_leg(60, total_slots=span, retire=True)
+    cb, _, _ = run_sched_leg(60, total_slots=span, retire=False)
+    assert ca.state.ledger.base_slot > 0
+    assert cb.state.ledger.base_slot == 0
+    assert _canon(ca) == _canon(cb), (
+        "compacted and never-compacted controllers diverged"
+    )
+    rows.append((
+        "longrun_equiv", 0.0,
+        f"byte-identical over {span} slots "
+        f"(compacted {ca.state.ledger.reserved.shape[1]} vs "
+        f"uncompacted {cb.state.ledger.reserved.shape[1]} live slots)",
+    ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (same ≥100k-slot spans, fewer submits)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="append machine-readable rows (merges with an "
+                         "existing file, e.g. bench_sched_scale's)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        import json
+        import os
+
+        try:  # as a module (benchmarks.run) vs standalone script (CI)
+            from benchmarks.bench_sched_scale import git_sha
+        except ImportError:
+            from bench_sched_scale import git_sha
+
+        sha = git_sha()
+        out = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                out = json.load(f)
+        out.extend(
+            {"name": r[0], "us_per_call": float(r[1]),
+             "derived": r[2] if isinstance(r[2], str) else float(r[2]),
+             "git_sha": sha}
+            for r in rows
+        )
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

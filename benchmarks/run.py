@@ -14,6 +14,9 @@
 * bench_failover_scale — beyond-paper: spine-kill storm over ≥10k in-flight
                       transfers (batched vs sequential reroute engine) +
                       wavefront placement throughput on a degraded fabric
+* bench_longrun     — beyond-paper: ≥100k-slot steady state (router, grad
+                      sync, job stream) — bounded ledger memory and flat
+                      per-submit latency under rolling-horizon compaction
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -24,6 +27,7 @@ import sys
 from . import (
     bench_discussion1,
     bench_failover_scale,
+    bench_longrun,
     bench_multipath,
     bench_online,
     bench_prebass,
@@ -43,6 +47,7 @@ MODULES = [
     bench_online,
     bench_multipath,
     bench_failover_scale,
+    bench_longrun,
     bench_roofline,
 ]
 

@@ -9,6 +9,13 @@ workload (schedules **and** reroute log; the storm section is emitted
 per reroute engine, so the two blocks must be byte-identical to each
 other within one dump as well as across code changes).
 
+The ``compaction_*`` / ``failstorm_compacted`` sections run the same
+arrival stream through an aggressively-compacting controller
+(``retire_stride = 4``) and a never-compacted twin
+(``retire_stride = None``): the paired blocks must be byte-identical
+within one dump — the rolling-horizon origin shift (DESIGN.md §7) is
+invisible in every emitted coordinate.
+
     PYTHONPATH=src python benchmarks/tools/dump_schedules.py OUTFILE
 """
 from __future__ import annotations
@@ -67,9 +74,44 @@ def main() -> None:
                           SCHEDULERS["bass"](inst))
         for engine in ("batched", "sequential"):
             dump_failure_storm(out, engine)
+        dump_compaction(out)
+        # Same storm under aggressive vs no compaction: the two blocks
+        # (and the default-stride ``failstorm_batched`` one above) must
+        # be byte-identical to each other.
+        dump_failure_storm(out, "batched", stride=4,
+                           label="failstorm_compacted")
+        dump_failure_storm(out, "batched", stride=None,
+                           label="failstorm_uncompacted")
 
 
-def dump_failure_storm(out, engine):
+def dump_compaction(out):
+    """Fig-2 and Table-I streams through a live controller, compacted
+    (retire_stride=4) vs never-compacted: paired blocks byte-identical."""
+    from dataclasses import replace  # noqa: E402
+
+    from repro.core.controller import ClusterController  # noqa: E402
+
+    cases = [("fig2", example1_instance())]
+    inst, _, _ = make_instance(SORT, 150, seed=0)
+    cases.append(("table1_sort_150_0", inst))
+    for label, inst in cases:
+        for mode, stride in (("compacted", 4), ("uncompacted", None)):
+            ctrl = ClusterController.from_instance(inst)
+            ctrl.state.ledger.retire_stride = stride
+            half = len(inst.tasks) // 2
+            ctrl.submit(inst.tasks[:half], at=0.0)
+            # The second half arrives a compaction-stride later, so the
+            # compacting controller has already shifted its origin.
+            ctrl.submit(
+                [replace(t, tid=t.tid + 10_000) for t in inst.tasks[half:]],
+                at=40.0,
+            )
+            ctrl.run()
+            dump_schedule(out, f"compaction_{label}_{mode}",
+                          ctrl.schedule())
+
+
+def dump_failure_storm(out, engine, stride=256, label=None):
     """Spine-kill fleet storm: schedule + reroute log under one engine."""
     from benchmarks.bench_failover_scale import (  # noqa: E402
         DEAD_CORE, T_KILL, _controller, storm_setup,
@@ -77,12 +119,14 @@ def dump_failure_storm(out, engine):
 
     fab, workers, tasks, idle = storm_setup(4, 600)
     ctrl = _controller(fab, workers, idle, engine)
+    ctrl.state.ledger.retire_stride = stride
     ctrl.submit(tasks, at=0.0)
     ctrl.fail_switch(DEAD_CORE, at=T_KILL)
     ctrl.fail_link("ea/p3e0a0", at=1.0)
     ctrl.run_until(2.0)
-    dump_schedule(out, f"failstorm_{engine}", ctrl.schedule())
-    out.write(f"== failstorm_{engine}_reroute_log\n")
+    label = label or f"failstorm_{engine}"
+    dump_schedule(out, label, ctrl.schedule())
+    out.write(f"== {label}_reroute_log\n")
     for r in ctrl.reroute_log:
         out.write(
             f"{r.flow} at={fx(r.at)} dead={','.join(r.dead_links)} "

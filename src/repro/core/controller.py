@@ -354,12 +354,27 @@ class ClusterState:
             )
         return best[1], best[2]
 
-    def scratch_ledger(self, horizon_slots: int = 256) -> TimeSlotLedger:
+    def scratch_ledger(
+        self, horizon_slots: Optional[int] = None
+    ) -> TimeSlotLedger:
         """A fresh ledger seeded with every background flow seen so far —
-        what BAR uses for its static-belief phase-1/adjustment reasoning."""
+        what BAR uses for its static-belief phase-1/adjustment reasoning.
+
+        Inherits the live ledger's horizon and rolling origin by default:
+        a hardcoded 256-slot horizon under-provisioned workloads the real
+        ledger handles, and an origin-0 scratch in a long-running
+        controller would re-allocate the whole elapsed history just to
+        plan at ``now`` (``occupy`` clamps background flows that started
+        before the live window)."""
         ledger = TimeSlotLedger(
-            self.fabric, self.ledger.slot_duration, horizon_slots
+            self.fabric,
+            self.ledger.slot_duration,
+            self.ledger.reserved.shape[1]
+            if horizon_slots is None
+            else horizon_slots,
         )
+        ledger.base_slot = self.ledger.base_slot
+        ledger.retire_stride = self.ledger.retire_stride
         for bg in self.background:
             ledger.occupy(
                 ledger.rows(self.fabric.path(bg.src, bg.dst)),
@@ -375,7 +390,12 @@ class ClusterState:
 
         Rebuilds the minnow heap once instead of pushing per-worker
         entries — an event stream on a big fleet would otherwise grow the
-        heap by O(workers) per event without ever popping them."""
+        heap by O(workers) per event without ever popping them.
+
+        Also the rolling-horizon hook: once the clock has moved a stride
+        past the ledger origin, fully-past slots are retired so the live
+        matrix stays O(horizon) regardless of elapsed simulated time
+        (DESIGN.md §7)."""
         if t < self.now:
             raise ValueError(f"time moves backwards: {t} < {self.now}")
         self.now = t
@@ -386,6 +406,7 @@ class ClusterState:
                 dirty = True
         if dirty:
             self.reheap()
+        self.ledger.maybe_retire(t)
 
     def set_idle(self, idle: Dict[str, float]) -> None:
         """Replace idle estimates wholesale (ProgressRate refresh, §V.A)."""
@@ -438,13 +459,14 @@ class ClusterState:
 
     # -- snapshots (Pre-BASS guard, what-if planning) -----------------------
     def snapshot(self) -> Tuple:
-        return (dict(self.idle), self.ledger.reserved.copy(), self.now,
-                len(self.background))
+        return (dict(self.idle), self.ledger.reserved.copy(),
+                self.ledger.base_slot, self.now, len(self.background))
 
     def restore(self, snap: Tuple) -> None:
-        idle, reserved, now, n_bg = snap
+        idle, reserved, base_slot, now, n_bg = snap
         self.idle = dict(idle)
         self.ledger.reserved = reserved.copy()
+        self.ledger.base_slot = base_slot
         self.now = now
         del self.background[n_bg:]
         self.reheap()
@@ -462,6 +484,9 @@ class ClusterState:
         dup.ledger._names = self.ledger._names
         dup.ledger.capacity = self.ledger.capacity
         dup.ledger.reserved = self.ledger.reserved.copy()
+        dup.ledger.base_slot = self.ledger.base_slot
+        dup.ledger.retired_slots = self.ledger.retired_slots
+        dup.ledger.retire_stride = self.ledger.retire_stride
         dup.ledger.batch_scan_cells = 0
         dup.ledger._path_rows = self.ledger._path_rows  # shared read cache
         dup.ledger._path_rows_version = self.ledger._path_rows_version
@@ -1070,6 +1095,11 @@ class ClusterController:
                 self._resume_flows(at)
         self.now = max(self.now, t)
         self._gc_tables(self.now)
+        # Rolling horizon: a quiet controller (no events near ``t``) still
+        # retires up to its target time — any later event may fire no
+        # earlier than ``now - _EPS``, which maybe_retire's guard slot
+        # covers (DESIGN.md §7).
+        self.state.ledger.maybe_retire(self.now)
 
     def run(self) -> None:
         """Drain the event queue completely."""

@@ -165,6 +165,11 @@ class RerouteEngine:
         when the exactly-full invariant does not hold."""
         ledger = self.ledger
         res = ledger.reserved
+        # Absolute→physical offset for every matrix access this event;
+        # retire() only runs on the controller clock, never mid-event, so
+        # the origin is frozen here.  Tail slots sit at/after the failure
+        # instant's slot, which the retire guard keeps live.
+        base = self._base = ledger.base_slot
         tails: List[Tuple[np.ndarray, np.ndarray]] = []
         for v in victims:
             plan = v.old_plan
@@ -181,7 +186,7 @@ class RerouteEngine:
         # abort cleanly to the sequential oracle.
         for rows, slots in tails:
             if slots.size and not (
-                res[rows[:, None], slots[None, :]] == 1.0
+                res[rows[:, None], (slots - base)[None, :]] == 1.0
             ).all():
                 return False
         self._owner = np.full(res.shape, -1, dtype=np.int32)
@@ -197,16 +202,18 @@ class RerouteEngine:
             v.old_names = ledger.link_names(plan.links)
             rows, slots = tails[i]
             if slots.size:
-                cells = owner[rows[:, None], slots[None, :]]
+                cells = owner[rows[:, None], (slots - base)[None, :]]
                 if (cells != -1).any():
                     # Tails collided — restore every tail released so far
                     # to its exact pre-release value (1.0, verified above)
                     # and let the sequential oracle run the event.
                     for rr, ss in tails[: i + 1]:
                         if ss.size:
-                            ledger.reserved[rr[:, None], ss[None, :]] = 1.0
+                            ledger.reserved[
+                                rr[:, None], (ss - base)[None, :]
+                            ] = 1.0
                     return False
-                owner[rows[:, None], slots[None, :]] = i
+                owner[rows[:, None], (slots - base)[None, :]] = i
         self._tails = tails
         # Frontier evidence: one dense availability mask over the stamped
         # horizon — ``avail[l, s]`` ⟺ cell (l, s) is not exactly full in
@@ -227,7 +234,9 @@ class RerouteEngine:
         for j in range(after + 1, len(victims)):
             rows, slots = self._tails[j]
             if slots.size:
-                self.ledger.reserved[rows[:, None], slots[None, :]] = 1.0
+                self.ledger.reserved[
+                    rows[:, None], (slots - self._base)[None, :]
+                ] = 1.0
 
     # -- pass 3: candidate grid ----------------------------------------------
     def _candidate_grid(self, victims: List[_Victim]) -> None:
@@ -287,18 +296,19 @@ class RerouteEngine:
         cols, pos, rows_arr, thresh, budget = st
         avail = self._avail
         owner = self._owner
-        W = avail.shape[1]
+        base = self._base          # cols/pos are absolute; masks physical
+        w_abs = base + avail.shape[1]
         parts = [cols]
         total = cols.size
         while total < need and pos < budget:
             hi = min(pos + 4096, budget)
-            if pos < W:
-                hi = min(hi, W)
+            if pos < w_abs:
+                hi = min(hi, w_abs)
                 joint = np.flatnonzero(
-                    avail[rows_arr, pos:hi].all(axis=0)
+                    avail[rows_arr, pos - base : hi - base].all(axis=0)
                 ) + pos
                 if joint.size:
-                    ow = owner[rows_arr[:, None], joint[None, :]]
+                    ow = owner[rows_arr[:, None], (joint - base)[None, :]]
                     joint = joint[(ow <= thresh).all(axis=0)]
             else:
                 joint = np.arange(pos, hi, dtype=np.int64)
@@ -386,7 +396,9 @@ class RerouteEngine:
                     ])
                 cols[j] = row
             ledger._ensure(int(cols.max()))
-            booked = ledger.reserved[pad[sub][:, :, None], cols[:, None, :]]
+            booked = ledger.reserved[
+                pad[sub][:, :, None], (cols - self._base)[:, None, :]
+            ]
             # first-slot partiality is a property of slot s0 itself
             first_part = cols[:, 0] == s0c[sub]
             secs[first_part, 0] = (s0c[sub][first_part] + 1) * dur - \
@@ -507,9 +519,12 @@ class RerouteEngine:
                 # loop would later book, and must stay enumerable.  (Cells
                 # past the stamped width stay implicitly free — harmless,
                 # they read their true residue at gather time.)
+                base = self._base
                 w = avail.shape[1]
                 for plan in pending:
-                    slots = [s for s, _ in plan.slot_fracs if s < w]
+                    slots = [
+                        s - base for s, _ in plan.slot_fracs if s - base < w
+                    ]
                     if slots:
                         rr = np.asarray(plan.links)[:, None]
                         cc = np.asarray(slots)[None, :]

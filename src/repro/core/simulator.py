@@ -101,7 +101,13 @@ def _replay_nodes(
 
 
 def _check_ledger(schedule: Schedule, violations: List[str]) -> None:
-    """Link over-booking (the ledger matrix is the committed state)."""
+    """Link over-booking (the ledger matrix is the committed state).
+
+    Under the rolling horizon (DESIGN.md §7) the matrix covers only the
+    live window — retired columns held delivered history that was subject
+    to this same check while it was live, and every replayed plan's
+    ``slot_fracs``/times are absolute, so the oracle's causality checks
+    below are origin-invariant by construction."""
     res = schedule.ledger.reserved
     if (res > 1.0 + 1e-6).any():
         worst = float(res.max())

@@ -13,6 +13,18 @@ The ledger is a dense ``[n_links, n_slots]`` float matrix of *reserved
 fractions* (0 = free, 1 = fully booked), vectorized with numpy so the same
 code schedules a 4-node Hadoop testbed and a 4 000-host TPU-fleet DCN (see
 ``benchmarks/bench_sched_scale.py``).
+
+**Rolling horizon (DESIGN.md §7).**  A long-lived controller advances
+simulated time forever, but only the slots at/after "now" can still be
+planned, committed or released — fully-past slots hold delivered history
+nobody re-reads through the matrix.  The ledger therefore carries a
+``base_slot`` origin: physical column ``j`` stores absolute slot
+``base_slot + j``, and :meth:`retire` drops fully-past columns so the
+live matrix stays O(live window) instead of O(elapsed time).  Every
+public API (and ``TransferPlan.slot_fracs``) speaks *absolute* slots
+throughout — compaction is invisible to callers, and a compacted ledger
+answers every query/plan/commit identically to a never-compacted twin
+(property-tested in ``tests/test_compaction.py``).
 """
 from __future__ import annotations
 
@@ -66,6 +78,16 @@ class TimeSlotLedger:
             [fabric.link(n).capacity for n in names], dtype=np.float64
         )
         self.reserved = np.zeros((len(names), horizon_slots), dtype=np.float64)
+        #: Rolling-horizon origin: ``reserved[:, 0]`` holds absolute slot
+        #: ``base_slot``.  Public APIs are absolute; only physical column
+        #: indices shift (DESIGN.md §7).
+        self.base_slot = 0
+        #: Telemetry: columns dropped by :meth:`retire` so far.
+        self.retired_slots = 0
+        #: :meth:`maybe_retire` compacts once this many fully-past slots
+        #: have accumulated; ``None`` disables auto-compaction (the
+        #: never-compacted twin the equivalence tests compare against).
+        self.retire_stride: Optional[int] = max(64, horizon_slots)
         #: Instrumentation: candidate·slot cells scanned by
         #: :meth:`plan_transfer_batch` (the escalation-freeze regression
         #: test pins that one oversized outlier no longer re-scans the
@@ -102,9 +124,11 @@ class TimeSlotLedger:
         return hit
 
     def _ensure(self, slot: int) -> None:
+        """Grow the matrix so absolute ``slot`` has a live column."""
         n = self.reserved.shape[1]
-        if slot >= n:
-            grow = max(slot + 1 - n, n)  # at least double
+        need = slot - self.base_slot
+        if need >= n:
+            grow = max(need + 1 - n, n)  # at least double
             wider = np.zeros((self.reserved.shape[0], n + grow))
             wider[:, :n] = self.reserved
             self.reserved = wider
@@ -112,22 +136,79 @@ class TimeSlotLedger:
     def slot_of(self, t: float) -> int:
         return int(math.floor(t / self.slot_duration + _EPS))
 
+    # -- rolling-horizon compaction -----------------------------------------
+    def retire(self, t: float) -> int:
+        """Drop every fully-past slot — absolute slots ``< slot_of(t)`` —
+        and shift the origin there.  Returns the number of columns dropped.
+
+        Retire-safety (DESIGN.md §7): no code path *writes* a slot before
+        ``slot_of(now)`` (plans start at ``not_before >= now``, tail
+        releases cut at ``slot_of(at >= now)``, ``occupy`` clamps), and
+        the only reads of delivered history go through the plan objects
+        themselves (``plan_bytes``/``release_after`` keep-arithmetic),
+        never the matrix — so in-flight plans' tails survive intact and
+        dropped columns are unreachable.  Read-only queries aimed at the
+        retired past answer "free" (see :meth:`residual_fraction`).
+        """
+        return self.retire_to(self.slot_of(t))
+
+    def retire_to(self, cut: int) -> int:
+        """Make ``cut`` the new origin (no-op when it is not ahead)."""
+        drop = cut - self.base_slot
+        if drop <= 0:
+            return 0
+        width = self.reserved.shape[1]
+        if drop >= width:
+            # Everything booked is in the past: restart with a minimal
+            # window (columns beyond the old width were never allocated
+            # and are zero by definition).
+            self.reserved = np.zeros((self.reserved.shape[0], 64))
+        else:
+            self.reserved = np.ascontiguousarray(self.reserved[:, drop:])
+        self.base_slot = cut
+        self.retired_slots += drop
+        return drop
+
+    def maybe_retire(self, t: float) -> int:
+        """Hysteresis wrapper the controller calls per clock advance:
+        compact only once ``retire_stride`` fully-past slots accumulated
+        (so the slice-copy amortizes), and keep one *guard slot* behind
+        ``slot_of(t)`` — queued events may legally fire up to ``_EPS``
+        before ``t``, which can land one slot earlier after flooring."""
+        stride = self.retire_stride
+        if stride is None:
+            return 0
+        cut = self.slot_of(t) - 1
+        if cut - self.base_slot < stride:
+            return 0
+        return self.retire_to(cut)
+
     # -- queries ------------------------------------------------------------
+    #
+    # Read-only queries never allocate: a slot past the live horizon holds
+    # no reservation by definition, and a retired slot is delivered history
+    # the forward-looking ledger has dropped — both answer "free" (full
+    # residue) without growing the matrix.  (They historically called
+    # ``_ensure`` and silently doubled the allocation on lookup.)
+
     def residual_fraction(self, rows: Sequence[int], slot: int) -> float:
         """Min residual fraction over ``rows`` in ``slot`` (path residue)."""
-        self._ensure(slot)
         if not rows:
             return 1.0
-        return float(1.0 - self.reserved[list(rows), slot].max())
+        p = slot - self.base_slot
+        if p < 0 or p >= self.reserved.shape[1]:
+            return 1.0
+        return float(1.0 - self.reserved[list(rows), p].max())
 
     def path_bandwidth(self, rows: Sequence[int], t: float) -> float:
         """``BW_rl`` of a path at time ``t`` = min over links of residual bw."""
         if not rows:
             return float("inf")
-        slot = self.slot_of(t)
-        self._ensure(slot)
         idx = list(rows)
-        resid = (1.0 - self.reserved[idx, slot]) * self.capacity[idx]
+        p = self.slot_of(t) - self.base_slot
+        if p < 0 or p >= self.reserved.shape[1]:
+            return float(self.capacity[idx].min())
+        resid = (1.0 - self.reserved[idx, p]) * self.capacity[idx]
         return float(resid.min())
 
     def path_bandwidth_batch(
@@ -145,10 +226,12 @@ class TimeSlotLedger:
         live = [i for i in range(n) if rows_list[i]]
         if not live:
             return out
-        slot = self.slot_of(t)
-        self._ensure(slot)
         pad = self._padded_rows([rows_list[i] for i in live])
-        resid = (1.0 - self.reserved[:, slot][pad]) * self.capacity[pad]
+        p = self.slot_of(t) - self.base_slot
+        if p < 0 or p >= self.reserved.shape[1]:
+            out[live] = self.capacity[pad].min(axis=1)
+            return out
+        resid = (1.0 - self.reserved[:, p][pad]) * self.capacity[pad]
         out[live] = resid.min(axis=1)
         return out
 
@@ -157,9 +240,18 @@ class TimeSlotLedger:
         if not rows:
             return float("inf")
         s0, s1 = self.slot_of(t0), self.slot_of(max(t0, t1 - _EPS))
-        self._ensure(s1)
         idx = list(rows)
-        resid = (1.0 - self.reserved[idx, s0 : s1 + 1]) * self.capacity[idx, None]
+        capmin = float(self.capacity[idx].min())
+        width = self.reserved.shape[1]
+        lo = max(s0 - self.base_slot, 0)
+        hi = min(s1 - self.base_slot + 1, width)
+        if lo >= hi:
+            return capmin  # window entirely outside the live matrix: free
+        # Slots clamped away (retired past / beyond the horizon) are free
+        # and would contribute exactly capmin — never less than the live
+        # part's minimum (reserved ∈ [0, 1] ⇒ per-slot path min ≤ capmin),
+        # so the live slice alone decides.
+        resid = (1.0 - self.reserved[idx, lo:hi]) * self.capacity[idx, None]
         return float(resid.min(axis=0).min())
 
     # -- planning -----------------------------------------------------------
@@ -188,11 +280,17 @@ class TimeSlotLedger:
         cap = float(self.capacity[idx].min())
         t0 = float(not_before)
         s0 = self.slot_of(t0)
+        p0 = s0 - self.base_slot
+        if p0 < 0:
+            raise ValueError(
+                f"plan_transfer: slot {s0} precedes retired origin "
+                f"{self.base_slot} (not_before={t0})"
+            )
         window = 64
         while window <= max_slots:
             self._ensure(s0 + window - 1)
             # Vectorized residue over [s0, s0+window): path residue per slot.
-            resid_frac = 1.0 - self.reserved[idx, s0 : s0 + window].max(axis=0)
+            resid_frac = 1.0 - self.reserved[idx, p0 : p0 + window].max(axis=0)
             bw = resid_frac * cap
             if bandwidth_cap is not None:
                 bw = np.minimum(bw, bandwidth_cap)
@@ -236,10 +334,17 @@ class TimeSlotLedger:
     ) -> np.ndarray:
         """``[n_cand, width, window]`` reserved-fraction gather: candidate
         ``k``'s padded link rows over slots ``[s0[k], s0[k] + window)``.
-        ``s0`` may be a scalar (shared start) or per-candidate array."""
+        ``s0`` may be a scalar (shared start) or per-candidate array.
+        Slots are absolute; the gather shifts to physical columns."""
         s0 = np.asarray(s0)
+        if int(s0.min()) < self.base_slot:
+            raise ValueError(
+                f"booked_window: slot {int(s0.min())} precedes retired "
+                f"origin {self.base_slot}"
+            )
         self._ensure(int(s0.max()) + window - 1)
-        idx = s0.reshape(-1, 1, 1) if s0.ndim else s0
+        off = s0 - self.base_slot
+        idx = off.reshape(-1, 1, 1) if off.ndim else off
         return self.reserved[pad[:, :, None], idx + np.arange(window)[None, None, :]]
 
     def _plan_from_scan(
@@ -341,27 +446,37 @@ class TimeSlotLedger:
         distinct, so the scatter equals the sequential loop exactly)."""
         if not plan.slot_fracs:
             return
+        base = self.base_slot
         if len(plan.slot_fracs) == 1 and len(plan.links) <= 8:
             # Frontier-landing common case: scalar python floats (same
             # doubles as the vector scatter, no ufunc dispatch).
             slot, frac = plan.slot_fracs[0]
-            if slot >= self.reserved.shape[1]:
+            p = slot - base
+            if p < 0:
+                raise ValueError(
+                    f"commit: slot {slot} precedes retired origin {base}"
+                )
+            if p >= self.reserved.shape[1]:
                 self._ensure(slot)
             res = self.reserved
-            vals = [res.item(r, slot) + frac for r in plan.links]
+            vals = [res.item(r, p) + frac for r in plan.links]
             mx = max(vals)
             if mx > 1.0 + 1e-6:
                 raise ValueError(
                     f"over-reservation on slot {slot}: {mx:.6f} > 1"
                 )
             for r, v in zip(plan.links, vals):
-                res[r, slot] = v if v < 1.0 else 1.0
+                res[r, p] = v if v < 1.0 else 1.0
             return
         slots = [s for s, _ in plan.slot_fracs]
         fracs = np.array([f for _, f in plan.slot_fracs])
+        if min(slots) < base:
+            raise ValueError(
+                f"commit: slot {min(slots)} precedes retired origin {base}"
+            )
         self._ensure(max(slots))
         rr = np.asarray(plan.links)[:, None]  # open mesh: (rows × slots)
-        cc = np.asarray(slots)
+        cc = np.asarray(slots) - base
         new = self.reserved[rr, cc] + fracs[None, :]
         over = new > 1.0 + 1e-6
         if over.any():
@@ -404,44 +519,62 @@ class TimeSlotLedger:
             return
         rr = np.concatenate(rr_parts)
         cc = np.concatenate(cc_parts)
+        if int(cc.min()) < self.base_slot:
+            raise ValueError(
+                f"commit_batch: slot {int(cc.min())} precedes retired "
+                f"origin {self.base_slot}"
+            )
         self._ensure(int(cc.max()))
+        ccp = cc - self.base_slot
         # The disjointness contract is load-bearing (fancy-index assignment
         # is last-write-wins): a violation must fail loudly, not silently
         # drop a reservation.
-        cells = rr * self.reserved.shape[1] + cc
+        cells = rr * self.reserved.shape[1] + ccp
         if np.unique(cells).size != cells.size:
             raise ValueError("commit_batch: plans share a (link, slot) cell")
-        new = self.reserved[rr, cc] + np.concatenate(vv_parts)
+        new = self.reserved[rr, ccp] + np.concatenate(vv_parts)
         over = new > 1.0 + 1e-6
         if over.any():
             k = int(over.argmax())
             raise ValueError(
                 f"over-reservation on slot {cc[k]}: {new[k]:.6f} > 1"
             )
-        self.reserved[rr, cc] = np.minimum(new, 1.0)
+        self.reserved[rr, ccp] = np.minimum(new, 1.0)
 
     def occupy(
         self, rows: Sequence[int], start: float, end: float, fraction: float
     ) -> None:
         """Book ``fraction`` of every row over the continuous window
         [start, end) — background cross-traffic the controller observes but
-        did not plan (saturates at 1.0 instead of raising)."""
+        did not plan (saturates at 1.0 instead of raising).  The portion
+        falling before the retired origin is delivered history and is
+        skipped (a scratch ledger replays old background flows whose
+        start predates the live window)."""
         s0 = self.slot_of(start)
         s1 = self.slot_of(max(start, end - _EPS))
+        if s1 < self.base_slot:
+            return
+        s0 = max(s0, self.base_slot)
         self._ensure(s1)
+        p0, p1 = s0 - self.base_slot, s1 - self.base_slot
         idx = list(rows)
-        self.reserved[idx, s0 : s1 + 1] = np.minimum(
-            self.reserved[idx, s0 : s1 + 1] + fraction, 1.0
+        self.reserved[idx, p0 : p1 + 1] = np.minimum(
+            self.reserved[idx, p0 : p1 + 1] + fraction, 1.0
         )
 
     def release(self, plan: TransferPlan) -> None:
-        """Exact inverse of :meth:`commit` — one ``(rows × slots)`` scatter."""
+        """Exact inverse of :meth:`commit` — one ``(rows × slots)`` scatter.
+        Slots already retired hold delivered history with no live column;
+        they are skipped (there is nothing left to free)."""
         if not plan.slot_fracs:
             return
-        slots = [s for s, _ in plan.slot_fracs]
-        fracs = np.array([f for _, f in plan.slot_fracs])
+        base = self.base_slot
+        live = [(s, f) for s, f in plan.slot_fracs if s >= base]
+        if not live:
+            return
+        fracs = np.array([f for _, f in live])
         rr = np.asarray(plan.links)[:, None]
-        cc = np.asarray(slots)
+        cc = np.array([s for s, _ in live]) - base
         self.reserved[rr, cc] = np.maximum(
             self.reserved[rr, cc] - fracs[None, :], 0.0
         )
@@ -478,11 +611,15 @@ class TimeSlotLedger:
             cut = self.slot_of(t)
         keep = tuple((s, f) for s, f in plan.slot_fracs if s < cut)
         idx = list(plan.links)
-        tail_slots = [s for s, _ in plan.slot_fracs if s >= cut]
+        # The physical scatter skips tail slots already retired (possible
+        # only when a caller cuts behind the live origin; the controller
+        # always cuts at the failure instant, ahead of it).
+        wipe = max(cut, self.base_slot)
+        tail_slots = [s for s, _ in plan.slot_fracs if s >= wipe]
         if tail_slots:
-            tail_fracs = np.array([f for s, f in plan.slot_fracs if s >= cut])
+            tail_fracs = np.array([f for s, f in plan.slot_fracs if s >= wipe])
             rr = np.asarray(idx)[:, None]
-            cc = np.asarray(tail_slots)
+            cc = np.asarray(tail_slots) - self.base_slot
             self.reserved[rr, cc] = np.maximum(
                 self.reserved[rr, cc] - tail_fracs[None, :], 0.0
             )
@@ -514,6 +651,18 @@ class TimeSlotLedger:
         return None
 
     def utilization(self) -> float:
-        used = self.reserved.sum()
-        total = self.reserved.size
-        return float(used / total) if total else 0.0
+        """Mean reserved fraction over the *live booked window* — physical
+        columns up to the last slot holding any reservation.
+
+        The historical definition divided by the entire allocated matrix,
+        so every ``_ensure`` doubling (and, for a long-running controller,
+        sheer elapsed time) diluted the value toward 0 regardless of load.
+        Measuring against the booked window makes it allocation-invariant
+        (regression-pinned across a doubling in
+        ``tests/test_compaction.py``)."""
+        res = self.reserved
+        booked = np.flatnonzero(res.any(axis=0))
+        if booked.size == 0:
+            return 0.0
+        n = int(booked[-1]) + 1
+        return float(res[:, :n].sum() / (res.shape[0] * n))

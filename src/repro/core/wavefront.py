@@ -265,7 +265,11 @@ class WavefrontPlanner:
                 d[r] = first
         full = self._full
         if full is not None:
-            last = plan.slot_fracs[-1][0]
+            # The mask is physical (column j ↔ absolute slot base + j);
+            # plan fracs are absolute.  base is frozen for the batch —
+            # retire() only runs between controller events.
+            base = self.ledger.base_slot
+            last = plan.slot_fracs[-1][0] - base
             if last >= full.shape[1]:
                 full = self._fullmask()  # extend to the grown horizon
             if len(plan.slot_fracs) == 1:
@@ -273,7 +277,7 @@ class WavefrontPlanner:
                 for r in plan.links:
                     full[r, last] = res.item(r, last) == 1.0
             else:
-                slots = [s for s, _ in plan.slot_fracs]
+                slots = [s - base for s, _ in plan.slot_fracs]
                 rr = np.asarray(plan.links)[:, None]
                 cc = np.asarray(slots)
                 full[rr, cc] = self.ledger.reserved[rr, cc] == 1.0
@@ -301,11 +305,16 @@ class WavefrontPlanner:
         link caches (base, ptr) with "full on [base, ptr)"; queries with
         nondecreasing slots (the walk's ``t0`` is nondecreasing) reuse
         the pointer and only re-gallop the still-unverified tail, so the
-        total gallop work per link is amortized over the whole batch."""
+        total gallop work per link is amortized over the whole batch.
+
+        ``s0`` and the result are absolute slots; the pointers and the
+        mask columns are physical (batch-local — the origin cannot move
+        inside a batch)."""
         full = self._fullmask()
+        base = self.ledger.base_slot
         horizon = full.shape[1]
         nf, nfb = self._nf, self._nfb
-        j = s0
+        j = s0 - base
         changed = True
         while changed:
             changed = False
@@ -322,10 +331,10 @@ class WavefrontPlanner:
                     continue
                 if b <= j <= p:
                     start = p   # commits extended the run: keep the base
-                    base = b
+                    base_l = b
                 else:
                     start = j   # segment behind/ahead of j: start fresh
-                    base = j
+                    base_l = j
                 p = start
                 # Commits advance a link's frontier a slot or two at a
                 # time: a short scalar walk resolves almost every update
@@ -344,11 +353,11 @@ class WavefrontPlanner:
                         p += int(seg.argmin())
                         break
                 nf[l] = p
-                nfb[l] = base
+                nfb[l] = base_l
                 if p > j:
                     j = p
                     changed = True
-        return j
+        return base + j
 
     def _clean(self, e: _Entry) -> bool:
         """True iff no commit since this entry's wave touched any
@@ -604,7 +613,7 @@ class WavefrontPlanner:
 
         # single-path: residue at slot_of(t0) is the whole selection input
         ledger._ensure(int(s0c.max()))
-        booked0 = ledger.reserved[pad, s0c[:, None]]
+        booked0 = ledger.reserved[pad, (s0c - ledger.base_slot)[:, None]]
         score0 = ((1.0 - booked0) * ledger.capacity[pad]).min(axis=1)
         entries = {}
         pos = 0
@@ -709,7 +718,9 @@ class WavefrontPlanner:
         # candidate link, then pure-float mins (same doubles, no ufunc
         # dispatch per element).
         flat = [r for _s, rows, _cap, _l in cands for r in rows]
-        vals = ((1.0 - res[flat, s0]) * capacity[flat]).tolist()
+        vals = (
+            (1.0 - res[flat, s0 - ledger.base_slot]) * capacity[flat]
+        ).tolist()
         scores = []
         pos = 0
         for _s, rows, _cap, _l in cands:
@@ -736,7 +747,8 @@ class WavefrontPlanner:
         generic candidate path takes over)."""
         ledger = self.ledger
         s0 = ledger.slot_of(at)
-        if s0 >= ledger.reserved.shape[1]:
+        p0 = s0 - ledger.base_slot
+        if p0 >= ledger.reserved.shape[1]:
             ledger._ensure(s0)
         res = ledger.reserved
         caplist = self._caplist
@@ -762,11 +774,11 @@ class WavefrontPlanner:
                 return None  # different trees: generic Dijkstra path
             s = float("inf")
             for l in links_a[:i]:
-                v = (1.0 - res.item(l, s0)) * caplist[l]
+                v = (1.0 - res.item(l, p0)) * caplist[l]
                 if v < s:
                     s = v
             for l in links_b[:j]:
-                v = (1.0 - res.item(l, s0)) * caplist[l]
+                v = (1.0 - res.item(l, p0)) * caplist[l]
                 if v < s:
                     s = v
             key = (-s, i + j, rep)
@@ -798,13 +810,14 @@ class WavefrontPlanner:
         # paths would diverge on pathological backlogs.
         max_abs = s0 + (1 << 16)
         dur = ledger.slot_duration
+        base = ledger.base_slot  # frozen for the batch (slots are absolute)
         # Scalar micro-scan: post-skip, almost every plan completes within
         # a few slots.  numpy's cumsum is a strict sequential accumulation,
         # so a Python walk computing cum_j = cum_{j-1} + bw_j*secs_j with
         # np.float64 scalars produces bit-identical floats — without the
         # ~1.5µs-per-call numpy dispatch the vector path pays ~10× over.
         lim = 24
-        if sz + lim > ledger.reserved.shape[1]:
+        if sz + lim - base > ledger.reserved.shape[1]:
             ledger._ensure(sz + lim - 1)
         rowviews = [ledger.reserved[r] for r in idx]
         target = size - _EPS
@@ -815,7 +828,7 @@ class WavefrontPlanner:
         resids: List[float] = []
         hit = -1
         for j in range(lim):
-            p = sz + j
+            p = sz + j - base
             mx = rowviews[0].item(p)  # python floats: same IEEE doubles,
             for rv in rowviews[1:]:   # no per-element ufunc dispatch
                 v = rv.item(p)
@@ -852,13 +865,14 @@ class WavefrontPlanner:
             ledger._ensure(sz + window - 1)
             if reserved is not ledger.reserved:
                 reserved = ledger.reserved
-            hi = sz + window
+            lo = sz - base
+            hi = lo + window
             # max over path links as pairwise np.maximum on row slices —
             # bit-identical to .max(axis=0) (max is exact) and ~3× faster
             # on the short windows the frontier skip leaves.
-            mx = reserved[idx[0], sz:hi]
+            mx = reserved[idx[0], lo:hi]
             for r in idx[1:]:
-                mx = np.maximum(mx, reserved[r, sz:hi])
+                mx = np.maximum(mx, reserved[r, lo:hi])
             resid = 1.0 - mx
             bw = resid * cap
             # deliverable = bw * secs with secs == dur everywhere except a

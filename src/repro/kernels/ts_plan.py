@@ -28,6 +28,13 @@ backends exist:
   ``tests/test_wavefront.py`` pins this contract in interpret mode.
 
 Select with ``set_backend("pallas")`` or ``REPRO_TS_PLAN_BACKEND=pallas``.
+
+Both backends are **origin-free**: ``booked`` arrives as an already-
+gathered window, so the rolling-horizon coordinate map (the ledger's
+``base_slot`` origin, DESIGN.md §7) is applied entirely by the callers —
+``TimeSlotLedger.booked_window`` and the wavefront/reroute gathers
+translate absolute slots to physical columns before the kernel ever runs,
+and a compacted ledger feeds bit-identical windows to either backend.
 """
 from __future__ import annotations
 

@@ -1,0 +1,449 @@
+"""Rolling-horizon TS-ledger compaction (DESIGN.md §7).
+
+A ledger with periodic ``retire()`` must answer every query/plan/commit
+identically (modulo the origin shift) to a never-compacted twin — the
+hypothesis suites below drive random op streams and full controller
+scenarios (including mid-transfer reroute storms) against both and demand
+bit-equality.  The satellites ride along: the live-window ``utilization``
+definition, allocation-free read-only queries, and ``scratch_ledger``
+horizon/origin inheritance for BAR.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import BassPolicy, ClusterController, ClusterState
+from repro.core.tasks import BackgroundFlow, Task
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import (
+    paper_fig2_fabric,
+    storage_hosts,
+    two_tier_fabric,
+)
+from repro.net.fattree import fat_tree_fabric
+
+
+def _twins(slot=1.0, horizon=64):
+    fab = two_tier_fabric(2, 3, 100.0, 100.0)
+    a = TimeSlotLedger(fab, slot, horizon)      # compacting
+    b = TimeSlotLedger(fab, slot, horizon)      # never compacts
+    b.retire_stride = None
+    return fab, a, b
+
+
+def _assert_live_windows_equal(a: TimeSlotLedger, b: TimeSlotLedger):
+    """a's physical matrix must equal the same absolute span of b."""
+    off = a.base_slot - b.base_slot
+    n = a.reserved.shape[1]
+    b._ensure(b.base_slot + off + n - 1)
+    assert np.array_equal(a.reserved, b.reserved[:, off : off + n])
+
+
+# ---------------------------------------------------------------------------
+# ledger-level equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_retire_drops_past_keeps_tails():
+    fab, a, b = _twins()
+    rows = a.rows(fab.path("H0", "H4"))
+    pa = a.plan_transfer(1000.0, rows, not_before=0.0)   # ~10 slots
+    pb = b.plan_transfer(1000.0, rows, not_before=0.0)
+    assert pa == pb
+    a.commit(pa)
+    b.commit(pb)
+    dropped = a.retire(5.0)                               # mid-transfer
+    assert dropped == 5 and a.base_slot == 5
+    assert a.retired_slots == 5
+    _assert_live_windows_equal(a, b)
+    # The surviving tail releases identically on both.
+    ka = a.release_after(pa, 5.0)
+    kb = b.release_after(pb, 5.0)
+    assert ka == kb
+    assert a.plan_bytes(ka) == b.plan_bytes(kb)
+    _assert_live_windows_equal(a, b)
+
+
+def test_retire_is_monotone_and_idempotent():
+    fab, a, _ = _twins()
+    assert a.retire(10.0) == 10
+    assert a.retire(10.0) == 0
+    assert a.retire(3.0) == 0          # never moves backwards
+    assert a.base_slot == 10
+
+
+def test_retire_past_everything_booked():
+    fab, a, b = _twins()
+    rows = a.rows(fab.path("H0", "H1"))
+    for led in (a, b):
+        led.commit(led.plan_transfer(300.0, rows, not_before=0.0))
+    a.retire(500.0)
+    assert a.base_slot == 500
+    assert a.reserved.shape[1] <= 64 and not a.reserved.any()
+    # Planning resumes seamlessly at the new origin.
+    pa = a.plan_transfer(200.0, rows, not_before=500.0)
+    pb = b.plan_transfer(200.0, rows, not_before=500.0)
+    assert pa == pb
+    a.commit(pa)
+    b.commit(pb)
+    _assert_live_windows_equal(a, b)
+
+
+def test_writes_before_origin_raise():
+    fab, a, b = _twins()
+    rows = a.rows(fab.path("H0", "H1"))
+    plan = a.plan_transfer(100.0, rows, not_before=0.0)
+    a.retire(50.0)
+    with pytest.raises(ValueError, match="retired origin"):
+        a.plan_transfer(100.0, rows, not_before=0.0)
+    with pytest.raises(ValueError, match="retired origin"):
+        a.commit(plan)
+    with pytest.raises(ValueError, match="retired origin"):
+        a.commit_batch([plan])
+    # occupy/release clamp instead: the past portion is delivered history.
+    a.occupy(rows, 0.0, 55.0, 0.25)
+    b.occupy(rows, 0.0, 55.0, 0.25)
+    a.release(plan)                    # fully-retired plan: no-op
+    _assert_live_windows_equal(a, b)
+
+
+def _twin_op_stream(seed: int, n_ops: int):
+    """Random plan/commit/occupy/release_after/query streams with the
+    clock advancing and the compacted ledger retiring along the way."""
+    fab, a, b = _twins()
+    hosts = [f"H{i}" for i in range(6)]
+    rng = np.random.default_rng(seed)
+    now = 0.0
+    committed = []
+    for _ in range(n_ops):
+        op = ["plan", "occupy", "release_after", "query", "advance"][
+            int(rng.integers(0, 5))
+        ]
+        s, d = rng.choice(hosts, 2, replace=False)
+        rows = a.rows(fab.path(str(s), str(d)))
+        if op == "advance":
+            now += float(rng.uniform(0.5, 30.0))
+            a.retire(now)
+            continue
+        if op == "plan":
+            nb = now + float(rng.uniform(0, 10))
+            size = float(rng.uniform(10, 800))
+            pa = a.plan_transfer(size, rows, not_before=nb)
+            pb = b.plan_transfer(size, rows, not_before=nb)
+            assert pa == pb
+            a.commit(pa)
+            b.commit(pb)
+            committed.append((pa, pb))
+        elif op == "occupy":
+            t0 = now + float(rng.uniform(0, 5))
+            t1 = t0 + float(rng.uniform(0.5, 10))
+            frac = float(rng.uniform(0.05, 0.9))
+            a.occupy(rows, t0, t1, frac)
+            b.occupy(rows, t0, t1, frac)
+        elif op == "release_after" and committed:
+            j = int(rng.integers(0, len(committed)))
+            qa, qb = committed[j]
+            t = now + float(rng.uniform(0, 5))
+            ka = a.release_after(qa, t)
+            kb = b.release_after(qb, t)
+            assert ka == kb
+            assert a.plan_bytes(ka) == b.plan_bytes(kb)
+            committed[j] = (ka, kb)
+        else:
+            t = now + float(rng.uniform(0, 100))
+            slot = a.slot_of(t)
+            assert a.residual_fraction(rows, slot) == \
+                b.residual_fraction(rows, slot)
+            assert a.path_bandwidth(rows, t) == b.path_bandwidth(rows, t)
+            assert a.min_path_bandwidth(rows, now, t) == \
+                b.min_path_bandwidth(rows, now, t)
+            got = a.path_bandwidth_batch([rows, ()], t)
+            want = b.path_bandwidth_batch([rows, ()], t)
+            assert np.array_equal(got, want)
+    _assert_live_windows_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_compacted_twin_answers_identically_seeded(seed):
+    _twin_op_stream(seed, n_ops=30)
+
+
+def _batch_planning_case(seed: int, sizes):
+    """plan_transfer_batch over shifted vs unshifted origins: same plans."""
+    fab, a, b = _twins()
+    hosts = [f"H{i}" for i in range(6)]
+    rng = np.random.default_rng(seed)
+    now = 0.0
+    for size in sizes:
+        cands = []
+        for _ in range(3):
+            s, d = rng.choice(hosts, 2, replace=False)
+            cands.append(a.rows(fab.path(str(s), str(d))))
+        nb = now + float(rng.uniform(0, 3))
+        pa = a.plan_transfer_batch(size, cands, not_before=nb)
+        pb = b.plan_transfer_batch(size, cands, not_before=nb)
+        assert pa == pb
+        a.commit(pa[0])
+        b.commit(pb[0])
+        now += float(rng.uniform(0, 10))
+        a.retire(now)
+    _assert_live_windows_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batch_planning_matches_across_origin_shift_seeded(seed):
+    rng = np.random.default_rng(1000 + seed)
+    sizes = [float(s) for s in rng.uniform(10.0, 500.0, size=6)]
+    _batch_planning_case(seed, sizes)
+
+
+# ---------------------------------------------------------------------------
+# controller-level equivalence (wavefront + reroute storms under retirement)
+# ---------------------------------------------------------------------------
+
+
+def _canon_sched(ctrl):
+    out = []
+    for a in sorted(ctrl.schedule().assignments, key=lambda x: x.tid):
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    return out
+
+
+def _canon_log(ctrl):
+    return [
+        (r.flow, r.old_path, r.new_path, float(r.delivered).hex(),
+         float(r.remaining).hex(), float(r.new_end).hex())
+        for r in ctrl.reroute_log
+    ]
+
+
+def _storm_controller(stride, n_tasks=160, seed=0, engine="batched"):
+    fab = fat_tree_fabric(4, link_mbps=100.0)
+    hosts = storage_hosts(fab)
+    half = len(hosts) // 2
+    sources, workers = hosts[:half], hosts[half:]
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(sources), size=(n_tasks, 3))
+    mk = lambda tid0: [
+        Task(tid=tid0 + i, size=float(200 + (i % 7) * 64), compute=0.05,
+             replicas=tuple(sources[j] for j in idx[i]))
+        for i in range(n_tasks)
+    ]
+    idle = {w: float(rng.uniform(0, 2.0)) for w in workers}
+    ctrl = ClusterController(
+        fab, workers, BassPolicy(multipath=True), idle=idle,
+        slot_duration=0.1,
+    )
+    ctrl.state.ledger.retire_stride = stride
+    ctrl.reroute_engine = engine
+    ctrl.submit(mk(0), at=0.0)
+    ctrl.fail_switch("core0_0", at=0.5)
+    ctrl.fail_link("ea/p3e0a0", at=1.0)
+    ctrl.submit(mk(10_000), at=20.0)       # arrives after origin shifts
+    ctrl.recover_link("ea/p3e0a0", at=30.0)
+    ctrl.run_until(120.0)
+    return ctrl
+
+
+@pytest.mark.parametrize("engine", ["batched", "sequential"])
+def test_storm_equivalence_under_compaction(engine):
+    """Mid-transfer reroute storms + a post-shift second job: aggressive
+    compaction and no compaction emit bit-identical schedules, reroute
+    logs, and ledgers — under both reroute engines."""
+    ca = _storm_controller(stride=4, engine=engine)
+    cb = _storm_controller(stride=None, engine=engine)
+    assert ca.state.ledger.base_slot > 0, "compaction never engaged"
+    assert cb.state.ledger.base_slot == 0
+    assert _canon_sched(ca) == _canon_sched(cb)
+    assert _canon_log(ca) == _canon_log(cb)
+    assert len(ca.reroute_log) > 0
+    _assert_live_windows_equal(ca.state.ledger, cb.state.ledger)
+    for jid in ca.jobs:
+        ma, mb = ca.job_metrics(jid), cb.job_metrics(jid)
+        assert (ma.mt, ma.rt, ma.jt, ma.lr, ma.rerouted) == \
+            (mb.mt, mb.rt, mb.jt, mb.lr, mb.rerouted)
+
+
+def _check_storm_equiv(seed: int, stride: int = 2, n_tasks: int = 60):
+    ca = _storm_controller(stride=stride, n_tasks=n_tasks, seed=seed)
+    cb = _storm_controller(stride=None, n_tasks=n_tasks, seed=seed)
+    assert _canon_sched(ca) == _canon_sched(cb)
+    assert _canon_log(ca) == _canon_log(cb)
+    _assert_live_windows_equal(ca.state.ledger, cb.state.ledger)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_storm_equivalence_seeded(seed):
+    _check_storm_equiv(seed)
+
+
+def test_run_until_retires_on_quiet_controller():
+    """A controller idling past its stride compacts without any event."""
+    fab = paper_fig2_fabric(100.0)
+    ctrl = ClusterController(fab, ["N1", "N2", "N3", "N4"])
+    ctrl.submit(
+        [Task(tid=0, size=300.0, compute=2.0, replicas=("N2",))], at=0.0
+    )
+    ctrl.run_until(0.0)
+    assert ctrl.state.ledger.base_slot == 0
+    ctrl.run_until(10_000.0)           # no events in (0, 10k]
+    led = ctrl.state.ledger
+    assert led.base_slot >= 10_000 - led.retire_stride - 1
+    assert led.reserved.shape[1] < 10_000
+
+
+# ---------------------------------------------------------------------------
+# satellites
+# ---------------------------------------------------------------------------
+
+
+def test_utilization_invariant_under_ensure_doubling():
+    """Regression: the old definition divided by the whole allocation, so
+    a `_ensure` doubling halved the reported utilization."""
+    fab, led, _ = _twins()
+    rows = led.rows(fab.path("H0", "H4"))
+    led.commit(led.plan_transfer(400.0, rows, not_before=0.0))  # 4 full slots
+    u0 = led.utilization()
+    # 4 path links fully booked over slots 0..3 → half the 8-link window.
+    assert u0 == pytest.approx(4 * 4 / (8 * 4))
+    width0 = led.reserved.shape[1]
+    led._ensure(led.base_slot + 4 * width0)    # force a doubling
+    assert led.reserved.shape[1] > width0
+    assert led.utilization() == u0
+    # ...and origin shifts do not change the booked-window arithmetic.
+    led.retire(1.0)
+    assert led.utilization() == pytest.approx(4 * 3 / (8 * 3))
+
+
+def test_utilization_empty_is_zero():
+    _, led, _ = _twins()
+    assert led.utilization() == 0.0
+
+
+def test_readonly_queries_never_allocate():
+    fab, led, twin = _twins(horizon=64)
+    rows = led.rows(fab.path("H0", "H4"))
+    led.commit(led.plan_transfer(200.0, rows, not_before=0.0))
+    twin.commit(twin.plan_transfer(200.0, rows, not_before=0.0))
+    width0 = led.reserved.shape[1]
+    far = 5_000.0
+    # The twin materializes the horizon; answers must match the clamp.
+    twin._ensure(twin.slot_of(far))
+    assert led.residual_fraction(rows, led.slot_of(far)) == \
+        twin.residual_fraction(rows, twin.slot_of(far)) == 1.0
+    assert led.path_bandwidth(rows, far) == twin.path_bandwidth(rows, far)
+    assert np.array_equal(
+        led.path_bandwidth_batch([rows], far),
+        twin.path_bandwidth_batch([rows], far),
+    )
+    assert led.min_path_bandwidth(rows, 1.0, far) == \
+        twin.min_path_bandwidth(rows, 1.0, far)
+    assert led.reserved.shape[1] == width0, "a read-only query allocated"
+    # Reads of the retired past answer "free" without resurrecting columns.
+    led.retire(100.0)
+    width1 = led.reserved.shape[1]
+    assert led.residual_fraction(rows, 0) == 1.0
+    assert led.path_bandwidth(rows, 0.0) == 100.0
+    assert led.reserved.shape[1] == width1
+
+
+def test_scratch_ledger_inherits_horizon_and_origin():
+    fab = paper_fig2_fabric(100.0)
+    state = ClusterState(fab, ["N1", "N2", "N3", "N4"], horizon_slots=64)
+    state.background.append(BackgroundFlow("N1", "N3", 0.5, 10.0, 900.0))
+    state.ledger._ensure(1500)          # the live ledger grew
+    state.ledger.retire_to(800)         # ...and its origin advanced
+    scratch = state.scratch_ledger()
+    assert scratch.reserved.shape[1] == state.ledger.reserved.shape[1]
+    assert scratch.base_slot == state.ledger.base_slot
+    # Background flows replay clamped to the live window.
+    rows = scratch.rows(fab.path("N1", "N3"))
+    assert scratch.residual_fraction(rows, 850) == pytest.approx(0.5)
+    assert scratch.residual_fraction(rows, 901) == 1.0
+    # Explicit horizon still wins when a caller asks for one (background
+    # replay may grow it past the request, never below).
+    bare = ClusterState(fab, ["N1", "N2"], horizon_slots=64)
+    assert bare.scratch_ledger(horizon_slots=32).reserved.shape[1] == 32
+
+
+def test_bar_places_long_horizon_workload():
+    """BAR's static-belief phase used to reason on a hardcoded-256-slot,
+    origin-0 scratch; a job arriving deep into a long-running
+    controller's life must plan cleanly on an inherited window."""
+    fab = two_tier_fabric(2, 3, 100.0, 400.0)
+    workers = storage_hosts(fab)
+    ctrl = ClusterController(fab, workers, "bar")
+    ctrl.run_until(5_000.0)             # a long quiet life: origin shifts
+    assert ctrl.state.ledger.base_slot > 0
+    rng = np.random.default_rng(0)
+    tasks = [
+        Task(tid=i, size=float(rng.uniform(100, 500)),
+             compute=float(rng.uniform(1, 5)),
+             replicas=tuple(rng.choice(workers, 2, replace=False)))
+        for i in range(12)
+    ]
+    ctrl.submit(tasks, at=5_000.0)
+    ctrl.run()
+    rec = ctrl.jobs[0]
+    assert rec.placed and len(rec.assignments) == 12
+    assert all(a.start >= 5_000.0 - 1e-9 for a in rec.assignments)
+    # The live matrix stayed O(window), not O(elapsed time).
+    assert ctrl.state.ledger.reserved.shape[1] < 2_048
+
+
+def test_router_stays_bounded_over_long_service():
+    from repro.serving.engine import Request
+    from repro.serving.router import BassRouter
+
+    router = BassRouter([f"rep{i}" for i in range(4)])
+    span = 30_000 * router.ledger.slot_duration     # 30k slots
+    for i in range(120):
+        req = Request(rid=i, prompt=np.zeros(128, dtype=np.int32),
+                      max_new=16, prefix_hash=i % 8)
+        router.route(req, now=span * i / 120)
+        router.update_backlog(
+            {r: 0.0 for r in router.replicas}
+        )
+    led = router.ledger
+    assert led.base_slot > 0
+    assert led.reserved.shape[1] < 8_192
+    assert not router.controller.jobs   # per-request records still pruned
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property suites (run where hypothesis is installed, e.g. CI) —
+# the seeded sweeps above keep deterministic coverage everywhere else.
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**16), n_ops=st.integers(5, 40))
+    @settings(max_examples=40, deadline=None)
+    def test_compacted_twin_answers_identically(seed, n_ops):
+        _twin_op_stream(seed, n_ops)
+
+    @given(
+        sizes=st.lists(st.floats(10.0, 500.0), min_size=1, max_size=8),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_batch_planning_matches_across_origin_shift(sizes, seed):
+        _batch_planning_case(seed, sizes)
+
+    @given(seed=st.integers(0, 2**10))
+    @settings(max_examples=6, deadline=None)
+    def test_storm_equivalence_property(seed):
+        _check_storm_equiv(seed, n_tasks=40)
