@@ -86,22 +86,58 @@ def fleet_instance(pods: int, hosts: int, n_tasks: int) -> Instance:
                     slot_duration=0.1)
 
 
-def run(configs=None) -> list:
+def _backends(requested: str) -> list:
+    """Backend legs for one run: both when jax is importable, numpy only
+    otherwise (the artifact then records the trajectory it can measure)."""
+    if requested != "both":
+        return [requested]
+    try:
+        from repro.kernels import ts_plan_device
+
+        return ["numpy", "pallas"] if ts_plan_device.available() else ["numpy"]
+    except Exception:  # noqa: BLE001 — no jax on this runner
+        return ["numpy"]
+
+
+def run(configs=None, backend: str = "both") -> list:
+    from repro.kernels import ts_plan
+
     rows = []
-    for pods, hosts, n_tasks in configs if configs is not None else CONFIGS:
-        n_hosts = pods * hosts
-        inst = fleet_instance(pods, hosts, n_tasks)
-        t0 = time.perf_counter()
-        sched = schedule_bass(inst)
-        dt = time.perf_counter() - t0
-        rows.append(
-            (
-                f"sched_scale_{n_hosts}hosts_{n_tasks}tasks",
-                dt / n_tasks * 1e6,
-                round(n_tasks / dt, 0),
-            )
-        )
-        assert len(sched.assignments) == n_tasks
+    prev = ts_plan.get_backend()
+    try:
+        for be in _backends(backend):
+            ts_plan.set_backend(be)
+            for pods, hosts, n_tasks in (
+                configs if configs is not None else CONFIGS
+            ):
+                n_hosts = pods * hosts
+                inst = fleet_instance(pods, hosts, n_tasks)
+                t0 = time.perf_counter()
+                sched = schedule_bass(inst)
+                dt = time.perf_counter() - t0
+                rows.append(
+                    (
+                        f"sched_scale_{n_hosts}hosts_{n_tasks}tasks_{be}",
+                        dt / n_tasks * 1e6,
+                        round(n_tasks / dt, 0),
+                    )
+                )
+                assert len(sched.assignments) == n_tasks
+            if be == "pallas":
+                st = ts_plan.device_stats()
+                calls = st.get("traces", 0) + st.get("cache_hits", 0)
+                rate = st.get("cache_hits", 0) / calls if calls else 0.0
+                rows.append(
+                    (
+                        "sched_scale_compile_cache",
+                        0.0,
+                        f"hit_rate={rate:.4f},traces={st.get('traces', 0)},"
+                        f"hits={st.get('cache_hits', 0)},"
+                        f"mirror_syncs={st.get('mirror_syncs', 0)}",
+                    )
+                )
+    finally:
+        ts_plan.set_backend(prev)
     return rows
 
 
@@ -111,15 +147,18 @@ def main() -> None:
                     help="small config only + coarse tasks/s floor")
     ap.add_argument("--json", metavar="PATH",
                     help="also write machine-readable rows (JSON)")
+    ap.add_argument("--backend", choices=["numpy", "pallas", "both"],
+                    default="both",
+                    help="ts_plan backend leg(s) to measure")
     args = ap.parse_args()
     configs = CONFIGS[:1] if args.smoke else CONFIGS
-    rows = run(configs)
+    rows = run(configs, backend=args.backend)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
         write_json(rows, args.json)
     if args.smoke:
-        name, _us, derived = rows[0]
+        name, _us, derived = rows[0]  # the numpy leg guards the floor
         if derived < SMOKE_FLOOR_TASKS_PER_S:
             raise SystemExit(
                 f"{name}: {derived} tasks/s below the "

@@ -16,6 +16,11 @@ arrival stream through an aggressively-compacting controller
 within one dump — the rolling-horizon origin shift (DESIGN.md §7) is
 invisible in every emitted coordinate.
 
+The ``backend_*`` sections emit the same workloads under the numpy
+reference and the forced device ``ts_plan`` backend (DESIGN.md §8):
+paired blocks must be byte-identical within one dump, pinning the device
+pipeline's bit-exactness end to end.
+
     PYTHONPATH=src python benchmarks/tools/dump_schedules.py OUTFILE
 """
 from __future__ import annotations
@@ -82,6 +87,44 @@ def main() -> None:
                            label="failstorm_compacted")
         dump_failure_storm(out, "batched", stride=None,
                            label="failstorm_uncompacted")
+        dump_backend_parity(out)
+
+
+def dump_backend_parity(out):
+    """The same workloads under the numpy reference and the forced device
+    ``ts_plan`` backend (fused f64 pipeline + ledger mirror): paired
+    ``backend_*`` blocks must be byte-identical within one dump — the
+    device pipeline's bit-exactness contract, end to end through the
+    scheduler.  Skipped (with a marker block) when jax is unavailable."""
+    from repro.kernels import ts_plan  # noqa: E402
+
+    try:
+        from repro.kernels import ts_plan_device  # noqa: E402
+
+        have = ts_plan_device.available()
+    except Exception:  # noqa: BLE001
+        have = False
+    if not have:
+        out.write("== backend_parity_skipped_no_jax\n")
+        return
+    pods, hosts, n = CONFIGS[0]
+    prev = ts_plan.get_backend()
+    try:
+        for be in ("numpy", "pallas"):
+            ts_plan.set_backend(be)
+            if be == "pallas":
+                ts_plan_device.set_mirror(True)  # exercise the mirror too
+            dump_schedule(
+                out, f"backend_{be}_fig2_bass",
+                SCHEDULERS["bass"](example1_instance()),
+            )
+            dump_schedule(
+                out, f"backend_{be}_fleet_{pods * hosts}h_{n}t",
+                SCHEDULERS["bass"](fleet_instance(pods, hosts, n)),
+            )
+    finally:
+        ts_plan.set_backend(prev)
+        ts_plan_device.set_mirror(None)
 
 
 def dump_compaction(out):

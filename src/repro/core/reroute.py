@@ -212,6 +212,7 @@ class RerouteEngine:
                             ledger.reserved[
                                 rr[:, None], (ss - base)[None, :]
                             ] = 1.0
+                    ledger.mirror_invalidate()  # direct writes bypass the journal
                     return False
                 owner[rows[:, None], (slots - base)[None, :]] = i
         self._tails = tails
@@ -237,6 +238,7 @@ class RerouteEngine:
                 self.ledger.reserved[
                     rows[:, None], (slots - self._base)[None, :]
                 ] = 1.0
+        self.ledger.mirror_invalidate()  # direct writes bypass the journal
 
     # -- pass 3: candidate grid ----------------------------------------------
     def _candidate_grid(self, victims: List[_Victim]) -> None:
@@ -396,15 +398,12 @@ class RerouteEngine:
                     ])
                 cols[j] = row
             ledger._ensure(int(cols.max()))
-            booked = ledger.reserved[
-                pad[sub][:, :, None], (cols - self._base)[:, None, :]
-            ]
             # first-slot partiality is a property of slot s0 itself
             first_part = cols[:, 0] == s0c[sub]
             secs[first_part, 0] = (s0c[sub][first_part] + 1) * dur - \
                 t0c[sub][first_part]
-            resid, bw, cum, hits = ts_plan.plan_scan(
-                booked, caps[sub], secs, sizes[sub]
+            resid, bw, cum, hits = ts_plan.col_scan(
+                ledger, pad[sub], cols, caps[sub], secs, sizes[sub]
             )
             done = hits < m
             for j in np.nonzero(done)[0]:

@@ -63,6 +63,11 @@ class TransferPlan:
 class TimeSlotLedger:
     """Per-link slotted reservation calendar (the SDN controller's ``SL_rl``)."""
 
+    #: Device-resident mirror (``kernels.ts_plan_device.DeviceMirror``),
+    #: attached lazily by :meth:`device_mirror`.  Class-level default so
+    #: ``__new__``-based clones (controller snapshots) start mirror-free.
+    _mirror = None
+
     def __init__(
         self,
         fabric: Fabric,
@@ -77,7 +82,13 @@ class TimeSlotLedger:
         self.capacity = np.array(
             [fabric.link(n).capacity for n in names], dtype=np.float64
         )
-        self.reserved = np.zeros((len(names), horizon_slots), dtype=np.float64)
+        # Capacity-backed storage: ``reserved`` is a view into ``_buf``
+        # starting at column ``_col0`` — growth re-slices within capacity
+        # and origin retirement advances the offset, both copy-free
+        # (see :meth:`_ensure` / :meth:`retire_to`).
+        self._buf = np.zeros((len(names), horizon_slots), dtype=np.float64)
+        self._col0 = 0
+        self._res = self._buf
         #: Rolling-horizon origin: ``reserved[:, 0]`` holds absolute slot
         #: ``base_slot``.  Public APIs are absolute; only physical column
         #: indices shift (DESIGN.md §7).
@@ -123,15 +134,65 @@ class TimeSlotLedger:
             self._path_rows[(src, dst)] = hit
         return hit
 
+    @property
+    def reserved(self) -> np.ndarray:
+        """Live ``[n_links, width]`` reservation window (column 0 holds
+        absolute slot :attr:`base_slot`) — a view into the wider capacity
+        buffer, so its identity changes whenever the window grows or the
+        origin shifts."""
+        return self._res
+
+    @reserved.setter
+    def reserved(self, arr: np.ndarray) -> None:
+        # Wholesale replacement (controller snapshot/restore/clone): the
+        # array becomes the new capacity buffer and any device mirror is
+        # stale by definition.
+        self._buf = arr
+        self._col0 = 0
+        self._res = arr
+        if self._mirror is not None:
+            self._mirror.invalidate()
+
     def _ensure(self, slot: int) -> None:
-        """Grow the matrix so absolute ``slot`` has a live column."""
-        n = self.reserved.shape[1]
+        """Grow the live window so absolute ``slot`` has a live column.
+
+        Growth within capacity just widens the view — no copy, no
+        zeroing (pages arrive zeroed from the allocator).  A capacity
+        miss reallocates at 8× the requested width, so the copy cost per
+        cell amortizes to O(1) over a run; the old at-least-double
+        zeros+copy was the dominant wall-clock cost at fleet scale.
+        """
+        n = self._res.shape[1]
         need = slot - self.base_slot
-        if need >= n:
-            grow = max(need + 1 - n, n)  # at least double
-            wider = np.zeros((self.reserved.shape[0], n + grow))
-            wider[:, :n] = self.reserved
-            self.reserved = wider
+        if need < n:
+            return
+        width = need + 1
+        if self._col0 + width > self._buf.shape[1]:
+            cap = max(width * 8, 64)
+            wider = np.zeros((self._res.shape[0], cap))
+            wider[:, :n] = self._res
+            self._buf = wider
+            self._col0 = 0
+        self._res = self._buf[:, self._col0 : self._col0 + width]
+
+    def device_mirror(self):
+        """The lazily-attached device-resident mirror of :attr:`reserved`
+        (``kernels.ts_plan_device.DeviceMirror``) — the device backend's
+        gather source.  Narrow sync API: the mutators journal every cell
+        write through it and the mirror folds the journal in at its next
+        ``sync()`` (DESIGN.md §8)."""
+        if self._mirror is None:
+            from ..kernels.ts_plan_device import DeviceMirror
+
+            self._mirror = DeviceMirror(self)
+        return self._mirror
+
+    def mirror_invalidate(self) -> None:
+        """Drop the device mirror's incremental state after a direct
+        :attr:`reserved` write that bypassed the journaling mutators; the
+        next sync re-uploads the full window."""
+        if self._mirror is not None:
+            self._mirror.invalidate()
 
     def slot_of(self, t: float) -> int:
         return int(math.floor(t / self.slot_duration + _EPS))
@@ -157,14 +218,19 @@ class TimeSlotLedger:
         drop = cut - self.base_slot
         if drop <= 0:
             return 0
-        width = self.reserved.shape[1]
+        width = self._res.shape[1]
         if drop >= width:
             # Everything booked is in the past: restart with a minimal
             # window (columns beyond the old width were never allocated
-            # and are zero by definition).
-            self.reserved = np.zeros((self.reserved.shape[0], 64))
+            # and are zero by definition).  Assigning through the setter
+            # also invalidates any device mirror.
+            self.reserved = np.zeros((self._res.shape[0], 64))
         else:
-            self.reserved = np.ascontiguousarray(self.reserved[:, drop:])
+            # Origin shift = view-offset advance, copy-free; the retired
+            # columns stay in the capacity buffer until the next realloc.
+            # A device mirror re-bases itself at its next sync.
+            self._col0 += drop
+            self._res = self._buf[:, self._col0 : self._col0 + (width - drop)]
         self.base_slot = cut
         self.retired_slots += drop
         return drop
@@ -467,6 +533,12 @@ class TimeSlotLedger:
                 )
             for r, v in zip(plan.links, vals):
                 res[r, p] = v if v < 1.0 else 1.0
+            if self._mirror is not None:
+                self._mirror.note_flat(
+                    np.asarray(plan.links),
+                    np.full(len(plan.links), slot, dtype=np.int64),
+                    np.minimum(vals, 1.0),
+                )
             return
         slots = [s for s, _ in plan.slot_fracs]
         fracs = np.array([f for _, f in plan.slot_fracs])
@@ -485,7 +557,10 @@ class TimeSlotLedger:
                 f"over-reservation on slot {slots[col]}: "
                 f"{new[:, col].max():.6f} > 1"
             )
-        self.reserved[rr, cc] = np.minimum(new, 1.0)
+        clamped = np.minimum(new, 1.0)
+        self.reserved[rr, cc] = clamped
+        if self._mirror is not None:
+            self._mirror.note_grid(np.asarray(plan.links), np.asarray(slots), clamped)
 
     def commit_batch(self, plans: Sequence[TransferPlan]) -> None:
         """Commit many plans whose (link, slot) cells are pairwise disjoint
@@ -539,7 +614,10 @@ class TimeSlotLedger:
             raise ValueError(
                 f"over-reservation on slot {cc[k]}: {new[k]:.6f} > 1"
             )
-        self.reserved[rr, ccp] = np.minimum(new, 1.0)
+        clamped = np.minimum(new, 1.0)
+        self.reserved[rr, ccp] = clamped
+        if self._mirror is not None:
+            self._mirror.note_flat(rr, cc, clamped)
 
     def occupy(
         self, rows: Sequence[int], start: float, end: float, fraction: float
@@ -558,9 +636,12 @@ class TimeSlotLedger:
         self._ensure(s1)
         p0, p1 = s0 - self.base_slot, s1 - self.base_slot
         idx = list(rows)
-        self.reserved[idx, p0 : p1 + 1] = np.minimum(
-            self.reserved[idx, p0 : p1 + 1] + fraction, 1.0
-        )
+        block = np.minimum(self.reserved[idx, p0 : p1 + 1] + fraction, 1.0)
+        self.reserved[idx, p0 : p1 + 1] = block
+        if self._mirror is not None:
+            self._mirror.note_grid(
+                np.asarray(idx), np.arange(s0, s1 + 1, dtype=np.int64), block
+            )
 
     def release(self, plan: TransferPlan) -> None:
         """Exact inverse of :meth:`commit` — one ``(rows × slots)`` scatter.
@@ -574,10 +655,12 @@ class TimeSlotLedger:
             return
         fracs = np.array([f for _, f in live])
         rr = np.asarray(plan.links)[:, None]
-        cc = np.array([s for s, _ in live]) - base
-        self.reserved[rr, cc] = np.maximum(
-            self.reserved[rr, cc] - fracs[None, :], 0.0
-        )
+        slots = np.array([s for s, _ in live], dtype=np.int64)
+        cc = slots - base
+        freed = np.maximum(self.reserved[rr, cc] - fracs[None, :], 0.0)
+        self.reserved[rr, cc] = freed
+        if self._mirror is not None:
+            self._mirror.note_grid(np.asarray(plan.links), slots, freed)
 
     def plan_bytes(self, plan: TransferPlan, until: Optional[float] = None) -> float:
         """Capacity-units·seconds the plan delivers by ``until`` (default:
@@ -620,9 +703,12 @@ class TimeSlotLedger:
             tail_fracs = np.array([f for s, f in plan.slot_fracs if s >= wipe])
             rr = np.asarray(idx)[:, None]
             cc = np.asarray(tail_slots) - self.base_slot
-            self.reserved[rr, cc] = np.maximum(
-                self.reserved[rr, cc] - tail_fracs[None, :], 0.0
-            )
+            freed = np.maximum(self.reserved[rr, cc] - tail_fracs[None, :], 0.0)
+            self.reserved[rr, cc] = freed
+            if self._mirror is not None:
+                self._mirror.note_grid(
+                    np.asarray(idx), np.asarray(tail_slots, dtype=np.int64), freed
+                )
         if not keep:
             return TransferPlan(plan.links, plan.start, plan.start, ())
         new_end = min(plan.end, cut * self.slot_duration)

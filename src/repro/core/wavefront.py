@@ -291,7 +291,13 @@ class WavefrontPlanner:
         if full is None:
             full = self._full = self.ledger.reserved == 1.0
         elif full.shape[1] < cols:
-            wider = np.zeros((full.shape[0], cols), dtype=bool)
+            # Grow with geometric slack: the capacity-backed ledger view
+            # widens a slot at a time, so an exact-fit mask would realloc
+            # on nearly every commit.  Slack columns read False — the
+            # mask's meaning for slots nothing has booked yet.
+            wider = np.zeros(
+                (full.shape[0], max(cols, 2 * full.shape[1])), dtype=bool
+            )
             wider[:, : full.shape[1]] = full
             full = self._full = wider
         return full
@@ -508,24 +514,17 @@ class WavefrontPlanner:
 
     def _curve_scan(self, pad, caps, s0c, t0c, sizes, sz, w):
         """Gather + ``plan_scan`` + plan-end extraction for one candidate
-        row block, every float by the same expressions ``plan_transfer``
-        evaluates per scalar (max/sub/div are elementwise-identical).
-        ``sz`` is the per-candidate frontier-skipped scan base."""
+        row block — the fused ``ts_plan.wave_scan`` pipeline (device-
+        resident when the device backend is live), every float by the
+        same expressions ``plan_transfer`` evaluates per scalar
+        (max/sub/div are elementwise-identical).  ``sz`` is the
+        per-candidate frontier-skipped scan base."""
         ledger = self.ledger
         dur = ledger.slot_duration
-        booked = ledger.booked_window(pad, sz, w)
-        n = len(caps)
-        secs = np.full((n, w), dur)
-        secs[:, 0] = np.where(sz > s0c, dur, (s0c + 1) * dur - t0c)
-        resid, bw, cum, hit = ts_plan.plan_scan(booked, caps, secs, sizes)
-        ar = np.arange(n)
-        hidx = np.minimum(hit, w - 1)
-        before = np.where(hit > 0, cum[ar, np.maximum(hit - 1, 0)], 0.0)
-        t_in = np.maximum(t0c, (sz + hit) * dur)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            end = t_in + (sizes - before) / bw[ar, hidx]
-        end = np.where(hit < w, end, np.inf)
-        end = np.where(sizes <= 0, t0c, end)
+        first_secs = np.where(sz > s0c, dur, (s0c + 1) * dur - t0c)
+        resid, bw, cum, hit, end = ts_plan.wave_scan(
+            ledger, pad, caps, sz, t0c, sizes, w, first_secs
+        )
         fit = hit[hit < w]
         if fit.size:
             self._w_ema = 0.8 * self._w_ema + 0.2 * (float(fit.mean()) + 8.0)
@@ -579,9 +578,26 @@ class WavefrontPlanner:
             _sz, resid, bw, cum, hit, end = self._curve_scan(
                 pad, caps, s0c, t0c, sizes, sz, w
             )
-            entries: Dict[int, _Entry] = {}
+            # choose_source_path's key is (end, hops, name, cand order);
+            # each candidate's precomputed rank — its position in the
+            # segment's (hops, name, order) sort — reduces the key to
+            # (end, rank), so one batched per-segment argmin
+            # (ts_plan.wave_select) picks every wave's winners at once.
+            ranks = np.empty(n_cand, dtype=np.int64)
             pos = 0
             for (j, task, dst, at, cands), cnt in zip(specs, counts):
+                order = sorted(
+                    range(cnt), key=lambda c: (cands[c][3], cands[c][0], c)
+                )
+                for r, c in enumerate(order):
+                    ranks[pos + c] = r
+                pos += cnt
+            winners = ts_plan.wave_select(end, ranks, counts)
+            entries: Dict[int, _Entry] = {}
+            pos = 0
+            for si, ((j, task, dst, at, cands), cnt) in enumerate(
+                zip(specs, counts)
+            ):
                 sl = slice(pos, pos + cnt)
                 pos += cnt
                 e = _Entry()
@@ -601,12 +617,7 @@ class WavefrontPlanner:
                 e.hit = hit[sl]
                 e.end = end[sl]
                 e.fit_all = bool((e.hit < w).all())
-                s = e.end
-                # choose_source_path's key: (end, hops, name, cand order)
-                e.winner = min(
-                    range(cnt),
-                    key=lambda c: (s[c], e.lens[c], e.srcs[c], c),
-                )
+                e.winner = int(winners[si])
                 e.best_end = float(e.end[e.winner])
                 entries[j] = e
             return entries

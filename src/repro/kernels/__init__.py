@@ -10,7 +10,7 @@ first touched.
 """
 import importlib
 
-__all__ = ["ops", "ref", "ts_plan"]
+__all__ = ["ops", "ref", "ts_plan", "ts_plan_device"]
 
 
 def __getattr__(name):

@@ -1,11 +1,32 @@
-"""Pallas-TPU version shims.
+"""Pallas-TPU version shims and cached jax platform probes.
 
 ``pltpu.CompilerParams`` is the modern spelling; before jax 0.5 the same
 dataclass was exported as ``TPUCompilerParams``.  Kernels import the alias
 from here so one source tree runs on both.
+
+This module imports jax at module scope — only the device-side kernels
+may import it, and only lazily from inside their entry points, so the
+numpy scheduling path never pays the jax import.
 """
+from typing import Optional
+
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-__all__ = ["CompilerParams"]
+_default_backend: Optional[str] = None
+
+
+def default_backend() -> str:
+    """``jax.default_backend()``, resolved once per process — the first
+    call initializes the platform client, so callers on a hot path must
+    not re-derive it per invocation."""
+    global _default_backend
+    if _default_backend is None:
+        import jax
+
+        _default_backend = jax.default_backend()
+    return _default_backend
+
+
+__all__ = ["CompilerParams", "default_backend"]

@@ -12,38 +12,77 @@ reduces, per candidate path, to a fixed four-step scan over a slot window:
    which the transfer completes; ``hit == W`` means "does not fit").
 
 :func:`plan_scan` runs that scan for *every* candidate in one array pass
-over a ``[n_cand, n_links_padded, window]`` gather of the ledger.  Two
-backends exist:
+over a ``[n_cand, n_links_padded, window]`` gather of the ledger; the
+fused entry points :func:`wave_scan` (gather → scan → plan-end extraction
+→ winner selection, the wavefront engine's per-wave pipeline) and
+:func:`col_scan` (compressed-column gather → scan, the reroute engine's
+escalation rounds) extend the same contract to whole pipelines.
 
-* ``numpy`` (default, the **reference**): bit-identical to a
-  ``plan_transfer`` loop — ``repro.core`` relies on this for the
-  paper-semantics guarantee, so it stays the default everywhere.
-* ``pallas``: a JAX/Pallas TPU kernel (float32, Hillis–Steele prefix sum)
-  for fleet-scale controllers co-located with accelerators.  Backends
-  **agree bit-wise on float64-safe inputs** — inputs whose values and all
-  intermediates are exactly representable at both precisions (dyadic
-  fractions of moderate magnitude, e.g. ledger fractions in 1/2^k, pow-2
-  capacities, integer sizes); under exact arithmetic the summation-order
-  difference between sequential and tree prefix sums vanishes.
-  ``tests/test_wavefront.py`` pins this contract in interpret mode.
+**Backends.**
 
-Select with ``set_backend("pallas")`` or ``REPRO_TS_PLAN_BACKEND=pallas``.
+* ``numpy`` (the **reference**): bit-identical to a ``plan_transfer``
+  loop — ``repro.core`` relies on this for the paper-semantics guarantee,
+  and every other backend is property-tested against it.
+* ``pallas`` (the **device** backend, forced): a shape-bucketed,
+  compile-cached jax pipeline (``ts_plan_device``).  Off-TPU it runs the
+  fused float64 XLA pipeline (``lax.scan`` sequential cumsum), which is
+  **bit-identical to numpy on any input** — f64 add/mul/div/max are
+  exactly rounded and evaluated in the same order.  On TPU it runs the
+  float32 Pallas kernel (Hillis–Steele prefix sum), which agrees bit-wise
+  on *float64-safe* inputs — values and intermediates exactly
+  representable at both precisions (dyadic fractions of moderate
+  magnitude, pow-2 capacities, integer sizes); under exact arithmetic the
+  summation-order difference between sequential and tree prefix sums
+  vanishes.  ``tests/test_wavefront.py`` and
+  ``tests/test_ts_plan_device.py`` pin both contracts in interpret mode.
+* ``auto`` (the **default**): resolves lazily, and only once a call is
+  large enough (≥ ``_AUTO_PROBE_CELLS`` cells) to possibly justify a
+  device round-trip — smaller calls answer through numpy without ever
+  importing jax.  When a non-CPU jax backend is present the device
+  pipeline becomes the default; on CPU the reference numpy kernel stays
+  (XLA-on-one-socket cannot beat it), unless
+  ``REPRO_TS_PLAN_AUTO_CELLS=<n>`` opts calls of ≥ n cells in.  With no
+  importable jax, ``auto`` degrades to ``numpy`` silently; ``pallas``
+  raises at first use.
+
+Select with ``set_backend(...)`` or ``REPRO_TS_PLAN_BACKEND=...``.
+``REPRO_TS_PLAN_MIRROR=1/0`` forces the device-resident ledger mirror on
+or off (default: on for non-CPU platforms — see DESIGN.md §8), and
+``REPRO_TS_PLAN_INTERPRET=1/0`` pins the Pallas kernel's interpret mode
+(default: interpret off-TPU).
 
 Both backends are **origin-free**: ``booked`` arrives as an already-
-gathered window, so the rolling-horizon coordinate map (the ledger's
-``base_slot`` origin, DESIGN.md §7) is applied entirely by the callers —
-``TimeSlotLedger.booked_window`` and the wavefront/reroute gathers
-translate absolute slots to physical columns before the kernel ever runs,
-and a compacted ledger feeds bit-identical windows to either backend.
+gathered window (or absolute slots translated against ``base_slot`` right
+at the gather), so the rolling-horizon coordinate map (DESIGN.md §7) is
+applied entirely by the callers, and a compacted ledger feeds
+bit-identical windows to either backend.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 EPS = 1e-9  # must equal repro.core.timeslot._EPS
+
+
+def _hit_count(cum: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+    """``hit[k] = #{j : cum[k, j] < sizes[k] - EPS}`` — searchsorted-left
+    on each row.  Rows are nondecreasing by construction (reserved
+    fractions ≤ 1 ⇒ ``bw ≥ 0``, and ``secs ≥ 0``), so a per-row binary
+    search returns the identical count; it wins when the batch is a few
+    long rows (escalated windows), while the vectorized count wins when
+    the batch is wide and the rows short (wave scans).  A regression test
+    pins the two bit-identical on both regimes."""
+    n, w = cum.shape
+    targets = sizes - EPS
+    if n * 8 <= w:
+        out = np.empty(n, dtype=np.int64)
+        for k in range(n):
+            out[k] = np.searchsorted(cum[k], targets[k])
+        return out
+    return (cum < targets[:, None]).sum(axis=1)
 
 
 def plan_scan_numpy(
@@ -76,14 +115,42 @@ def plan_scan_numpy(
     if bandwidth_cap is not None:
         bw = np.minimum(bw, bandwidth_cap)
     cum = np.cumsum(bw * secs, axis=1)
-    # searchsorted-left on each nondecreasing row: first j with cum[j] >= v.
-    hit = (cum < (sizes - EPS)[:, None]).sum(axis=1)
+    hit = _hit_count(cum, sizes)
     return resid, bw, cum, hit
 
 
 def _pad_to(x: np.ndarray, shape) -> np.ndarray:
+    if tuple(x.shape) == tuple(shape):
+        return x  # already aligned: no copy
     pads = [(0, t - s) for s, t in zip(x.shape, shape)]
     return np.pad(x, pads)
+
+
+# -- Pallas kernel interpret mode (cached once per process) ------------------
+
+_INTERPRET: Optional[bool] = None
+
+
+def set_interpret(value: Optional[bool]) -> None:
+    """Pin the Pallas kernel's interpret mode (``None`` = re-derive from
+    the jax backend / ``REPRO_TS_PLAN_INTERPRET`` on next use)."""
+    global _INTERPRET
+    _INTERPRET = value
+
+
+def _interpret_default() -> bool:
+    # jax.default_backend() initializes the platform client — not free,
+    # so the answer is resolved once per process instead of per call.
+    global _INTERPRET
+    if _INTERPRET is None:
+        env = os.environ.get("REPRO_TS_PLAN_INTERPRET")
+        if env is not None:
+            _INTERPRET = env not in ("", "0")
+        else:
+            from ._compat import default_backend
+
+            _INTERPRET = default_backend() != "tpu"
+    return _INTERPRET
 
 
 def plan_scan_pallas(
@@ -95,92 +162,42 @@ def plan_scan_pallas(
     overlay: Optional[np.ndarray] = None,
     interpret: Optional[bool] = None,
 ):
-    """Pallas-TPU backend (float32).  Agrees with :func:`plan_scan_numpy`
+    """Pallas-TPU kernel (float32).  Agrees with :func:`plan_scan_numpy`
     bit-wise on float64-safe inputs (module docstring); lazy jax import so
-    the numpy scheduling path never touches jax.  The ``overlay`` layer is
-    folded in on the host (one exact elementwise max) — it feeds the same
-    padded gather, so the kernel body is unchanged."""
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import pallas as pl
-
-    from ._compat import CompilerParams
+    the numpy scheduling path never touches jax.  Each padded
+    ``(NP, LP, WP)`` shape bucket lowers and compiles **once** (the
+    ``ts_plan_device`` compile cache) and the interpret default is cached
+    module-level; the ``overlay`` layer is folded in on the host (one
+    exact elementwise max) — it feeds the same padded gather, so the
+    kernel body is unchanged."""
+    from . import ts_plan_device
 
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
+        interpret = _interpret_default()
     if overlay is not None:
         booked = np.maximum(booked, overlay)
-    n, L, W = booked.shape
-    BN, LP = 8, max(8, L)
-    WP = max(128, -(-W // 128) * 128)
-    NP = -(-n // BN) * BN
-    bk = _pad_to(np.asarray(booked, np.float32), (NP, LP, WP))
-    cp = _pad_to(np.asarray(caps, np.float32)[:, None], (NP, 1))
-    sc = _pad_to(np.asarray(secs, np.float32), (NP, WP))
-    sz = _pad_to(np.asarray(sizes, np.float32)[:, None], (NP, 1))
-    cap = None if bandwidth_cap is None else float(bandwidth_cap)
-
-    def kernel(bk_ref, cp_ref, sc_ref, sz_ref, resid_ref, bw_ref, cum_ref, hit_ref):
-        resid = 1.0 - jnp.max(bk_ref[...], axis=1)
-        bw = resid * cp_ref[...]
-        if cap is not None:
-            bw = jnp.minimum(bw, cap)
-        cum = bw * sc_ref[...]
-        k = 1
-        while k < WP:  # Hillis–Steele inclusive prefix sum along the lanes
-            shifted = jnp.concatenate(
-                [jnp.zeros((BN, k), jnp.float32), cum[:, : WP - k]], axis=1
-            )
-            cum = cum + shifted
-            k *= 2
-        lane = jax.lax.broadcasted_iota(jnp.int32, (BN, WP), 1)
-        below = (cum < (sz_ref[...] - np.float32(EPS))) & (lane < W)
-        resid_ref[...] = resid
-        bw_ref[...] = bw
-        cum_ref[...] = cum
-        hit_ref[...] = jnp.sum(below.astype(jnp.int32), axis=1, keepdims=True)
-
-    grid = (NP // BN,)
-    resid, bw, cum, hit = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BN, LP, WP), lambda i: (i, 0, 0)),
-            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
-            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
-            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
-            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
-            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
-            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
-            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
-            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
-            jax.ShapeDtypeStruct((NP, 1), jnp.int32),
-        ],
-        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(bk, cp, sc, sz)
-    return (
-        np.asarray(resid)[:n, :W],
-        np.asarray(bw)[:n, :W],
-        np.asarray(cum)[:n, :W],
-        np.asarray(hit)[:n, 0],
+    return ts_plan_device.pallas_scan(
+        booked, caps, secs, sizes, bandwidth_cap, interpret
     )
 
 
-_BACKENDS = {"numpy": plan_scan_numpy, "pallas": plan_scan_pallas}
-_backend = os.environ.get("REPRO_TS_PLAN_BACKEND", "numpy")
+# -- backend selection -------------------------------------------------------
+
+_VALID_BACKENDS = ("numpy", "pallas", "auto")
+_backend = os.environ.get("REPRO_TS_PLAN_BACKEND", "auto")
+
+#: ``auto`` probes jax only once a call is big enough to possibly justify
+#: a device round-trip; smaller calls answer through numpy without ever
+#: importing jax (keeps the PEP 562 laziness of ``repro.kernels``).
+_AUTO_PROBE_CELLS = 1 << 15
+_auto: Optional[Tuple[bool, int]] = None  # (use device?, min cells)
 
 
 def set_backend(name: str) -> None:
-    if name not in _BACKENDS:
-        raise ValueError(f"unknown ts_plan backend {name!r} (want {sorted(_BACKENDS)})")
+    if name not in _VALID_BACKENDS:
+        raise ValueError(
+            f"unknown ts_plan backend {name!r} (want {sorted(_VALID_BACKENDS)})"
+        )
     global _backend
     _backend = name
 
@@ -189,7 +206,151 @@ def get_backend() -> str:
     return _backend
 
 
+def _resolve_auto() -> Tuple[bool, int]:
+    try:
+        from . import ts_plan_device
+
+        plat = ts_plan_device.platform()
+    except Exception:  # noqa: BLE001 — no jax: auto degrades to numpy
+        return (False, 0)
+    if plat != "cpu":
+        return (True, 0)
+    env = os.environ.get("REPRO_TS_PLAN_AUTO_CELLS")
+    if env:
+        return (True, int(env))
+    # XLA on the host CPU cannot beat the numpy kernel it would stand in
+    # for: the reference stays the default off-accelerator.
+    return (False, 0)
+
+
+def _use_device(cells: int) -> bool:
+    if _backend == "numpy":
+        return False
+    if _backend == "pallas":
+        return True
+    global _auto
+    if _auto is None:
+        if cells < _AUTO_PROBE_CELLS:
+            return False
+        _auto = _resolve_auto()
+    dev, floor = _auto
+    return dev and cells >= floor
+
+
+def device_stats() -> dict:
+    """Compile-cache / mirror counters of the device backend (empty when
+    it was never engaged) — reported by ``bench_sched_scale``."""
+    import sys
+
+    mod = sys.modules.get(__package__ + ".ts_plan_device")
+    return dict(mod.stats) if mod is not None else {}
+
+
 def plan_scan(booked, caps, secs, sizes, bandwidth_cap=None, overlay=None):
-    """Dispatch to the selected backend (numpy unless opted out)."""
-    return _BACKENDS[_backend](booked, caps, secs, sizes, bandwidth_cap,
-                               overlay)
+    """Dispatch to the selected backend (module docstring: the auto rule)."""
+    if _use_device(booked.size):
+        from . import ts_plan_device
+
+        return ts_plan_device.plan_scan(
+            booked, caps, secs, sizes, bandwidth_cap, overlay
+        )
+    return plan_scan_numpy(booked, caps, secs, sizes, bandwidth_cap, overlay)
+
+
+# -- fused pipelines ---------------------------------------------------------
+
+
+def _extract_end(dur, t0c, sizes, sz, cum, bw, hit, w):
+    """Plan-end extraction from scan curves — the exact tail arithmetic of
+    ``plan_transfer`` vectorized over candidates (``end = t_in +
+    remaining / bw[hit]``; unfit rows → inf, empty transfers → t0)."""
+    n = len(sizes)
+    ar = np.arange(n)
+    hidx = np.minimum(hit, w - 1)
+    before = np.where(hit > 0, cum[ar, np.maximum(hit - 1, 0)], 0.0)
+    t_in = np.maximum(t0c, (sz + hit) * dur)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        end = t_in + (sizes - before) / bw[ar, hidx]
+    end = np.where(hit < w, end, np.inf)
+    end = np.where(sizes <= 0, t0c, end)
+    return end
+
+
+def wave_scan_numpy(ledger, pad, caps, sz, t0c, sizes, w, first_secs):
+    """Reference wave pipeline: host gather (``booked_window``) → scan →
+    plan-end extraction.  ``sz`` is the per-candidate (frontier-skipped)
+    absolute scan-base slot, ``first_secs`` the usable seconds of each
+    candidate's first scanned slot."""
+    booked = ledger.booked_window(pad, sz, w)
+    n = len(caps)
+    secs = np.full((n, w), ledger.slot_duration)
+    secs[:, 0] = first_secs
+    resid, bw, cum, hit = plan_scan_numpy(booked, caps, secs, sizes)
+    end = _extract_end(ledger.slot_duration, t0c, sizes, sz, cum, bw, hit, w)
+    return resid, bw, cum, hit, end
+
+
+def wave_scan(ledger, pad, caps, sz, t0c, sizes, w, first_secs):
+    """The wavefront engine's fused per-wave pipeline: gather the
+    ``[n_cand, L, w]`` window (device-side from the ledger mirror when one
+    is live), scan, and extract plan ends — one call per wave.  Returns
+    ``(resid, bw, cum, hit, end)``, bit-identical across backends."""
+    if _use_device(pad.shape[0] * pad.shape[1] * w):
+        from . import ts_plan_device
+
+        return ts_plan_device.wave_scan(
+            ledger, pad, caps, sz, t0c, sizes, w, first_secs
+        )
+    return wave_scan_numpy(ledger, pad, caps, sz, t0c, sizes, w, first_secs)
+
+
+def col_scan(ledger, pad, cols, caps, secs, sizes):
+    """The reroute engine's compressed-column round: gather each
+    candidate's collected joint columns (``cols`` holds *absolute* slots)
+    and scan.  Device path gathers from the ledger mirror; the numpy path
+    is the reference gather expression, bit for bit."""
+    if _use_device(pad.shape[0] * pad.shape[1] * cols.shape[1]):
+        from . import ts_plan_device
+
+        return ts_plan_device.col_scan(ledger, pad, cols, caps, secs, sizes)
+    booked = ledger.reserved[
+        pad[:, :, None], (cols - ledger.base_slot)[:, None, :]
+    ]
+    return plan_scan_numpy(booked, caps, secs, sizes)
+
+
+def wave_select_numpy(
+    end: np.ndarray, rank: np.ndarray, counts: Sequence[int]
+) -> np.ndarray:
+    """Per-segment argmin of ``(end, rank)`` — the host winner loop.
+    ``rank`` is each candidate's precomputed position in its segment's
+    tie-break order, so minimizing ``(end, rank)`` equals minimizing the
+    scorer's full lexicographic key ``(end, hops, src, index)`` exactly
+    (float equality is exact; ranks are unique within a segment).
+    Returns the winner's *local* index per segment."""
+    out = np.empty(len(counts), dtype=np.int64)
+    pos = 0
+    for s, cnt in enumerate(counts):
+        best = pos
+        for c in range(pos + 1, pos + cnt):
+            if end[c] < end[best] or (
+                end[c] == end[best] and rank[c] < rank[best]
+            ):
+                best = c
+        out[s] = best - pos
+        pos += cnt
+    return out
+
+
+def wave_select(
+    end: np.ndarray, rank: np.ndarray, counts: Sequence[int]
+) -> np.ndarray:
+    """Winner selection over a wave's candidate segments — fused on
+    device (three ``segment_min`` passes) when the device backend is
+    forced, the host loop otherwise; tie-breaking parity is
+    contract-tested."""
+    if _use_device(len(end)):
+        from . import ts_plan_device
+
+        return ts_plan_device.wave_select(end, rank, counts)
+    return wave_select_numpy(end, rank, counts)

@@ -1,0 +1,663 @@
+"""Device-side fused planning pipelines and the ledger mirror (jax).
+
+This module is the implementation behind ``ts_plan``'s device backend —
+it is only ever imported lazily, from inside ``ts_plan`` entry points or
+directly by device-contract tests, so the numpy scheduling path never
+pays the jax import.
+
+Three layers live here:
+
+* **Compile cache** (:func:`_cached`): every jitted pipeline is built
+  once per *shape bucket* — candidate counts round up to the next power
+  of two (≥ 8), window widths arrive already exact (the engines escalate
+  in powers of 4) — and reused for the rest of the process.  ``stats``
+  counts built buckets (``traces``) vs reuses (``cache_hits``);
+  ``bench_sched_scale`` reports the hit rate.
+
+* **Fused float64 pipelines**: residue → bandwidth → sequential-scan
+  cumsum → searchsorted, optionally fused with the wavefront plan-end
+  extraction (:func:`wave_scan`) and the per-wave winner selection
+  (:func:`wave_select`), or with the reroute compressed-column gather
+  (:func:`col_scan`).  The cumsum is a ``lax.scan`` — a strict
+  sequential accumulation, which together with IEEE-exact elementwise
+  ops makes every output **bit-identical to the numpy reference on any
+  float64 input**.  Freshly padded input buffers are donated
+  (``donate_argnums``); the mirror array is donated only by the
+  operations that consume it (reindex/scatter), never by gathers.
+
+* **Ledger mirror** (:class:`DeviceMirror`): a device-resident copy of
+  ``TimeSlotLedger.reserved`` kept in step by a journal of cell writes
+  (the ledger's mutators call ``note_*`` with *final* cell values), so
+  per-wave gathers read device memory instead of re-uploading the
+  window.  See DESIGN.md §8 for the sync/invalidation contract.
+
+On a real TPU the float32 Pallas kernel (:func:`pallas_scan`, also
+compile-cached and jitted here) services ``plan_scan``; the fused f64
+XLA pipelines service every platform, and are what the forced
+``pallas`` backend runs off-TPU so that tier-1 parity holds bit-exactly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import ts_plan
+
+EPS = ts_plan.EPS
+
+#: Built buckets / reuses of the compile cache, plus mirror traffic.
+stats = {
+    "traces": 0,
+    "cache_hits": 0,
+    "mirror_syncs": 0,
+    "mirror_cells": 0,
+    "mirror_uploads": 0,
+}
+
+_cache: dict = {}
+_platform: Optional[str] = None
+_mirror_flag: Optional[bool] = None
+
+
+def available() -> bool:
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
+def platform() -> str:
+    """The default jax platform, resolved once per process."""
+    global _platform
+    if _platform is None:
+        from ._compat import default_backend
+
+        _platform = default_backend()
+    return _platform
+
+
+def set_mirror(value: Optional[bool]) -> None:
+    """Force the ledger mirror on/off (``None`` = re-derive from
+    ``REPRO_TS_PLAN_MIRROR`` / platform)."""
+    global _mirror_flag
+    _mirror_flag = value
+
+
+def mirror_enabled() -> bool:
+    if _mirror_flag is not None:
+        return _mirror_flag
+    env = os.environ.get("REPRO_TS_PLAN_MIRROR")
+    if env is not None:
+        return env not in ("", "0")
+    # On CPU a device_put is a real copy, so the mirror only pays off
+    # where device memory is actually separate (and gathers are fast).
+    return platform() != "cpu"
+
+
+def reset_cache() -> None:
+    """Drop compiled buckets and zero the counters (tests/benchmarks)."""
+    _cache.clear()
+    for k in stats:
+        stats[k] = 0
+
+
+def _cached(key, build):
+    fn = _cache.get(key)
+    if fn is None:
+        fn = _cache[key] = build()
+        stats["traces"] += 1
+    else:
+        stats["cache_hits"] += 1
+    return fn
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _x64():
+    from jax.experimental import enable_x64
+
+    return enable_x64()
+
+
+def _seq_cumsum(d):
+    """Bit-exact sequential inclusive cumsum along axis 1 (``jnp.cumsum``
+    reduces in tree order and is *not* bit-identical to numpy)."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(c, x):
+        c = c + x
+        return c, c
+
+    _, cum = jax.lax.scan(step, jnp.zeros(d.shape[0], d.dtype), d.T)
+    return cum.T
+
+
+# -- fused float64 scan pipelines -------------------------------------------
+
+
+def _scan_tail(bk, cp, sc, szv, cap, has_cap):
+    import jax.numpy as jnp
+
+    resid = 1.0 - jnp.max(bk, axis=1)
+    bw = resid * cp[:, None]
+    if has_cap:
+        bw = jnp.minimum(bw, cap)
+    cum = _seq_cumsum(bw * sc)
+    hit = jnp.sum(cum < (szv - EPS)[:, None], axis=1)
+    return resid, bw, cum, hit
+
+
+def _end_tail(cum, bw, hit, szslot, szv, t0, dur, w):
+    import jax.numpy as jnp
+
+    ar = jnp.arange(cum.shape[0])
+    hidx = jnp.minimum(hit, w - 1)
+    before = jnp.where(hit > 0, cum[ar, jnp.maximum(hit - 1, 0)], 0.0)
+    t_in = jnp.maximum(t0, (szslot + hit) * dur)
+    end = t_in + (szv - before) / bw[ar, hidx]
+    end = jnp.where(hit < w, end, jnp.inf)
+    end = jnp.where(szv <= 0, t0, end)
+    return end
+
+
+def _donate():
+    # Donating the freshly padded gather buffer saves an allocation on a
+    # real device; on CPU jax cannot use np-backed donations and warns.
+    return (0,) if platform() != "cpu" else ()
+
+
+def _build_scan(NP, L, W, has_cap):
+    import jax
+
+    def f(bk, cp, sc, szv, cap):
+        return _scan_tail(bk, cp, sc, szv, cap, has_cap)
+
+    return jax.jit(f, donate_argnums=_donate())
+
+
+def _build_wave(NP, WL, W, dur):
+    import jax
+
+    def f(bk, cp, sc, szv, szslot, t0):
+        resid, bw, cum, hit = _scan_tail(bk, cp, sc, szv, 0.0, False)
+        end = _end_tail(cum, bw, hit, szslot, szv, t0, dur, W)
+        return resid, bw, cum, hit, end
+
+    return jax.jit(f, donate_argnums=_donate())
+
+
+def _build_wave_mirror(NP, WL, W, Wb, dur):
+    import jax
+    import jax.numpy as jnp
+
+    def f(M, padp, off, cp, fs, szv, szslot, t0):
+        iota = jnp.arange(W)
+        bk = M[padp[:, :, None], off[:, None, None] + iota[None, None, :]]
+        sc = jnp.full((NP, W), dur)
+        sc = sc.at[:, 0].set(fs)
+        resid, bw, cum, hit = _scan_tail(bk, cp, sc, szv, 0.0, False)
+        end = _end_tail(cum, bw, hit, szslot, szv, t0, dur, W)
+        return resid, bw, cum, hit, end
+
+    return jax.jit(f)  # M is the live mirror: never donated by gathers
+
+
+def _build_col(NP, WL, Wm, Wb):
+    import jax
+    import jax.numpy as jnp
+
+    def f(M, padp, colp, cp, sc, szv):
+        bk = M[padp[:, :, None], colp[:, None, :]]
+        return _scan_tail(bk, cp, sc, szv, 0.0, False)
+
+    return jax.jit(f)
+
+
+def _build_select(NC, NS):
+    import jax
+    import jax.numpy as jnp
+
+    def f(end, rank, seg):
+        emin = jax.ops.segment_min(
+            end, seg, num_segments=NS + 1, indices_are_sorted=True
+        )
+        tie = end == emin[seg]
+        big = jnp.iinfo(rank.dtype).max
+        rmin = jax.ops.segment_min(
+            jnp.where(tie, rank, big),
+            seg,
+            num_segments=NS + 1,
+            indices_are_sorted=True,
+        )
+        pos = jnp.arange(NC)
+        cand = jnp.where(tie & (rank == rmin[seg]), pos, NC)
+        return jax.ops.segment_min(
+            cand, seg, num_segments=NS + 1, indices_are_sorted=True
+        )[:NS]
+
+    return jax.jit(f)
+
+
+def _pad64(x, shape, dtype=np.float64):
+    return ts_plan._pad_to(np.asarray(x, dtype), shape)
+
+
+def plan_scan(booked, caps, secs, sizes, bandwidth_cap=None, overlay=None):
+    """Fused device scan; bit-identical to ``plan_scan_numpy`` off-TPU
+    (float64 pipeline), float64-safe-exact on TPU (Pallas kernel)."""
+    if overlay is not None:
+        booked = np.maximum(booked, overlay)
+    if platform() == "tpu":
+        return ts_plan.plan_scan_pallas(booked, caps, secs, sizes, bandwidth_cap)
+    n, L, W = booked.shape
+    NP = _bucket(n)
+    bk = _pad64(booked, (NP, L, W))
+    cp = _pad64(caps, (NP,))
+    sc = _pad64(secs, (NP, W))
+    sz = _pad64(sizes, (NP,))
+    has_cap = bandwidth_cap is not None
+    fn = _cached(
+        ("scan", NP, L, W, has_cap), lambda: _build_scan(NP, L, W, has_cap)
+    )
+    with _x64():
+        resid, bw, cum, hit = fn(
+            bk, cp, sc, sz, 0.0 if bandwidth_cap is None else float(bandwidth_cap)
+        )
+        out = (
+            np.asarray(resid)[:n],
+            np.asarray(bw)[:n],
+            np.asarray(cum)[:n],
+            np.asarray(hit)[:n],
+        )
+    return out
+
+
+def wave_scan(ledger, pad, caps, sz, t0c, sizes, w, first_secs):
+    """Device wave pipeline: mirror gather (when live) → scan → plan-end
+    extraction, one fused jit call per shape bucket."""
+    dur = float(ledger.slot_duration)
+    if platform() == "tpu":
+        # f32 kernel path: host gather + Pallas scan + host end extraction.
+        booked = ledger.booked_window(pad, sz, w)
+        n = len(caps)
+        secs = np.full((n, w), dur)
+        secs[:, 0] = first_secs
+        resid, bw, cum, hit = ts_plan.plan_scan_pallas(booked, caps, secs, sizes)
+        end = ts_plan._extract_end(
+            dur, t0c, sizes, sz, np.asarray(cum, np.float64),
+            np.asarray(bw, np.float64), np.asarray(hit, np.int64), w,
+        )
+        return resid, bw, cum, hit, end
+    n, wl = pad.shape
+    NP = _bucket(n)
+    padp = ts_plan._pad_to(np.asarray(pad, np.int64), (NP, wl))
+    szp = ts_plan._pad_to(np.asarray(sz, np.int64), (NP,))
+    t0p = _pad64(t0c, (NP,))
+    szvp = _pad64(sizes, (NP,))
+    cpp = _pad64(caps, (NP,))
+    mir = _mirror_for(ledger)
+    if mir is not None:
+        ledger._ensure(int(szp.max()) + w - 1)
+        mir.sync()
+        off = np.maximum(szp - mir.base, 0)  # pad rows clamp to in-bounds
+        fsp = _pad64(first_secs, (NP,))
+        fn = _cached(
+            ("wave_m", NP, wl, w, mir.width, dur),
+            lambda: _build_wave_mirror(NP, wl, w, mir.width, dur),
+        )
+        with _x64():
+            resid, bw, cum, hit, end = fn(
+                mir.arr, padp, off, cpp, fsp, szvp, szp, t0p
+            )
+            out = tuple(np.asarray(a)[:n] for a in (resid, bw, cum, hit, end))
+        return out
+    booked = ledger.booked_window(pad, sz, w)
+    bk = _pad64(booked, (NP, wl, w))
+    secs = np.full((NP, w), dur)
+    secs[:n, 0] = first_secs
+    fn = _cached(("wave", NP, wl, w, dur), lambda: _build_wave(NP, wl, w, dur))
+    with _x64():
+        resid, bw, cum, hit, end = fn(bk, cpp, secs, szvp, szp, t0p)
+        out = tuple(np.asarray(a)[:n] for a in (resid, bw, cum, hit, end))
+    return out
+
+
+def col_scan(ledger, pad, cols, caps, secs, sizes):
+    """Device compressed-column round for the reroute engine."""
+    if platform() == "tpu":
+        booked = ledger.reserved[
+            pad[:, :, None], (cols - ledger.base_slot)[:, None, :]
+        ]
+        return ts_plan.plan_scan_pallas(booked, caps, secs, sizes)
+    mir = _mirror_for(ledger)
+    if mir is None:
+        booked = ledger.reserved[
+            pad[:, :, None], (cols - ledger.base_slot)[:, None, :]
+        ]
+        return plan_scan(booked, caps, secs, sizes)
+    n, wl = pad.shape
+    m = cols.shape[1]
+    ledger._ensure(int(cols.max()))
+    mir.sync()
+    NP = _bucket(n)
+    padp = ts_plan._pad_to(np.asarray(pad, np.int64), (NP, wl))
+    colp = ts_plan._pad_to(np.asarray(cols - mir.base, np.int64), (NP, m))
+    cpp = _pad64(caps, (NP,))
+    scp = _pad64(secs, (NP, m))
+    szvp = _pad64(sizes, (NP,))
+    fn = _cached(
+        ("col", NP, wl, m, mir.width), lambda: _build_col(NP, wl, m, mir.width)
+    )
+    with _x64():
+        resid, bw, cum, hit = fn(mir.arr, padp, colp, cpp, scp, szvp)
+        out = tuple(np.asarray(a)[:n] for a in (resid, bw, cum, hit))
+    return out
+
+
+def wave_select(
+    end: np.ndarray, rank: np.ndarray, counts: Sequence[int]
+) -> np.ndarray:
+    """Fused per-segment argmin of ``(end, rank)`` — three sorted
+    ``segment_min`` passes (min end; min rank among exact-float end ties;
+    the unique position carrying both minima).  Exactly the host loop:
+    float equality is exact and ranks are unique within a segment."""
+    nc = len(end)
+    ns = len(counts)
+    NC = _bucket(nc)
+    NS = _bucket(ns)
+    seg = np.full(NC, NS, np.int64)
+    seg[:nc] = np.repeat(np.arange(ns, dtype=np.int64), counts)
+    ep = np.full(NC, np.inf)
+    ep[:nc] = end
+    rp = np.full(NC, np.iinfo(np.int64).max, np.int64)
+    rp[:nc] = rank
+    fn = _cached(("sel", NC, NS), lambda: _build_select(NC, NS))
+    with _x64():
+        win = np.asarray(fn(ep, rp, seg))[:ns]
+    starts = np.zeros(ns, np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return win - starts
+
+
+# -- Pallas kernel (float32), compile-cached --------------------------------
+
+
+def _build_pallas(NP, LP, WP, W, cap, interpret):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from ._compat import CompilerParams
+
+    BN = 8
+
+    def kernel(bk_ref, cp_ref, sc_ref, sz_ref, resid_ref, bw_ref, cum_ref, hit_ref):
+        resid = 1.0 - jnp.max(bk_ref[...], axis=1)
+        bw = resid * cp_ref[...]
+        if cap is not None:
+            bw = jnp.minimum(bw, cap)
+        cum = bw * sc_ref[...]
+        k = 1
+        while k < WP:  # Hillis–Steele inclusive prefix sum along the lanes
+            shifted = jnp.concatenate(
+                [jnp.zeros((BN, k), jnp.float32), cum[:, : WP - k]], axis=1
+            )
+            cum = cum + shifted
+            k *= 2
+        lane = jax.lax.broadcasted_iota(jnp.int32, (BN, WP), 1)
+        below = (cum < (sz_ref[...] - np.float32(EPS))) & (lane < W)
+        resid_ref[...] = resid
+        bw_ref[...] = bw
+        cum_ref[...] = cum
+        hit_ref[...] = jnp.sum(below.astype(jnp.int32), axis=1, keepdims=True)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(NP // BN,),
+        in_specs=[
+            pl.BlockSpec((BN, LP, WP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, WP), lambda i: (i, 0)),
+            pl.BlockSpec((BN, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, WP), jnp.float32),
+            jax.ShapeDtypeStruct((NP, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )
+    # jit so each bucket traces once (interpret mode re-runs the python
+    # kernel body per call otherwise — the dominant per-call cost).
+    return jax.jit(call)
+
+
+def pallas_scan(booked, caps, secs, sizes, bandwidth_cap, interpret):
+    """Padded, compile-cached entry behind ``ts_plan.plan_scan_pallas``.
+    ``bandwidth_cap`` is baked into the kernel body as a static constant,
+    so its value is part of the cache key."""
+    n, L, W = booked.shape
+    BN, LP = 8, max(8, L)
+    WP = max(128, -(-W // 128) * 128)
+    NP = -(-n // BN) * BN
+    bk = ts_plan._pad_to(np.asarray(booked, np.float32), (NP, LP, WP))
+    cp = ts_plan._pad_to(np.asarray(caps, np.float32)[:, None], (NP, 1))
+    sc = ts_plan._pad_to(np.asarray(secs, np.float32), (NP, WP))
+    sz = ts_plan._pad_to(np.asarray(sizes, np.float32)[:, None], (NP, 1))
+    cap = None if bandwidth_cap is None else float(bandwidth_cap)
+    fn = _cached(
+        ("pallas", NP, LP, WP, W, cap, bool(interpret)),
+        lambda: _build_pallas(NP, LP, WP, W, cap, interpret),
+    )
+    resid, bw, cum, hit = fn(bk, cp, sc, sz)
+    return (
+        np.asarray(resid)[:n, :W],
+        np.asarray(bw)[:n, :W],
+        np.asarray(cum)[:n, :W],
+        np.asarray(hit)[:n, 0],
+    )
+
+
+# -- device-resident ledger mirror ------------------------------------------
+
+
+def _build_reindex(Win, Wb):
+    import jax
+    import jax.numpy as jnp
+
+    def f(a, drop):
+        return jnp.take(
+            a, drop + jnp.arange(Wb), axis=1, mode="fill", fill_value=0.0
+        )
+
+    # The old mirror array is consumed here: donate it (off-CPU).
+    return jax.jit(f, donate_argnums=_donate())
+
+
+def _build_scatter(Wb, K):
+    import jax
+
+    def f(a, r, c, v):
+        return a.at[r, c].set(v, mode="drop")
+
+    # The old mirror array is consumed here: donate it (off-CPU).
+    return jax.jit(f, donate_argnums=_donate())
+
+
+def _mirror_for(ledger):
+    if not mirror_enabled():
+        return None
+    return ledger.device_mirror()
+
+
+class DeviceMirror:
+    """Device-resident copy of a ledger's live ``reserved`` window.
+
+    The ledger's mutators journal every cell write (``note_flat`` /
+    ``note_grid``) with the *final* post-clamp value; :meth:`sync` folds
+    the journal into the device array with one keep-last dedup and one
+    donated scatter, re-basing for origin shifts (DESIGN.md §7) with a
+    donated ``take``.  Direct writes that bypass the mutators must call
+    :meth:`invalidate` (``TimeSlotLedger.mirror_invalidate``) — the next
+    sync then re-uploads the full window.  See DESIGN.md §8.
+    """
+
+    def __init__(self, ledger):
+        self._ledger = ledger
+        self._arr = None
+        self._base = 0
+        self._width = 0  # device width (pow-2 bucket of the ledger width)
+        self._rows: list = []
+        self._slots: list = []
+        self._vals: list = []
+        self._cells = 0
+        self._stale = True
+
+    @property
+    def base(self) -> int:
+        return self._base
+
+    @property
+    def width(self) -> int:
+        return self._width
+
+    @property
+    def arr(self):
+        return self._arr
+
+    # -- journal hooks (ledger mutators; slots are absolute) ----------------
+    def note_flat(self, rows, slots, vals) -> None:
+        if self._stale:
+            return
+        rows = np.asarray(rows, np.int64).ravel()
+        self._rows.append(rows)
+        self._slots.append(np.asarray(slots, np.int64).ravel())
+        self._vals.append(np.asarray(vals, np.float64).ravel())
+        self._cells += rows.size
+        # Pressure valve: past a quarter of the window, one upload is
+        # cheaper than the journal bookkeeping.
+        if self._cells * 4 > self._ledger.reserved.size:
+            self.invalidate()
+
+    def note_grid(self, rows, slots, vals) -> None:
+        """An outer-product write: ``reserved[rows][:, slots] = vals``
+        with ``vals`` of shape ``[len(rows), len(slots)]``."""
+        if self._stale:
+            return
+        rows = np.asarray(rows, np.int64).ravel()
+        slots = np.asarray(slots, np.int64).ravel()
+        self.note_flat(
+            np.repeat(rows, slots.size),
+            np.tile(slots, rows.size),
+            np.asarray(vals, np.float64).ravel(),
+        )
+
+    def invalidate(self) -> None:
+        self._rows.clear()
+        self._slots.clear()
+        self._vals.clear()
+        self._cells = 0
+        self._stale = True
+
+    # -- sync ---------------------------------------------------------------
+    def sync(self) -> None:
+        """Bring the device window up to date with the ledger (journal
+        replay, or full re-upload after invalidation / shrink)."""
+        import jax  # noqa: F401
+
+        led = self._ledger
+        res = led.reserved
+        nrows, W = res.shape
+        base = led.base_slot
+        Wb = _bucket(W, 256)
+        stats["mirror_syncs"] += 1
+        if (
+            self._stale
+            or self._arr is None
+            or Wb < self._width
+            or self._arr.shape[0] != nrows
+            or base < self._base
+        ):
+            self._upload(res, Wb, base)
+            return
+        arr = self._arr
+        if base != self._base or Wb != self._width:
+            drop = base - self._base
+            fn = _cached(
+                ("reidx", self._width, Wb),
+                lambda: _build_reindex(self._width, Wb),
+            )
+            with _x64():
+                arr = fn(arr, np.int64(drop))
+        if self._rows:
+            rows = np.concatenate(self._rows)
+            cc = np.concatenate(self._slots) - base
+            vals = np.concatenate(self._vals)
+            keep = cc >= 0  # retired cells fell off the window
+            if not keep.all():
+                rows, cc, vals = rows[keep], cc[keep], vals[keep]
+            if rows.size:
+                # Keep-last dedup: the journal holds final values, so the
+                # latest note for a cell wins.
+                keys = rows * np.int64(Wb) + cc
+                _u, idx = np.unique(keys[::-1], return_index=True)
+                sel = keys.size - 1 - idx
+                K = _bucket(sel.size, 64)
+                rp = np.zeros(K, np.int64)
+                cp = np.full(K, Wb, np.int64)  # pad cols drop in-scatter
+                vp = np.zeros(K, np.float64)
+                rp[: sel.size] = rows[sel]
+                cp[: sel.size] = cc[sel]
+                vp[: sel.size] = vals[sel]
+                fn = _cached(
+                    ("scat", Wb, K), lambda: _build_scatter(Wb, K)
+                )
+                with _x64():
+                    arr = fn(arr, rp, cp, vp)
+                stats["mirror_cells"] += int(sel.size)
+            self._rows.clear()
+            self._slots.clear()
+            self._vals.clear()
+            self._cells = 0
+        self._arr = arr
+        self._base = base
+        self._width = Wb
+
+    def _upload(self, res, Wb, base) -> None:
+        import jax
+
+        buf = np.zeros((res.shape[0], Wb))
+        buf[:, : res.shape[1]] = res
+        with _x64():
+            self._arr = jax.device_put(buf)
+        self._base = base
+        self._width = Wb
+        self._rows.clear()
+        self._slots.clear()
+        self._vals.clear()
+        self._cells = 0
+        self._stale = False
+        stats["mirror_uploads"] += 1
+
+    def host_view(self) -> np.ndarray:
+        """Host copy of the device window, trimmed to the ledger width
+        (test hook: must equal ``ledger.reserved`` after ``sync``)."""
+        W = self._ledger.reserved.shape[1]
+        return np.asarray(self._arr)[:, :W]

@@ -305,6 +305,15 @@ def test_ts_plan_hit_is_searchsorted():
 
 
 def test_ts_plan_backend_selection():
-    assert ts_plan.get_backend() == "numpy"
+    # "auto" is the shipped default; CI legs force "numpy"/"pallas" via env.
+    cur = ts_plan.get_backend()
+    assert cur in ("numpy", "pallas", "auto")
     with pytest.raises(ValueError):
         ts_plan.set_backend("nope")
+    assert ts_plan.get_backend() == cur
+    try:
+        for name in ("numpy", "pallas", "auto"):
+            ts_plan.set_backend(name)
+            assert ts_plan.get_backend() == name
+    finally:
+        ts_plan.set_backend(cur)
