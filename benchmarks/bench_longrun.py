@@ -259,28 +259,12 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
-        import json
-        import os
-
         try:  # as a module (benchmarks.run) vs standalone script (CI)
-            from benchmarks.bench_sched_scale import git_sha
+            from benchmarks.bench_sched_scale import append_json
         except ImportError:
-            from bench_sched_scale import git_sha
+            from bench_sched_scale import append_json
 
-        sha = git_sha()
-        out = []
-        if os.path.exists(args.json):
-            with open(args.json) as f:
-                out = json.load(f)
-        out.extend(
-            {"name": r[0], "us_per_call": float(r[1]),
-             "derived": r[2] if isinstance(r[2], str) else float(r[2]),
-             "git_sha": sha}
-            for r in rows
-        )
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=1)
-            f.write("\n")
+        append_json(rows, args.json)
 
 
 if __name__ == "__main__":

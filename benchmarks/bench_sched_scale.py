@@ -66,6 +66,37 @@ def write_json(rows, path: str) -> None:
         f.write("\n")
 
 
+def append_json(rows, path: str) -> None:
+    """Merge benchmark rows into an existing artifact, deduping by
+    (name, git sha): a re-run at the same commit *replaces* its old rows
+    instead of growing the file unboundedly, while rows from other
+    commits (the perf trajectory) and other benches are preserved.
+    Backend variants keep distinct names (``…_numpy``/``…_pallas``), so
+    the (name, sha) key already separates them."""
+    import json
+    import os
+
+    sha = git_sha()
+    new = [
+        {"name": r[0], "us_per_call": float(r[1]),
+         "derived": r[2] if isinstance(r[2], str) else float(r[2]),
+         "git_sha": sha}
+        for r in rows
+    ]
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    fresh = {(r["name"], r["git_sha"]) for r in new}
+    out = [
+        r for r in existing
+        if (r.get("name"), r.get("git_sha")) not in fresh
+    ] + new
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
 def fleet_instance(pods: int, hosts: int, n_tasks: int) -> Instance:
     n_hosts = pods * hosts
     fab = tpu_dcn_fabric(n_pods=pods, hosts_per_pod=hosts)
@@ -156,7 +187,7 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
-        write_json(rows, args.json)
+        append_json(rows, args.json)
     if args.smoke:
         name, _us, derived = rows[0]  # the numpy leg guards the floor
         if derived < SMOKE_FLOOR_TASKS_PER_S:

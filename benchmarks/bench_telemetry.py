@@ -1,0 +1,322 @@
+"""Telemetry-staleness benchmark: belief-scheduled vs oracle BASS.
+
+Background-churn workload on a k=4 fat-tree (16 hosts, real path
+diversity): a stream of jobs with storage-skewed replicas arrives while
+bursty near-saturating background flows come and go and one edge→agg
+link fails and recovers mid-run.  Legs:
+
+* ``telemetry_oracle`` — plain BASS reading the TS ledger as ground
+  truth, with a :class:`~repro.net.telemetry.LinkStatsMonitor` attached
+  (monitoring alone must not change schedules — asserted byte-exactly
+  against a monitor-less twin, the ``telemetry_parity_off`` row).
+* ``telemetry_<estimator>_p<interval>`` — ``BassPolicy(telemetry=True)``
+  scoring candidates against the measured-bandwidth belief refreshed
+  every ``interval`` sim-seconds by an EWMA or sliding-window estimator,
+  averaged over a few workload seeds.  ``derived`` reports makespan,
+  mean job completion, and the ratio to the oracle leg.
+* ``telemetry_staleness_probe`` — a deterministic 4-host scenario where
+  the staleness failure mode is unambiguous: a saturating flow starts
+  *after* the last poll, so a stale belief confidently routes a transfer
+  into the saturated trunk (finish ≈ 44 s) while the oracle — and a
+  belief polled frequently enough to catch the onset — keeps the task
+  local (finish 13 s).
+
+An honest finding the churn sweep surfaces (DESIGN.md §9): the oracle
+is a *reference*, not an upper bound.  Greedy BASS drives each task to
+its selfish best response against the true ledger; under replica skew
+plus churn those truthful per-task choices over-offload and serialize
+uplinks, so a chronically-pessimistic belief that hugs locality can
+*beat* the oracle on mean job completion (classic price-of-anarchy
+shape).  The probe row is where "stale = worse" is guaranteed; the
+sweep reports whatever the measured regime actually does.
+
+CSV: ``name,us_per_call,derived`` (us_per_call = wall µs per placed
+task).  ``--json`` merges rows into the shared ``BENCH_SCHED.json``
+artifact; ``--snapshot PATH`` dumps the oracle controller's full obs
+snapshot (controller / wavefront / reroute / ledger / kernels /
+telemetry sections + decision trace) as JSON — the observability-plane
+artifact CI uploads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.controller import BassPolicy, ClusterController
+from repro.core.tasks import BackgroundFlow, Task
+from repro.net import fat_tree_fabric
+
+#: Edge→agg link killed mid-run: every victim has a surviving path via
+#: the pod's other aggregation switch, so the reroute engine (not an
+#: UnroutableError) handles the storm.
+FAIL_LINK = "ea/p0e0a0"
+FAIL_AT, RECOVER_AT = 8.0, 20.0
+
+POLL_INTERVALS = [0.5, 1.0, 2.0, 4.0, 8.0]
+SMOKE_POLL_INTERVALS = [1.0, 4.0]
+ESTIMATORS = ["ewma", "window"]
+
+
+def _hosts(k: int = 4) -> list:
+    half = k // 2
+    return [
+        f"pod{p}/h{e}_{i}"
+        for p in range(k)
+        for e in range(half)
+        for i in range(half)
+    ]
+
+
+def _jobs(hosts, n_jobs: int, n_tasks: int, gap: float = 8.0, seed: int = 7):
+    """Job stream: (arrival, [tasks]), replicas concentrated on the first
+    half of the hosts (hot HDFS storage nodes).  Arrival rate is sized so
+    the *whole* cluster is feasible but the storage half alone is not:
+    roughly half the tasks must offload to the idle compute half to keep
+    up, so Algorithm 1's remote-vs-local bandwidth tradeoff fires
+    constantly, through uplinks the churn keeps flapping.  (Oversubscribe
+    the stream and the comparison inverts: under hopeless overload a
+    chronically-pessimistic belief that hugs locality wastes the least
+    bandwidth and beats the greedy oracle.)"""
+    rng = np.random.default_rng(seed)
+    storage = hosts[: len(hosts) // 2]
+    out = []
+    tid = 0
+    for j in range(n_jobs):
+        tasks = []
+        for _ in range(n_tasks):
+            reps = tuple(rng.choice(storage, size=2, replace=False))
+            tasks.append(
+                Task(
+                    tid,
+                    float(rng.integers(100, 400)),  # Mbit on 100 Mbps links
+                    float(rng.integers(4, 10)),     # compute seconds
+                    reps,
+                )
+            )
+            tid += 1
+        out.append((j * gap, tasks))
+    return out
+
+
+def _churn(hosts, n_flows: int, span: float, seed: int = 11):
+    """Background cross-traffic the belief has to chase: *bursts* of
+    near-saturating flows out of the storage half toward the compute half
+    — exactly the uplinks remote placements need.  Bursts, not steady
+    load: a link that looked idle at the last poll saturates moments
+    later, so a stale belief confidently routes transfers into a wall
+    (the oracle's plan sees the booked burst and schedules around it),
+    while a fresh belief catches the onset.  Steady dense churn would do
+    the opposite — a chronically-pessimistic belief hugs locality and
+    accidentally beats the greedy oracle."""
+    rng = np.random.default_rng(seed)
+    storage = hosts[: len(hosts) // 2]
+    compute = hosts[len(hosts) // 2:]
+    flows = []
+    for _ in range(n_flows):
+        src = str(rng.choice(storage))
+        dst = str(rng.choice(compute))
+        start = float(rng.uniform(0.0, span))
+        flows.append(
+            BackgroundFlow(
+                src,
+                dst,
+                float(rng.uniform(0.88, 0.98)),
+                start,
+                start + float(rng.uniform(2.0, 5.0)),
+            )
+        )
+    return flows
+
+
+def _canon(assignments):
+    """Bit-exact image of a schedule (floats via ``hex``)."""
+    out = []
+    for a in sorted(assignments, key=lambda a: a.tid):
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source,
+            a.start.hex(), a.finish.hex(),
+            None if t is None else (
+                t.links, float(t.start).hex(), float(t.end).hex(),
+                tuple((s, float(f).hex()) for s, f in t.slot_fracs),
+            ),
+        ))
+    return tuple(out)
+
+
+def _run_stream(policy, jobs, flows, attach=None, trace=False):
+    """One controller run over the churn workload; returns (ctrl, mk, dt)."""
+    fabric = fat_tree_fabric(4, link_mbps=100.0)
+    hosts = _hosts(4)
+    ctrl = ClusterController(fabric, hosts, policy)
+    if attach is not None:
+        poll_interval, estimator = attach
+        ctrl.attach_telemetry(poll_interval=poll_interval, estimator=estimator)
+    if trace:
+        ctrl.obs.trace.enable()
+    for at, tasks in jobs:
+        ctrl.submit(tasks, at=at)
+    for fl in flows:
+        ctrl.inject_flow(fl)
+    ctrl.fail_link(FAIL_LINK, at=FAIL_AT)
+    ctrl.recover_link(FAIL_LINK, at=RECOVER_AT)
+    t0 = time.perf_counter()
+    ctrl.run()
+    dt = time.perf_counter() - t0
+    sched = ctrl.schedule()
+    mk = max((a.finish for a in sched.assignments), default=0.0)
+    # Mean job completion (JT) is the staleness-sensitive metric: a few
+    # belief-misrouted transfers stretch their own jobs long before they
+    # move the whole stream's makespan.
+    jt = float(np.mean([ctrl.job_metrics(j).jt for j in ctrl.jobs]))
+    return ctrl, sched, (mk, jt), dt
+
+
+def _probe(poll_interval: float, telemetry: bool, **est_kwargs) -> float:
+    """Deterministic staleness probe: H0–H2 busy for 10 s, H3 idle; a
+    flow saturating H0's uplink starts at t=0.5 — *after* the initial
+    poll — and the single task (only replica on H0) arrives at t=1.
+    Truth says: stay local on H0, finish 10+3=13.  A belief last polled
+    at t=0 believes the fabric is idle, offloads to H3, and the commit
+    plan on the true ledger crawls at the 5% residual.  Returns the
+    task's finish time."""
+    from repro.core.topology import two_tier_fabric
+
+    hosts = ["H0", "H1", "H2", "H3"]
+    ctrl = ClusterController(
+        two_tier_fabric(2, 2),
+        hosts,
+        BassPolicy(telemetry=telemetry),
+        idle={"H0": 10.0, "H1": 10.0, "H2": 10.0, "H3": 0.0},
+    )
+    ctrl.attach_telemetry(poll_interval=poll_interval, **est_kwargs)
+    ctrl.inject_flow(BackgroundFlow("H0", "H2", 0.95, 0.5, 50.0))
+    ctrl.submit([Task(0, 200.0, 3.0, ("H0",))], at=1.0)
+    ctrl.run()
+    (a,) = ctrl.schedule().assignments
+    return a.finish
+
+
+def run(smoke: bool = False, snapshot: str | None = None) -> list:
+    n_jobs, n_tasks, n_flows = (4, 8, 10) if smoke else (10, 12, 30)
+    intervals = SMOKE_POLL_INTERVALS if smoke else POLL_INTERVALS
+    seeds = [(7, 11)] if smoke else [(7, 11), (8, 12)]
+    hosts = _hosts(4)
+    span = n_jobs * 10.0
+    streams = [
+        (_jobs(hosts, n_jobs, n_tasks, seed=js),
+         _churn(hosts, n_flows, span=span, seed=fs))
+        for js, fs in seeds
+    ]
+    total = n_jobs * n_tasks
+    rows = []
+
+    # Oracle baseline, monitor attached (telemetry counters tick, policy
+    # never reads the belief) + byte-identity proof against a bare twin.
+    oracle = []
+    ctrl0 = None
+    for i, (jobs, flows) in enumerate(streams):
+        ctrl, sched, (mk, jt), dt = _run_stream(
+            BassPolicy(), jobs, flows, attach=(1.0, "ewma"), trace=(i == 0)
+        )
+        assert len(sched.assignments) == total
+        oracle.append((mk, jt, dt))
+        if i == 0:
+            ctrl0 = ctrl
+            _, sched_bare, _, _ = _run_stream(BassPolicy(), jobs, flows)
+            if _canon(sched.assignments) != _canon(sched_bare.assignments):
+                raise SystemExit(
+                    "telemetry-off parity violated: attaching a monitor "
+                    "changed the oracle schedule"
+                )
+    mk0, jt0, dt0 = (float(np.mean([o[k] for o in oracle]))
+                     for k in range(3))
+    rows.append(("telemetry_oracle", dt0 / total * 1e6,
+                 f"mk={mk0:.2f};mean_jt={jt0:.2f};seeds={len(seeds)}"))
+    rows.append(("telemetry_parity_off", 0.0,
+                 f"byte-identical ({total} tasks, monitor on vs off)"))
+
+    # Belief legs: estimator x poll interval, averaged over the seeds.
+    for est in ESTIMATORS:
+        for poll in intervals:
+            mks, jts, dts, polls = [], [], [], 0
+            for jobs, flows in streams:
+                ctrl, sched, (mk, jt), dt = _run_stream(
+                    BassPolicy(telemetry=True), jobs, flows,
+                    attach=(poll, est),
+                )
+                assert len(sched.assignments) == total
+                assert np.isfinite(mk)
+                mks.append(mk)
+                jts.append(jt)
+                dts.append(dt)
+                polls = ctrl.telemetry.stats["polls"]
+            mk, jt = float(np.mean(mks)), float(np.mean(jts))
+            rows.append((
+                f"telemetry_{est}_p{poll:g}",
+                float(np.mean(dts)) / total * 1e6,
+                f"mk={mk:.2f};mean_jt={jt:.2f};vs_oracle={jt / jt0:.3f}"
+                f";polls={polls}",
+            ))
+
+    # Deterministic staleness probe: stale belief pays, fresh belief and
+    # oracle agree.  These are exact event-driven outcomes, so assert the
+    # ordering rather than eyeballing it.
+    f_oracle = _probe(100.0, telemetry=False)
+    f_stale = _probe(100.0, telemetry=True)
+    # alpha=1 = instantaneous estimator: at the poll the belief equals the
+    # ledger's occupancy bit-for-bit (the zero-staleness contract), so a
+    # 0.25 s cadence catches the burst onset and agrees with the oracle.
+    f_fresh = _probe(0.25, telemetry=True, alpha=1.0)
+    assert f_stale > f_oracle + 10.0, (f_oracle, f_stale)
+    assert abs(f_fresh - f_oracle) < 1e-9, (f_oracle, f_fresh)
+    rows.append((
+        "telemetry_staleness_probe", 0.0,
+        f"oracle_finish={f_oracle:g};stale_finish={f_stale:g};"
+        f"fresh_poll_finish={f_fresh:g}",
+    ))
+
+    if snapshot:
+        snap = ctrl0.obs.snapshot()
+        required = ("controller.", "wavefront.", "reroute.", "telemetry.")
+        have = snap["counters"]
+        missing = [p for p in required
+                   if not any(k.startswith(p) for k in have)]
+        for section in ("ledger", "kernels", "jobs", "telemetry"):
+            if section not in snap:
+                missing.append(section)
+        if missing:
+            raise SystemExit(f"obs snapshot incomplete, missing: {missing}")
+        with open(snapshot, "w") as f:
+            json.dump(snap, f, indent=1, default=str)
+            f.write("\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: fewer jobs/flows and 2 poll intervals")
+    ap.add_argument("--json", metavar="PATH",
+                    help="merge machine-readable rows into the shared "
+                         "benchmark artifact (dedupes by name + git sha)")
+    ap.add_argument("--snapshot", metavar="PATH",
+                    help="dump the oracle controller's obs snapshot JSON")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, snapshot=args.snapshot)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        try:  # as a module (benchmarks.run) vs standalone script (CI)
+            from benchmarks.bench_sched_scale import append_json
+        except ImportError:
+            from bench_sched_scale import append_json
+
+        append_json(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

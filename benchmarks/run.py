@@ -17,6 +17,9 @@
 * bench_longrun     — beyond-paper: ≥100k-slot steady state (router, grad
                       sync, job stream) — bounded ledger memory and flat
                       per-submit latency under rolling-horizon compaction
+* bench_telemetry   — beyond-paper: belief-scheduled vs oracle BASS under
+                      background churn (telemetry-off parity, staleness
+                      probe, poll-interval sweep, obs snapshot)
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -35,8 +38,9 @@ from . import (
     bench_roofline,
     bench_sched_scale,
     bench_table1,
+    bench_telemetry,
 )
-from .bench_sched_scale import write_json
+from .bench_sched_scale import append_json
 
 MODULES = [
     bench_discussion1,
@@ -48,6 +52,7 @@ MODULES = [
     bench_multipath,
     bench_failover_scale,
     bench_longrun,
+    bench_telemetry,
     bench_roofline,
 ]
 
@@ -55,8 +60,9 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH",
-                    help="also write every row as machine-readable JSON "
-                         "(name, us_per_call, derived, git sha)")
+                    help="also merge every row into a machine-readable JSON "
+                         "artifact (name, us_per_call, derived, git sha; "
+                         "re-runs at the same sha replace their old rows)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
@@ -70,7 +76,7 @@ def main() -> None:
             failures += 1
             print(f"{mod.__name__},ERROR,{type(e).__name__}:{e}", flush=True)
     if args.json:
-        write_json(rows, args.json)
+        append_json(rows, args.json)
     if failures:
         sys.exit(1)
 

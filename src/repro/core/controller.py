@@ -37,6 +37,7 @@ from typing import (
     Tuple,
 )
 
+from ..obs import Registry
 from .tasks import (
     Assignment,
     BackgroundFlow,
@@ -49,6 +50,14 @@ from .timeslot import TimeSlotLedger, TransferPlan
 from .topology import Fabric, UnroutableError
 
 _EPS = 1e-9
+
+
+def _believed_tm(belief, rows, size: float, at: float) -> float:
+    """Estimated transfer time from a flat belief: size / believed BW_rl."""
+    if size <= 0.0:
+        return 0.0
+    bw = belief.path_bandwidth(rows, at)
+    return size / bw if bw > _EPS else float("inf")
 
 
 class MinnowHeap:
@@ -128,6 +137,7 @@ def choose_source(
     ledger: TimeSlotLedger,
     at: float,
     load: Optional[Dict[str, float]] = None,
+    belief=None,
 ) -> Tuple[str, Tuple[int, ...]]:
     """Choose the replica to move data *from* (``ND_dataSrc``).
 
@@ -135,12 +145,15 @@ def choose_source(
     bandwidth at transfer time (ties: fewer hops, then name); with ``load``
     given (Pre-BASS, Discussion 2) the least-loaded holder wins first.  All
     candidate (source, destination) pairs are scored in one numpy pass via
-    :meth:`TimeSlotLedger.path_bandwidth_batch`.
+    :meth:`TimeSlotLedger.path_bandwidth_batch`.  With ``belief`` given
+    (telemetry mode) candidates are ranked by the *estimated* residual
+    bandwidth instead of oracle ledger state — same query surface, stale
+    answers (DESIGN.md §9).
     """
     cands = [rep for rep in task.replicas if rep != dst]
     assert cands, f"task {task.tid} has no off-node replica"
     rows_list = [ledger.path_rows(rep, dst) for rep in cands]
-    bws = ledger.path_bandwidth_batch(rows_list, at)
+    bws = (ledger if belief is None else belief).path_bandwidth_batch(rows_list, at)
     best = min(
         range(len(cands)),
         key=lambda i: (
@@ -208,6 +221,13 @@ class ClusterState:
         #: path choices route around dead links; with no failures the code
         #: paths below are byte-identical to the dataplane-less ones.
         self.dataplane = None
+        #: Per-state observability registry (``repro.obs``): the wavefront
+        #: planner, reroute engine and controller all report through it.
+        self.obs = Registry()
+        #: Optional telemetry belief (``repro.net.telemetry.BeliefState``),
+        #: attached by ClusterController.attach_telemetry.  Only consulted
+        #: by policies constructed with ``telemetry=True``.
+        self.belief = None
 
     @classmethod
     def from_instance(
@@ -238,9 +258,11 @@ class ClusterState:
         dst: str,
         at: float,
         load: Optional[Dict[str, float]] = None,
+        belief=None,
     ) -> Tuple[str, Tuple[int, ...]]:
         if not self._routing_live():
-            return choose_source(task, dst, self.ledger, at, load=load)
+            return choose_source(task, dst, self.ledger, at, load=load,
+                                 belief=belief)
         # Failure-aware single-path: each replica contributes its best
         # surviving path; dead replicas drop out of the candidate set.
         cands: List[str] = []
@@ -260,7 +282,9 @@ class ClusterState:
             raise UnroutableError(
                 f"task {task.tid}: no replica has a surviving path to {dst!r}"
             )
-        bws = self.ledger.path_bandwidth_batch(rows_list, at)
+        bws = (self.ledger if belief is None else belief).path_bandwidth_batch(
+            rows_list, at
+        )
         best = min(
             range(len(cands)),
             key=lambda i: (
@@ -280,6 +304,7 @@ class ClusterState:
         load: Optional[Dict[str, float]] = None,
         k: Optional[int] = None,
         size: Optional[float] = None,
+        belief=None,
     ) -> Tuple[str, Tuple[int, ...], TransferPlan]:
         """Multipath ``ND_dataSrc``: greedily plan the transfer on *every*
         surviving (replica, path) pair in one
@@ -292,7 +317,8 @@ class ClusterState:
         one.  ``size`` overrides ``task.size`` (rerouting scores the
         *remaining* bytes)."""
         if self.dataplane is None:
-            src, rows = self.choose_source(task, dst, at, load=load)
+            src, rows = self.choose_source(task, dst, at, load=load,
+                                           belief=belief)
             plan = self.ledger.plan_transfer(
                 task.size if size is None else size, rows, not_before=at
             )
@@ -311,8 +337,27 @@ class ClusterState:
             raise UnroutableError(
                 f"task {task.tid}: no replica has a surviving path to {dst!r}"
             )
+        sz = task.size if size is None else size
+        if belief is not None:
+            # Telemetry mode: rank every pair by its *estimated* completion
+            # (size / believed residual bandwidth, flat in time) and plan
+            # only the winner on the true ledger — belief can misrank, the
+            # realized transfer still books real residue (DESIGN.md §9).
+            bws = belief.path_bandwidth_batch([r for _, _, r in pairs], at)
+            best = min(
+                range(len(pairs)),
+                key=lambda i: (
+                    load.get(pairs[i][0], 0.0) if load is not None else 0.0,
+                    at + (sz / bws[i] if bws[i] > _EPS else float("inf")),
+                    len(pairs[i][2]),
+                    pairs[i][0],
+                    pairs[i][1],
+                ),
+            )
+            plan = self.ledger.plan_transfer(sz, pairs[best][2], not_before=at)
+            return pairs[best][0], pairs[best][2], plan
         plans = self.ledger.plan_transfer_batch(
-            task.size if size is None else size,
+            sz,
             [r for _, _, r in pairs],
             not_before=at,
         )
@@ -494,6 +539,8 @@ class ClusterState:
         dup.heap = MinnowHeap(dup.idle, dup.workers)
         dup.now = self.now
         dup.dataplane = self.dataplane  # shared: liveness is global state
+        dup.obs = Registry()            # fresh: probe stats must not pollute
+        dup.belief = self.belief        # shared: belief is read-only here
         return dup
 
 
@@ -528,24 +575,69 @@ class BassPolicy:
     the transfer takes whichever parallel path has the most residue.
     Requires a dataplane-carrying state to differ from base BASS; with
     ``multipath=False`` (default) behaviour is byte-identical to before.
+
+    ``telemetry=True`` scores the Case 1.2/1.3 tradeoff and the source
+    choice against the controller's measured-bandwidth belief
+    (``state.belief``, attached by ``ClusterController.attach_telemetry``)
+    instead of the oracle ledger; commits still plan and book real slots
+    on the true ledger — the belief decides *where*, never *what is
+    booked* (DESIGN.md §9).  With ``telemetry=False`` (default) the
+    belief is never consulted and schedules are byte-identical to before.
     """
 
     name = "bass"
 
-    def __init__(self, multipath: bool = False, k_paths: Optional[int] = None):
+    def __init__(
+        self,
+        multipath: bool = False,
+        k_paths: Optional[int] = None,
+        telemetry: bool = False,
+    ):
         self.multipath = multipath
         self.k_paths = k_paths
+        self.telemetry = telemetry
+
+    def _belief(self, state: ClusterState):
+        if not self.telemetry:
+            return None
+        belief = getattr(state, "belief", None)
+        if belief is None:
+            raise RuntimeError(
+                "BassPolicy(telemetry=True) needs a belief state — attach a "
+                "monitor via ClusterController.attach_telemetry() first"
+            )
+        return belief
 
     def _source(
         self, state: ClusterState, task: Task, dst: str, at: float
     ) -> Tuple[str, Tuple[int, ...], Optional[TransferPlan]]:
         """(source, rows, plan) — the multipath scorer already produced the
-        winning greedy plan; single-path mode returns ``None`` and the
-        caller plans the rows itself."""
+        winning greedy plan (true-ledger, belief-ranked under telemetry);
+        single-path mode returns ``None`` and the caller plans the rows
+        itself."""
+        belief = self._belief(state)
         if self.multipath:
-            return state.choose_source_path(task, dst, at, k=self.k_paths)
-        src, rows = state.choose_source(task, dst, at=at)
+            return state.choose_source_path(
+                task, dst, at, k=self.k_paths, belief=belief
+            )
+        src, rows = state.choose_source(task, dst, at=at, belief=belief)
         return src, rows, None
+
+    @staticmethod
+    def _trace(state, a: Assignment, task: Task, reason: str) -> Assignment:
+        rec = state.obs.trace
+        if rec.enabled:
+            rec.record(
+                "decision",
+                tid=a.tid,
+                node=a.node,
+                src=a.source,
+                reason=reason,
+                cands=sum(1 for r in task.replicas if r != a.node),
+                start=a.start,
+                finish=a.finish,
+            )
+        return a
 
     def place(self, task: Task, state: ClusterState) -> Assignment:
         idle = state.idle
@@ -554,28 +646,49 @@ class BassPolicy:
 
         if loc is not None and (minnow == loc or idle[loc] <= idle[minnow] + _EPS):
             # Case 1.1 — local is optimal, no movement (Eq. 1 with BW=∞).
-            return state.commit_local(task, loc)
+            return self._trace(
+                state, state.commit_local(task, loc), task, "local-optimal"
+            )
 
+        belief = self._belief(state)
         if loc is not None:
-            # Case 1.2 / 1.3 — tradeoff governed by the TS ledger.
+            # Case 1.2 / 1.3 — tradeoff governed by the TS ledger (oracle)
+            # or by the telemetry belief's flat bandwidth estimate.
             yc_loc = completion_time(task.compute, 0.0, idle[loc])
             src, rows, plan = self._source(state, task, minnow, at=idle[minnow])
-            if plan is None:
-                plan = state.ledger.plan_transfer(
-                    task.size, rows, not_before=idle[minnow]
-                )
-            tm = plan.end - plan.start if plan.slot_fracs else 0.0
+            if belief is None:
+                if plan is None:
+                    plan = state.ledger.plan_transfer(
+                        task.size, rows, not_before=idle[minnow]
+                    )
+                tm = plan.end - plan.start if plan.slot_fracs else 0.0
+            else:
+                tm = _believed_tm(belief, rows, task.size, idle[minnow])
             yc_min = completion_time(task.compute, 0.0, idle[minnow]) + tm
             # Algorithm 1 line 8: bandwidth needed so that ΥC_minnow < ΥC_loc.
             tm_budget = yc_loc - task.compute - idle[minnow]
             bw_needed = task.size / tm_budget if tm_budget > _EPS else float("inf")
             if yc_min < yc_loc - _EPS:
                 # Case 1.2 — BW_{i,minnow} ≤ BW_rl: go remote, reserve slots.
-                return state.commit_remote(
-                    task, minnow, src, plan, bw_needed=bw_needed
+                if plan is None:
+                    # Belief said remote: realize the plan on the true ledger.
+                    plan = state.ledger.plan_transfer(
+                        task.size, rows, not_before=idle[minnow]
+                    )
+                return self._trace(
+                    state,
+                    state.commit_remote(task, minnow, src, plan,
+                                        bw_needed=bw_needed),
+                    task,
+                    "remote-faster",
                 )
             # Case 1.3 — residue insufficient: stay local.
-            return state.commit_local(task, loc, bw_needed=bw_needed)
+            return self._trace(
+                state,
+                state.commit_local(task, loc, bw_needed=bw_needed),
+                task,
+                "local-bw-insufficient",
+            )
 
         # Case 2 — locality starvation: remote on ND_minnow with reservation.
         src, rows, plan = self._source(state, task, minnow, at=idle[minnow])
@@ -583,7 +696,12 @@ class BassPolicy:
             plan = state.ledger.plan_transfer(
                 task.size, rows, not_before=idle[minnow]
             )
-        return state.commit_remote(task, minnow, src, plan)
+        return self._trace(
+            state,
+            state.commit_remote(task, minnow, src, plan),
+            task,
+            "locality-starved",
+        )
 
     def place_batch(
         self, tasks: Sequence[Task], state: ClusterState
@@ -594,8 +712,13 @@ class BassPolicy:
         bit-identical to the per-task ``place`` loop, including under
         live failure-aware routing (the planner threads the data plane's
         dead-link set through candidate enumeration, so degraded batches
-        keep wavefront throughput instead of reverting to the loop)."""
-        if len(tasks) > 1:
+        keep wavefront throughput instead of reverting to the loop).
+
+        Telemetry mode falls back to the sequential loop: the wavefront's
+        speculative curves are oracle-ledger artifacts and its whole
+        contract is bit-identity with oracle ``place`` — belief-scored
+        decisions are made per task instead (DESIGN.md §9)."""
+        if len(tasks) > 1 and not self.telemetry:
             from .wavefront import WavefrontPlanner
 
             return WavefrontPlanner.for_state(state).place_batch(
@@ -763,8 +886,12 @@ class PreBassPolicy:
 
     name = "prebass"
 
-    def __init__(self, guard: bool = True):
+    def __init__(self, guard: bool = True, telemetry: bool = False):
         self.guard = guard
+        self.telemetry = telemetry
+
+    def _bass(self) -> "BassPolicy":
+        return BassPolicy(telemetry=self.telemetry)
 
     def place(self, task: Task, state: ClusterState) -> Assignment:
         return self.place_batch([task], state)[0]
@@ -774,7 +901,7 @@ class PreBassPolicy:
     ) -> List[Assignment]:
         base_mk: Optional[float] = None
         if self.guard:
-            probe = BassPolicy().place_batch(tasks_seq, state.clone())
+            probe = self._bass().place_batch(tasks_seq, state.clone())
             base_mk = max((a.finish for a in probe), default=0.0)
         snap = state.snapshot() if self.guard else None
         out = self._prefetch(tasks_seq, state)
@@ -782,7 +909,7 @@ class PreBassPolicy:
         if base_mk is not None and refined_mk > base_mk + 1e-9:
             assert snap is not None
             state.restore(snap)
-            return BassPolicy().place_batch(tasks_seq, state)
+            return self._bass().place_batch(tasks_seq, state)
         return out
 
     def _prefetch(
@@ -793,7 +920,7 @@ class PreBassPolicy:
         # 0.0 for the offline wrappers) — replanning at t=0 for a job that
         # arrived at t=25 would book bandwidth that already elapsed.
         origin = state.now
-        base = BassPolicy().place_batch(tasks_seq, state)
+        base = self._bass().place_batch(tasks_seq, state)
         ledger = state.ledger
         tasks = {t.tid: t for t in tasks_seq}
 
@@ -814,8 +941,12 @@ class PreBassPolicy:
                 continue
             task = tasks[a.tid]
             # state-level choice: failure-aware when the dataplane carries
-            # dead links (identical to the module fn otherwise).
-            src, rows = state.choose_source(task, a.node, at=origin, load=load)
+            # dead links (identical to the module fn otherwise); belief-
+            # ranked under telemetry, like the base pass.
+            src, rows = state.choose_source(
+                task, a.node, at=origin, load=load,
+                belief=state.belief if self.telemetry else None,
+            )
             plan = ledger.plan_transfer(task.size, rows, not_before=origin)
             ledger.commit(plan)
             a.source, a.transfer = src, plan
@@ -896,6 +1027,21 @@ class JobRecord:
         return max((a.finish for a in self.assignments), default=self.submit_at)
 
 
+def _kernel_obs() -> dict:
+    """Device-kernel snapshot section: backend + compile-cache counters
+    (all zeros until the device module is actually imported — reading
+    stats must never *cause* a jax import)."""
+    from ..kernels import ts_plan
+
+    out = {"backend": ts_plan.get_backend()}
+    out.update(
+        ts_plan.device_stats()
+        or {k: 0 for k in ("traces", "cache_hits", "mirror_syncs",
+                           "mirror_cells", "mirror_uploads")}
+    )
+    return out
+
+
 class ClusterController:
     """The SDN controller as a long-lived service: multi-job arrival
     streams, dynamic background flows, and raw flow reservations share one
@@ -947,11 +1093,31 @@ class ClusterController:
         #: or "sequential" (the per-victim reference loop — the oracle the
         #: property tests and bench_failover_scale compare against).
         self.reroute_engine = "batched"
-        #: Batched-engine telemetry: events handled, victims replanned,
-        #: prescan curve hits vs live re-scores, and invariant-guard
-        #: fallbacks to the sequential oracle (unevenly-booked tails).
-        self.reroute_stats = {"events": 0, "victims": 0, "hits": 0,
-                              "misses": 0, "fallbacks": 0}
+        #: One observability registry per controller, shared with the
+        #: state so the wavefront planner reports into the same snapshot
+        #: (DESIGN.md §9).  ``reroute_stats`` keeps its historical
+        #: dict-style surface (events handled, victims replanned, prescan
+        #: curve hits vs live re-scores, invariant-guard fallbacks) but is
+        #: now a live view over registry counters.
+        self.obs = self.state.obs
+        self.reroute_stats = self.obs.group(
+            "reroute", ("events", "victims", "hits", "misses", "fallbacks")
+        )
+        self._ev_stats = self.obs.group(
+            "controller",
+            ("events", "jobs", "flows", "transfers", "net_events", "polls"),
+        )
+        # Pre-register the wavefront group so the snapshot always carries
+        # the section (zeros until the planner engages); the planner later
+        # grabs this same group by prefix.
+        self.obs.group("wavefront", ("hits", "misses", "waves", "spec_tasks"))
+        self.obs.register_provider("ledger", self._ledger_obs)
+        self.obs.register_provider("jobs", self._jobs_obs)
+        self.obs.register_provider("kernels", _kernel_obs)
+        #: Telemetry monitor (``repro.net.telemetry.LinkStatsMonitor``),
+        #: None until attach_telemetry(); drives "poll" events.
+        self.telemetry = None
+        self._poll_pending = False
         self.now = 0.0
 
     @classmethod
@@ -967,12 +1133,58 @@ class ClusterController:
             background=instance.background,
         )
 
+    # -- telemetry ------------------------------------------------------------
+    def attach_telemetry(
+        self,
+        poll_interval: Optional[float] = None,
+        estimator: "str | object" = "ewma",
+        **est_kwargs,
+    ):
+        """Attach a :class:`~repro.net.telemetry.LinkStatsMonitor` driven by
+        this event loop: the monitor polls the ledger's per-link counters
+        every ``poll_interval`` sim-seconds (default: one slot) while work
+        is queued, and keeps ``state.belief`` fresh for policies running
+        with ``telemetry=True``.  Attaching a monitor alone never changes
+        schedules — oracle policies don't read the belief.  Returns the
+        monitor."""
+        if self.telemetry is not None:
+            raise RuntimeError("telemetry monitor already attached")
+        from ..net.telemetry import LinkStatsMonitor
+
+        mon = LinkStatsMonitor(
+            self.state.ledger,
+            poll_interval=poll_interval,
+            estimator=estimator,
+            obs=self.obs,
+            **est_kwargs,
+        )
+        self.telemetry = mon
+        self.state.belief = mon.belief
+        self.obs.register_provider("telemetry", mon.snapshot)
+        mon.poll(self.now)
+        if self._events:
+            self._arm_poll()
+        return mon
+
+    def _arm_poll(self) -> None:
+        """Schedule the next counter poll.  The chain only lives while
+        other events are queued — ``run()`` drains the queue completely,
+        so an unconditional self-rescheduling poll would never let it
+        terminate; instead the chain dies with the last real event and is
+        re-armed by the next ``_push``."""
+        at = max(self.now, self.telemetry.last_poll + self.telemetry.poll_interval)
+        self._poll_pending = True
+        heapq.heappush(self._events, (at, self._seq, "poll", ()))
+        self._seq += 1
+
     # -- event submission ---------------------------------------------------
     def _push(self, at: float, kind: str, payload: tuple) -> None:
         if at < self.now - _EPS:
             raise ValueError(f"event at {at} is in the controller's past {self.now}")
         heapq.heappush(self._events, (at, self._seq, kind, payload))
         self._seq += 1
+        if self.telemetry is not None and not self._poll_pending:
+            self._arm_poll()
 
     def submit(
         self,
@@ -1055,14 +1267,26 @@ class ClusterController:
             self.now = max(self.now, at)
             self.state.advance(max(self.state.now, at))
             self._gc_tables(at)
+            self._ev_stats["events"] += 1
             if kind == "job":
                 (jid,) = payload
-                self._drain(self.jobs[jid])
+                self._ev_stats["jobs"] += 1
+                with self.obs.span("controller.drain"):
+                    self._drain(self.jobs[jid])
+            elif kind == "poll":
+                self._poll_pending = False
+                if self.telemetry is not None:
+                    self._ev_stats["polls"] += 1
+                    self.telemetry.poll(at)
+                    if self._events:
+                        self._arm_poll()
             elif kind == "flow":
                 (flow,) = payload
+                self._ev_stats["flows"] += 1
                 self.state.observe_flow(flow)
             elif kind == "transfer":
                 size, links, tag = payload
+                self._ev_stats["transfers"] += 1
                 if tag is None:
                     tag = ("flow", self._auto_flow)
                     self._auto_flow += 1
@@ -1079,18 +1303,22 @@ class ClusterController:
                     self.flows[tag] = plan
             elif kind == "link_down":
                 (name,) = payload
+                self._ev_stats["net_events"] += 1
                 self.dataplane.fail_link(name)
                 self._reroute_dead(at)
             elif kind == "link_up":
                 (name,) = payload
+                self._ev_stats["net_events"] += 1
                 self.dataplane.recover_link(name)
                 self._resume_flows(at)
             elif kind == "switch_down":
                 (node,) = payload
+                self._ev_stats["net_events"] += 1
                 self.dataplane.fail_switch(node)
                 self._reroute_dead(at)
             elif kind == "switch_up":
                 (node,) = payload
+                self._ev_stats["net_events"] += 1
                 self.dataplane.recover_switch(node)
                 self._resume_flows(at)
         self.now = max(self.now, t)
@@ -1166,10 +1394,15 @@ class ClusterController:
         """
         from .reroute import RerouteEngine, sequential_reroute
 
-        if self.reroute_engine == "sequential":
-            sequential_reroute(self, at)
-        else:
-            RerouteEngine(self).run(at)
+        n0 = len(self.reroute_log)
+        with self.obs.span("controller.reroute"):
+            if self.reroute_engine == "sequential":
+                sequential_reroute(self, at)
+            else:
+                RerouteEngine(self).run(at)
+        rec = self.obs.trace
+        if rec.enabled:
+            rec.record("reroute", at=at, victims=len(self.reroute_log) - n0)
         self._compact_expiry()
 
     def _compact_expiry(self) -> None:
@@ -1264,6 +1497,25 @@ class ClusterController:
         }
         out.sort(key=lambda a: a.tid)
         return Schedule(out, self.state.ledger, kinds=kinds)
+
+    # -- observability providers (lazily evaluated at snapshot time) --------
+    def _ledger_obs(self) -> dict:
+        led = self.state.ledger
+        return {
+            "batch_scan_cells": led.batch_scan_cells,
+            "base_slot": led.base_slot,
+            "retired_slots": led.retired_slots,
+            "live_slots": int(led.reserved.shape[1]),
+            "links": int(led.reserved.shape[0]),
+            "utilization": led.utilization(),
+        }
+
+    def _jobs_obs(self) -> dict:
+        return {
+            str(jid): self.job_metrics(jid).to_dict()
+            for jid, rec in self.jobs.items()
+            if rec.placed
+        }
 
     def job_metrics(self, jid: int):
         """Per-job Table-I row relative to the job's arrival: MT/RT/JT/LR."""

@@ -184,6 +184,16 @@ class JobMetrics:
     lr: float
     rerouted: int = 0  # transfers re-planned after link/switch failures
 
+    def to_dict(self) -> dict:
+        """Plain-dict form for the obs snapshot / JSON artifacts."""
+        return {
+            "mt": self.mt,
+            "rt": self.rt,
+            "jt": self.jt,
+            "lr": self.lr,
+            "rerouted": self.rerouted,
+        }
+
 
 def evaluate_mapreduce(
     map_instance: Instance,

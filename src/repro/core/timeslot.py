@@ -35,6 +35,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels import ts_plan
+from ..obs import Counter
 from .topology import Fabric
 
 _EPS = 1e-9
@@ -102,12 +103,33 @@ class TimeSlotLedger:
         #: Instrumentation: candidate·slot cells scanned by
         #: :meth:`plan_transfer_batch` (the escalation-freeze regression
         #: test pins that one oversized outlier no longer re-scans the
-        #: whole batch at 4× the window).
+        #: whole batch at 4× the window).  Backed by a ``repro.obs``
+        #: counter (see the property below) so the obs snapshot reads it
+        #: live; int-style use (`led.batch_scan_cells += n`, `= 0`) is
+        #: unchanged.
         self.batch_scan_cells = 0
         self._path_rows: Dict[Tuple[str, str], Tuple[int, ...]] = {}
         self._path_rows_version = fabric.version
 
     # -- plumbing -----------------------------------------------------------
+    # ``batch_scan_cells`` counter cell: class default None so instances
+    # built via ``__new__`` (ClusterState.clone) lazily create theirs on
+    # first assignment.
+    _scan_cells: Optional[Counter] = None
+
+    @property
+    def batch_scan_cells(self) -> int:
+        cell = self._scan_cells
+        return 0 if cell is None else cell.value
+
+    @batch_scan_cells.setter
+    def batch_scan_cells(self, value: int) -> None:
+        cell = self._scan_cells
+        if cell is None:
+            self._scan_cells = Counter("ledger.batch_scan_cells", value)
+        else:
+            cell.value = value
+
     def rows(self, link_names: Sequence[str]) -> Tuple[int, ...]:
         return tuple(self._row[n] for n in link_names)
 

@@ -130,7 +130,12 @@ class WavefrontPlanner:
         # nothing).  ``_dead`` is the current overlay, empty when healthy.
         self._dead: frozenset = frozenset()
         self._live_version = -1
-        self.stats = {"hits": 0, "misses": 0, "waves": 0, "spec_tasks": 0}
+        # Speculation counters live in the state's obs registry (same
+        # dict-style surface as the plain dict they replaced); planner
+        # rebuilds on the same state keep accumulating into one group.
+        self.stats = state.obs.group(
+            "wavefront", ("hits", "misses", "waves", "spec_tasks")
+        )
 
     @classmethod
     def for_state(cls, state) -> "WavefrontPlanner":
@@ -188,7 +193,9 @@ class WavefrontPlanner:
                 minnow == loc or idle[loc] <= idle[minnow] + _EPS
             ):
                 # Case 1.1 — local optimal; no ledger interaction at all.
-                out.append(state.commit_local(task, loc))
+                out.append(self._record(
+                    state.commit_local(task, loc), task, "local-optimal"
+                ))
                 continue
             if self._spec_on:
                 if i >= self._spec_until or miss_streak >= self.MISS_STREAK:
@@ -247,10 +254,29 @@ class WavefrontPlanner:
                 a = state.commit_remote(task, minnow, src, plan,
                                         bw_needed=bw_needed)
                 self._mark_dirty(plan)
-                return a
-            return state.commit_local(task, loc, bw_needed=bw_needed)
+                return self._record(a, task, "remote-faster")
+            return self._record(
+                state.commit_local(task, loc, bw_needed=bw_needed),
+                task, "local-bw-insufficient",
+            )
         a = state.commit_remote(task, minnow, src, plan)
         self._mark_dirty(plan)
+        return self._record(a, task, "locality-starved")
+
+    def _record(self, a: Assignment, task: Task, reason: str) -> Assignment:
+        rec = self.state.obs.trace
+        if rec.enabled:
+            rec.record(
+                "decision",
+                tid=a.tid,
+                node=a.node,
+                src=a.source,
+                reason=reason,
+                cands=sum(1 for r in task.replicas if r != a.node),
+                start=a.start,
+                finish=a.finish,
+                engine="wavefront",
+            )
         return a
 
     def _mark_dirty(self, plan: TransferPlan) -> None:

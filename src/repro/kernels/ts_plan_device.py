@@ -43,18 +43,19 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from ..obs import default_registry
 from . import ts_plan
 
 EPS = ts_plan.EPS
 
 #: Built buckets / reuses of the compile cache, plus mirror traffic.
-stats = {
-    "traces": 0,
-    "cache_hits": 0,
-    "mirror_syncs": 0,
-    "mirror_cells": 0,
-    "mirror_uploads": 0,
-}
+#: A live ``repro.obs`` counter group in the process-wide registry —
+#: dict-style access (`stats["traces"] += 1`, iteration, ``dict(stats)``)
+#: is unchanged from the plain dict it replaced.
+stats = default_registry().group(
+    "ts_plan_device",
+    ("traces", "cache_hits", "mirror_syncs", "mirror_cells", "mirror_uploads"),
+)
 
 _cache: dict = {}
 _platform: Optional[str] = None

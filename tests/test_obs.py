@@ -1,0 +1,211 @@
+"""Unified observability registry + artifact plumbing.
+
+Covers the registry primitives (counters, groups, spans, flight
+recorder), the snapshot contract the benchmarks validate, the back-compat
+guarantees the migrated stats dicts rely on, the JSON artifact
+dedupe-append, and the no-jax import boundary: ``repro.core``,
+``repro.obs`` and ``repro.net.telemetry`` must import without pulling in
+jax (enforced in a subprocess so this test is immune to other tests
+having imported jax already).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import (
+    Counter,
+    CounterGroup,
+    FlightRecorder,
+    Gauge,
+    Registry,
+    default_registry,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# ------------------------------------------------------------- primitives
+def test_counter_and_gauge_cells():
+    c = Counter("x")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    c.set(7)
+    assert c.value == 7
+    g = Gauge("depth")
+    g.set(41.0)
+    g.set(12.0)
+    assert g.value == 12.0
+
+
+def test_counter_group_is_a_dict_drop_in():
+    grp = CounterGroup(("hits", "misses"), prefix="wavefront")
+    assert dict(grp) == {"hits": 0, "misses": 0}
+    grp["hits"] += 3          # the idiom every migrated call site uses
+    grp.inc("misses")
+    assert grp["hits"] == 3 and grp["misses"] == 1
+    assert grp.get("absent", -1) == -1
+    grp["new_key"] = 9        # assignment creates cells, like a dict
+    assert set(grp) == {"hits", "misses", "new_key"}
+    assert len(grp) == 3
+    # the underlying cells carry prefixed metric names
+    assert grp._cells["new_key"].name == "wavefront.new_key"
+    grp.reset()
+    assert all(v == 0 for v in grp.values())
+    del grp["new_key"]
+    assert "new_key" not in grp
+
+
+def test_span_accumulates():
+    reg = Registry()
+    for _ in range(3):
+        with reg.span("region"):
+            pass
+    s = reg.span("region")
+    assert s.count == 3
+    assert s.total_s >= 0.0
+
+
+def test_flight_recorder_disabled_is_noop():
+    rec = FlightRecorder(capacity=4)
+    rec.record("decision", tid=1)
+    assert list(rec.events) == []
+
+
+def test_flight_recorder_bounded_ring(tmp_path):
+    rec = FlightRecorder(capacity=3).enable()
+    for i in range(5):
+        rec.record("ev", i=i)
+    assert rec.dropped == 2
+    assert [e["i"] for e in rec.events] == [2, 3, 4]  # most recent kept
+    assert [e["i"] for e in rec.tail(2)] == [3, 4]
+    path = tmp_path / "trace.jsonl"
+    assert rec.dump_jsonl(path) == 3
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert lines == [{"kind": "ev", "i": i} for i in (2, 3, 4)]
+    rec.clear()
+    assert len(rec.events) == 0 and rec.dropped == 0
+
+
+# --------------------------------------------------------------- registry
+def test_registry_memoizes_by_name():
+    reg = Registry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.gauge("g") is reg.gauge("g")
+    assert reg.span("s") is reg.span("s")
+    assert reg.group("grp", ("x",)) is reg.group("grp")
+
+
+def test_registry_snapshot_structure():
+    reg = Registry()
+    reg.counter("plain").inc(2)
+    reg.gauge("depth").set(5.0)
+    reg.group("reroute", ("events",))["events"] = 4
+    with reg.span("drain"):
+        pass
+    reg.trace.enable()
+    reg.trace.record("decision", tid=0)
+    reg.register_provider("ledger", lambda: {"utilization": 0.5})
+    reg.register_provider("broken", lambda: 1 / 0)
+    snap = reg.snapshot()
+    # groups are flattened into counters under their prefixed names
+    assert snap["counters"] == {"plain": 2, "reroute.events": 4}
+    assert snap["gauges"] == {"depth": 5.0}
+    assert snap["spans"]["drain"]["count"] == 1
+    assert snap["trace"] == [{"kind": "decision", "tid": 0}]
+    assert snap["ledger"] == {"utilization": 0.5}
+    # provider failures are captured, not propagated
+    assert "ZeroDivisionError" in snap["broken"]["error"]
+    json.dumps(snap)  # the snapshot must be JSON-serializable as-is
+
+
+def test_default_registry_is_process_wide():
+    assert default_registry() is default_registry()
+
+
+# ----------------------------------------------- migrated stats back-compat
+def test_device_kernel_stats_live_in_default_registry():
+    from repro.kernels import ts_plan_device
+
+    snap = default_registry().snapshot()
+    for key in ("traces", "cache_hits", "mirror_syncs"):
+        assert f"ts_plan_device.{key}" in snap["counters"]
+    assert set(ts_plan_device.stats) >= {"traces", "cache_hits"}
+
+
+def test_controller_snapshot_covers_every_layer():
+    from repro.core.controller import ClusterController
+    from repro.core.tasks import Task
+    from repro.core.topology import two_tier_fabric
+
+    ctrl = ClusterController(two_tier_fabric(2, 2), ["H0", "H1", "H2", "H3"])
+    ctrl.submit([Task(i, 100.0, 1.0, ("H0", "H1")) for i in range(4)], at=0.0)
+    ctrl.run()
+    # legacy aliases still point at the registry-backed groups
+    assert ctrl.reroute_stats is ctrl.obs.group("reroute")
+    assert ctrl.state.ledger.batch_scan_cells >= 0
+    snap = ctrl.obs.snapshot()
+    for prefix in ("controller.", "wavefront.", "reroute."):
+        assert any(k.startswith(prefix) for k in snap["counters"]), prefix
+    assert snap["counters"]["controller.jobs"] == 1
+    assert snap["ledger"]["links"] == len(ctrl.state.ledger.capacity)
+    assert "backend" in snap["kernels"]
+    assert snap["jobs"]["0"]["jt"] > 0.0
+    json.dumps(snap, default=str)
+
+
+def test_job_metrics_to_dict_roundtrip():
+    from repro.core.simulator import JobMetrics
+
+    m = JobMetrics(mt=3.0, rt=1.0, jt=4.0, lr=0.5, rerouted=2)
+    assert m.to_dict() == {"mt": 3.0, "rt": 1.0, "jt": 4.0, "lr": 0.5,
+                           "rerouted": 2}
+
+
+# --------------------------------------------------------- artifact append
+def _load_bench_sched_scale():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "benchmarks"))
+    try:
+        import bench_sched_scale
+    finally:
+        sys.path.pop(0)
+    return bench_sched_scale
+
+def test_append_json_dedupes_by_name_and_sha(tmp_path, monkeypatch):
+    mod = _load_bench_sched_scale()
+    path = str(tmp_path / "BENCH.json")
+    monkeypatch.setattr(mod, "git_sha", lambda: "aaa111")
+    mod.append_json([("leg_a", 1.0, "x=1"), ("leg_b", 2.0, 3.0)], path)
+    # same sha, same name: replaced, not duplicated
+    mod.append_json([("leg_a", 9.0, "x=2")], path)
+    rows = json.load(open(path))
+    assert sorted(r["name"] for r in rows) == ["leg_a", "leg_b"]
+    (a,) = [r for r in rows if r["name"] == "leg_a"]
+    assert a["us_per_call"] == 9.0 and a["derived"] == "x=2"
+    # new sha: old rows preserved, trajectory grows
+    monkeypatch.setattr(mod, "git_sha", lambda: "bbb222")
+    mod.append_json([("leg_a", 4.0, "x=3")], path)
+    rows = json.load(open(path))
+    assert len([r for r in rows if r["name"] == "leg_a"]) == 2
+    assert {r["git_sha"] for r in rows} == {"aaa111", "bbb222"}
+
+
+# ------------------------------------------------------- import boundaries
+def test_core_and_telemetry_import_without_jax():
+    code = (
+        "import sys\n"
+        "import repro.core, repro.core.controller, repro.obs\n"
+        "import repro.net.telemetry\n"
+        "bad = [m for m in sys.modules if m == 'jax' or m.startswith('jax.')]\n"
+        "assert not bad, f'jax leaked into the import graph: {bad}'\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr

@@ -1,0 +1,295 @@
+"""Telemetry plane: estimators, belief exactness, separation contract.
+
+Three layers of guarantees (DESIGN.md §9):
+
+* estimator math — EWMA blending / sliding-window counter differentiation
+  converge to the true utilization on synthetic streams;
+* zero-staleness exactness — with the instantaneous estimator
+  (``alpha=1.0``) polled at ``t``, every :class:`BeliefState` query is
+  *bit*-equal to the corresponding ledger query at ``t``;
+* separation — attaching a monitor never changes an oracle schedule
+  (byte-identical), ``telemetry=True`` without an attached monitor is an
+  error, and a stale belief can misroute a task but the committed plan is
+  always booked on the true ledger.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import BassPolicy, ClusterController, PreBassPolicy
+from repro.core.tasks import BackgroundFlow, Task
+from repro.core.timeslot import TimeSlotLedger
+from repro.core.topology import two_tier_fabric
+from repro.net.telemetry import (
+    BeliefState,
+    EwmaEstimator,
+    LinkStatsMonitor,
+    WindowRateEstimator,
+    make_estimator,
+)
+
+HOSTS = ["H0", "H1", "H2", "H3"]
+
+
+def make_ledger(slot=1.0, horizon=64):
+    return TimeSlotLedger(two_tier_fabric(2, 2, 100.0, 100.0), slot, horizon)
+
+
+# ---------------------------------------------------------------- estimators
+def test_ewma_first_sample_primes_exactly():
+    est = EwmaEstimator(3, alpha=0.25)
+    occ = np.array([0.2, 0.8, 0.5])
+    est.update(0.0, occ, np.zeros(3))
+    np.testing.assert_array_equal(est.utilization(), occ)
+
+
+def test_ewma_converges_to_constant_signal():
+    est = EwmaEstimator(2, alpha=0.5)
+    est.update(0.0, np.zeros(2), np.zeros(2))
+    target = np.array([0.9, 0.3])
+    for k in range(1, 40):
+        est.update(float(k), target, np.zeros(2))
+    np.testing.assert_allclose(est.utilization(), target, atol=1e-9)
+
+
+def test_ewma_alpha_one_is_last_sample_bitwise():
+    est = EwmaEstimator(2, alpha=1.0)
+    for k in range(5):
+        occ = np.array([0.1 * k + 0.037, 1.0 - 0.2 * k / 7.0])
+        est.update(float(k), occ, np.zeros(2))
+        assert (est.utilization() == occ).all()  # bitwise, not approx
+
+
+def test_ewma_rejects_bad_alpha():
+    with pytest.raises(ValueError):
+        EwmaEstimator(2, alpha=0.0)
+    with pytest.raises(ValueError):
+        EwmaEstimator(2, alpha=1.5)
+
+
+def test_window_rate_recovers_constant_rate():
+    cap = np.array([100.0, 100.0])
+    est = WindowRateEstimator(2, cap, window=4.0)
+    # counters advancing at 40 and 90 Mbit/s against 100 Mbps capacity
+    rate = np.array([40.0, 90.0])
+    for k in range(10):
+        est.update(float(k), np.zeros(2), rate * k)
+    np.testing.assert_allclose(est.utilization(), rate / cap, atol=1e-12)
+
+
+def test_window_rate_clips_and_falls_back_cold():
+    cap = np.array([100.0])
+    est = WindowRateEstimator(1, cap, window=2.0)
+    occ = np.array([0.4])
+    est.update(0.0, occ, np.zeros(1))
+    # one sample: falls back to instantaneous occupancy
+    np.testing.assert_array_equal(est.utilization(), occ)
+    # counter jump far above capacity*dt clips to 1.0
+    est.update(1.0, occ, np.array([1e6]))
+    assert est.utilization()[0] == 1.0
+
+
+def test_window_rate_evicts_old_samples():
+    cap = np.array([100.0])
+    est = WindowRateEstimator(1, cap, window=2.0)
+    # 0..4: rate 100; 5..9: rate 0.  A 2 s window must forget the burst.
+    for k in range(5):
+        est.update(float(k), np.zeros(1), np.array([100.0 * k]))
+    for k in range(5, 10):
+        est.update(float(k), np.zeros(1), np.array([400.0]))
+    assert est.utilization()[0] == 0.0
+
+
+def test_make_estimator_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_estimator("kalman", 2, np.ones(2))
+
+
+# ----------------------------------------------------- zero-staleness limit
+def _booked_ledger():
+    led = make_ledger()
+    for src, dst, size, nb in [
+        ("H0", "H2", 180.0, 0.0),
+        ("H1", "H3", 90.0, 1.0),
+        ("H0", "H3", 250.0, 2.0),
+    ]:
+        rows = led.rows(led.fabric.path(src, dst))
+        led.commit(led.plan_transfer(size, rows, not_before=nb))
+    return led
+
+
+@pytest.mark.parametrize("t", [0.0, 0.5, 1.0, 2.75, 3.0])
+def test_belief_bit_equals_ledger_at_poll_instant(t):
+    led = _booked_ledger()
+    mon = LinkStatsMonitor(led, poll_interval=1.0, estimator="ewma", alpha=1.0)
+    belief = mon.poll(t)
+    paths = [
+        led.rows(led.fabric.path(a, b))
+        for a in HOSTS
+        for b in HOSTS
+        if a != b
+    ]
+    slot = led.slot_of(t)
+    for rows in paths:
+        assert belief.residual_fraction(rows, slot) == led.residual_fraction(
+            rows, slot
+        )
+        assert belief.path_bandwidth(rows, t) == led.path_bandwidth(rows, t)
+        # window inside the polled slot: flat belief == true window min
+        t1 = (slot + 1) * led.slot_duration
+        assert belief.min_path_bandwidth(rows, t, t1) == led.min_path_bandwidth(
+            rows, t, t1
+        )
+    got = belief.path_bandwidth_batch(paths, t)
+    want = led.path_bandwidth_batch(paths, t)
+    assert (got == want).all()
+
+
+def test_belief_empty_path_edge_semantics():
+    belief = BeliefState(np.array([100.0, 50.0]))
+    belief.util[:] = [0.3, 0.9]
+    assert belief.residual_fraction([], 0) == 1.0
+    assert belief.path_bandwidth([], 0.0) == float("inf")
+    out = belief.path_bandwidth_batch([[], [1]], 0.0)
+    assert out[0] == float("inf")
+    assert out[1] == pytest.approx((1 - 0.9) * 50.0)
+
+
+# ------------------------------------------------------- counter synthesis
+def test_monitor_integrates_reserved_bytes():
+    led = _booked_ledger()
+    mon = LinkStatsMonitor(led, poll_interval=1.0)
+    mon.poll(0.0)
+    assert (mon.cum_bytes == 0).all()
+    t = 2.5
+    mon.poll(t)
+    # independent integral of reserved × capacity over [0, 2.5)
+    want = (
+        led.reserved[:, 0] + led.reserved[:, 1] + 0.5 * led.reserved[:, 2]
+    ) * led.capacity
+    np.testing.assert_allclose(mon.cum_bytes, want, atol=1e-9)
+    assert mon.stats["missed_slots"] == 0
+
+
+def test_monitor_counts_retired_slots_as_missed():
+    led = _booked_ledger()
+    mon = LinkStatsMonitor(led, poll_interval=1.0)
+    mon.poll(0.0)
+    led.retire(3.0)  # drops slots 0-2 before the monitor sampled them
+    mon.poll(4.0)
+    assert mon.stats["missed_slots"] >= 1
+
+
+def test_monitor_rejects_bad_poll_interval():
+    with pytest.raises(ValueError):
+        LinkStatsMonitor(make_ledger(), poll_interval=0.0)
+
+
+# ------------------------------------------------------ separation contract
+def _mini_stream(policy, attach=None):
+    ctrl = ClusterController(
+        two_tier_fabric(2, 3), [f"H{i}" for i in range(6)], policy
+    )
+    if attach:
+        ctrl.attach_telemetry(poll_interval=attach)
+    rng = np.random.default_rng(3)
+    tid = 0
+    for j in range(3):
+        tasks = []
+        for _ in range(5):
+            reps = tuple(rng.choice([f"H{i}" for i in range(3)], 2, replace=False))
+            tasks.append(Task(tid, float(rng.integers(50, 300)), 2.0, reps))
+            tid += 1
+        ctrl.submit(tasks, at=j * 4.0)
+    ctrl.inject_flow(BackgroundFlow("H0", "H4", 0.6, 1.0, 9.0))
+    ctrl.run()
+    return ctrl.schedule().assignments
+
+
+def _canon(assignments):
+    return [
+        (a.tid, a.node, a.source, a.start.hex(), a.finish.hex())
+        for a in sorted(assignments, key=lambda a: a.tid)
+    ]
+
+
+def test_monitor_attach_is_schedule_neutral():
+    plain = _mini_stream(BassPolicy())
+    monitored = _mini_stream(BassPolicy(), attach=0.5)
+    assert _canon(plain) == _canon(monitored)
+
+
+def test_telemetry_policy_without_monitor_raises():
+    # the replica holder must be busy so the remote-vs-local tradeoff
+    # (the path that consults the belief) actually fires
+    ctrl = ClusterController(
+        two_tier_fabric(2, 2),
+        HOSTS,
+        BassPolicy(telemetry=True),
+        idle={"H0": 10.0},
+    )
+    ctrl.submit([Task(0, 100.0, 1.0, ("H0",))], at=0.0)
+    with pytest.raises(RuntimeError, match="telemetry"):
+        ctrl.run()
+
+
+def test_prebass_telemetry_smoke():
+    ctrl = ClusterController(
+        two_tier_fabric(2, 2), HOSTS, PreBassPolicy(telemetry=True)
+    )
+    ctrl.attach_telemetry(poll_interval=1.0)
+    ctrl.submit([Task(i, 120.0, 1.0, ("H0", "H1")) for i in range(4)], at=0.0)
+    ctrl.run()
+    assert len(ctrl.schedule().assignments) == 4
+
+
+# The deterministic staleness probe (also a bench row): truth keeps the
+# task local on its busy replica holder; a belief last polled before a
+# saturating flow started confidently offloads into the congested trunk —
+# and because commits always book the *true* ledger, the realized plan
+# crawls at the 5% residual instead of corrupting data-plane state.
+def _probe_finish(telemetry, poll_interval, **est_kwargs):
+    ctrl = ClusterController(
+        two_tier_fabric(2, 2),
+        HOSTS,
+        BassPolicy(telemetry=telemetry),
+        idle={"H0": 10.0, "H1": 10.0, "H2": 10.0, "H3": 0.0},
+    )
+    ctrl.attach_telemetry(poll_interval=poll_interval, **est_kwargs)
+    ctrl.inject_flow(BackgroundFlow("H0", "H2", 0.95, 0.5, 50.0))
+    ctrl.submit([Task(0, 200.0, 3.0, ("H0",))], at=1.0)
+    ctrl.run()
+    (a,) = ctrl.schedule().assignments
+    return a
+
+
+def test_stale_belief_misroutes_but_commits_true_plan():
+    oracle = _probe_finish(False, 100.0)
+    assert oracle.node == "H0" and oracle.transfer is None
+    assert oracle.finish == pytest.approx(13.0)
+
+    stale = _probe_finish(True, 100.0)
+    assert stale.node == "H3" and stale.transfer is not None
+    # planned on the true ledger: 200 Mbit at the 5 Mbps residual ≈ 40 s
+    assert stale.finish == pytest.approx(44.0, abs=0.5)
+    assert stale.finish > oracle.finish + 10.0
+
+
+def test_fresh_instantaneous_belief_matches_oracle():
+    oracle = _probe_finish(False, 100.0)
+    fresh = _probe_finish(True, 0.25, alpha=1.0)
+    assert fresh.node == oracle.node == "H0"
+    assert fresh.finish == oracle.finish
+
+
+def test_telemetry_snapshot_section():
+    ctrl = ClusterController(two_tier_fabric(2, 2), HOSTS, BassPolicy())
+    mon = ctrl.attach_telemetry(poll_interval=1.0)
+    ctrl.submit([Task(0, 100.0, 1.0, ("H0", "H1"))], at=0.0)
+    ctrl.run()
+    with pytest.raises(RuntimeError):
+        ctrl.attach_telemetry()  # double attach is an error
+    snap = ctrl.obs.snapshot()
+    tel = snap["telemetry"]
+    assert tel["polls"] == mon.stats["polls"] >= 1
+    assert tel["estimator"] == "ewma"
+    assert snap["counters"]["telemetry.polls"] == tel["polls"]
