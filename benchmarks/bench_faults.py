@@ -1,0 +1,180 @@
+"""Benchmark: host-failure churn + straggler storm (task-plane robustness).
+
+A k-ary fat-tree runs a cross-pod shard workload while a seeded
+:class:`~repro.core.faults.FaultPlan` kills worker hosts mid-task (their
+queued/running work is released and re-placed through the normal
+bandwidth-aware policy path under the retry policy) and injects
+progress-rate stragglers.  Two identically-faulted controllers run the
+storm — LATE-style speculation off vs. on — and the benchmark:
+
+* asserts the deterministic harness: the same seed twice produces
+  byte-identical schedules and fault counters;
+* asserts speculation-on beats speculation-off makespan under the
+  straggler storm (the LATE gate only launches backups the ledger's
+  residual bandwidth can actually finish early);
+* reports re-execution / speculative-launch / wasted-bytes counters as
+  machine-readable rows.
+
+CSV: ``name,us_per_call,derived`` (us_per_call = storm wall time per
+task; derived = makespan for the leg rows, counter values otherwise).
+``--smoke`` runs the k=4 config only; ``--json PATH`` appends rows to the
+shared benchmark artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.controller import BassPolicy, ClusterController, RetryPolicy
+from repro.core.faults import FaultPlan
+from repro.core.tasks import Task
+from repro.core.topology import storage_hosts
+from repro.net.fattree import fat_tree_fabric
+
+# (fat-tree arity, tasks, crashes, stragglers)
+CONFIGS = [
+    (4, 16, 2, 4),        # 16 hosts — smoke config
+    (8, 128, 6, 16),      # 128 hosts — the acceptance config
+]
+
+SEED = 7
+T0, T1 = 0.5, 3.0         # fault window: inside the ~2-wave run
+MTTR = 2.0                # crashed hosts recover this much later
+SLOW = (4.0, 8.0)         # straggler slowdown factor range
+
+
+def storm_setup(k: int, n_tasks: int):
+    """Sources in the lower pods, workers in the upper pods — every
+    placement moves a shard across the core (same shape as
+    bench_failover_scale, but with compute long enough that stragglers
+    and mid-task host kills dominate the makespan)."""
+    fab = fat_tree_fabric(k, link_mbps=100.0)
+    hosts = storage_hosts(fab)
+    half = len(hosts) // 2
+    sources, workers = hosts[:half], hosts[half:]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(sources), size=(n_tasks, 3))
+    tasks = [
+        Task(
+            tid=i,
+            size=float(32 + (i % 5) * 16),
+            compute=2.0,
+            replicas=tuple(sources[j] for j in idx[i]),
+        )
+        for i in range(n_tasks)
+    ]
+    return fab, workers, tasks
+
+
+def _plan(workers, n_crashes: int, n_stragglers: int) -> FaultPlan:
+    return FaultPlan.generate(
+        SEED, workers, T0, T1,
+        n_crashes=n_crashes, mttr=MTTR,
+        n_stragglers=n_stragglers, slow_factor=SLOW,
+    )
+
+
+def _canon_sched(ctrl):
+    out = []
+    for a in ctrl.schedule().assignments:
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    return out
+
+
+def run_leg(k: int, n_tasks: int, n_crashes: int, n_stragglers: int,
+            speculation: bool):
+    fab, workers, tasks = storm_setup(k, n_tasks)
+    ctrl = ClusterController(
+        fab, workers, BassPolicy(multipath=True), slot_duration=0.1,
+        retry=RetryPolicy(max_attempts=4, backoff_s=0.5),
+        speculation=speculation,
+    )
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)
+    _plan(workers, n_crashes, n_stragglers).apply(ctrl)
+    t0 = time.perf_counter()
+    ctrl.run()
+    dt = time.perf_counter() - t0
+    rec = ctrl.jobs[0]
+    placed = sorted(a.tid for a in rec.assignments)
+    assert placed == list(range(n_tasks)), (
+        f"storm lost tasks: {n_tasks - len(placed)} missing"
+    )
+    return ctrl, rec, dt
+
+
+def run(configs=None) -> list:
+    rows = []
+    for k, n_tasks, n_crashes, n_stragglers in (
+            configs if configs is not None else CONFIGS):
+        n_hosts = k ** 3 // 4
+        tag = f"faults_{n_hosts}h_{n_tasks}t"
+
+        c_off, r_off, dt_off = run_leg(k, n_tasks, n_crashes, n_stragglers,
+                                       speculation=False)
+        c_on, r_on, dt_on = run_leg(k, n_tasks, n_crashes, n_stragglers,
+                                    speculation=True)
+        # Determinism: the same seed replays to the byte — schedules and
+        # every kill/retry/speculation counter.
+        c_on2, _r2, _dt2 = run_leg(k, n_tasks, n_crashes, n_stragglers,
+                                   speculation=True)
+        assert _canon_sched(c_on2) == _canon_sched(c_on), (
+            f"{tag}: same-seed fault storm is not deterministic"
+        )
+        assert dict(c_on2.fault_stats) == dict(c_on.fault_stats)
+
+        mk_off, mk_on = r_off.makespan, r_on.makespan
+        stats = c_on.fault_stats
+        assert stats["killed"] > 0 and stats["reexecuted"] > 0, (
+            f"{tag}: storm killed nothing — fault window misses the run"
+        )
+        assert stats["spec_launch"] > 0, f"{tag}: LATE gate never fired"
+        # The acceptance claim: bandwidth-aware speculation pays for its
+        # wasted bytes with makespan under a straggler storm.
+        assert mk_on < mk_off, (
+            f"{tag}: speculation-on makespan {mk_on:.2f} not better than "
+            f"speculation-off {mk_off:.2f}"
+        )
+
+        rows.append((f"{tag}_specoff", dt_off / n_tasks * 1e6,
+                     round(mk_off, 3)))
+        rows.append((f"{tag}_specon", dt_on / n_tasks * 1e6,
+                     round(mk_on, 3)))
+        rows.append((f"{tag}_spec_gain", 0.0, round(mk_off / mk_on, 3)))
+        rows.append((f"{tag}_reexecuted", 0.0, int(stats["reexecuted"])))
+        rows.append((f"{tag}_spec_launch", 0.0, int(stats["spec_launch"])))
+        rows.append((f"{tag}_spec_win", 0.0, int(stats["spec_win"])))
+        rows.append((f"{tag}_wasted_bytes", 0.0,
+                     round(float(stats["wasted_bytes"]), 1)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="k=4 config only (all assertions still run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="append machine-readable rows (JSON)")
+    args = ap.parse_args()
+    configs = CONFIGS[:1] if args.smoke else CONFIGS
+    rows = run(configs)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        try:
+            from benchmarks.bench_sched_scale import append_json
+        except ImportError:
+            from bench_sched_scale import append_json
+        append_json(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

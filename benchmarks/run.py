@@ -20,6 +20,9 @@
 * bench_telemetry   — beyond-paper: belief-scheduled vs oracle BASS under
                       background churn (telemetry-off parity, staleness
                       probe, poll-interval sweep, obs snapshot)
+* bench_faults      — beyond-paper: seeded host-kill + straggler storm
+                      (deterministic FaultPlan; asserts LATE speculation-on
+                      beats speculation-off; re-execution/wasted-bytes rows)
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -30,6 +33,7 @@ import sys
 from . import (
     bench_discussion1,
     bench_failover_scale,
+    bench_faults,
     bench_longrun,
     bench_multipath,
     bench_online,
@@ -53,6 +57,7 @@ MODULES = [
     bench_failover_scale,
     bench_longrun,
     bench_telemetry,
+    bench_faults,
     bench_roofline,
 ]
 

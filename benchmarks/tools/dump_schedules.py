@@ -16,6 +16,13 @@ arrival stream through an aggressively-compacting controller
 within one dump — the rolling-horizon origin shift (DESIGN.md §7) is
 invisible in every emitted coordinate.
 
+The ``faultstorm_*`` sections run a seeded host-kill + straggler storm
+(``FaultPlan``, DESIGN.md §10) with retries and LATE speculation on,
+once per reroute engine: the paired blocks must be byte-identical to
+each other within one dump as well as across code changes, and every
+section *above* them runs fault-free and must stay byte-identical to
+main.
+
 The ``backend_*`` sections emit the same workloads under the numpy
 reference and the forced device ``ts_plan`` backend (DESIGN.md §8):
 paired blocks must be byte-identical within one dump, pinning the device
@@ -88,6 +95,46 @@ def main() -> None:
         dump_failure_storm(out, "batched", stride=None,
                            label="failstorm_uncompacted")
         dump_backend_parity(out)
+        # Seeded fault storm (DESIGN.md §10) under both reroute engines:
+        # the paired blocks must be byte-identical to each other within
+        # one dump (host kills, retries, blacklisting and LATE
+        # speculation are engine-invariant) as well as across code
+        # changes.  Everything above this line runs fault-free and must
+        # stay byte-identical to main.
+        for engine in ("batched", "sequential"):
+            dump_fault_storm(out, engine)
+
+
+def dump_fault_storm(out, engine):
+    """Seeded host-kill + straggler storm: schedule + fault counters
+    under one reroute engine, speculation on."""
+    from benchmarks.bench_faults import (  # noqa: E402
+        MTTR, SEED, SLOW, T0, T1, storm_setup,
+    )
+    from repro.core.controller import (  # noqa: E402
+        BassPolicy, ClusterController, RetryPolicy,
+    )
+    from repro.core.faults import FaultPlan  # noqa: E402
+
+    fab, workers, tasks = storm_setup(4, 16)
+    ctrl = ClusterController(
+        fab, workers, BassPolicy(multipath=True), slot_duration=0.1,
+        retry=RetryPolicy(max_attempts=4, backoff_s=0.5),
+        speculation=True,
+    )
+    ctrl.reroute_engine = engine
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)
+    FaultPlan.generate(
+        SEED, workers, T0, T1, n_crashes=2, mttr=MTTR,
+        n_stragglers=4, slow_factor=SLOW,
+    ).apply(ctrl)
+    ctrl.run()
+    label = f"faultstorm_{engine}"
+    dump_schedule(out, label, ctrl.schedule())
+    out.write(f"== {label}_counters\n")
+    for key in sorted(ctrl.fault_stats):
+        out.write(f"{key}={fx(ctrl.fault_stats[key])}\n")
 
 
 def dump_backend_parity(out):

@@ -40,9 +40,11 @@ from .controller import (
     ClusterState,
     HdsPolicy,
     PreBassPolicy,
+    RetryPolicy,
     SchedulingPolicy,
     run_policy,
 )
+from .faults import FaultPlan, HostCrash, LinkFlap, StragglerOnset
 from .bass import schedule_bass
 from .baselines import schedule_bar, schedule_hds
 from .prebass import schedule_prebass
@@ -64,7 +66,11 @@ __all__ = [
     "ClusterController",
     "ClusterState",
     "Fabric",
+    "FaultPlan",
     "Flow",
+    "HostCrash",
+    "LinkFlap",
+    "StragglerOnset",
     "HdsPolicy",
     "Instance",
     "JobMetrics",
@@ -73,6 +79,7 @@ __all__ = [
     "QosPort",
     "QueueSpec",
     "ReplayReport",
+    "RetryPolicy",
     "SCHEDULERS",
     "Schedule",
     "SchedulingPolicy",

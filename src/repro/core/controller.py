@@ -111,6 +111,26 @@ class MinnowHeap:
         h[i] = item
         pos[node] = i
 
+    def insert(self, node: str, idle: float) -> None:
+        """Admit a (re)joining worker: push + sift, one O(log n) pass."""
+        h, pos = self._heap, self._pos
+        if node in pos:
+            raise ValueError(f"worker {node!r} already in heap")
+        h.append((float("inf"), node))
+        pos[node] = len(h) - 1
+        self.update(node, idle)
+
+    def remove(self, node: str) -> None:
+        """Evict a crashed worker: swap-with-last + sift, O(log n)."""
+        h, pos = self._heap, self._pos
+        i = pos.pop(node)
+        last = h.pop()
+        if i < len(h):
+            h[i] = last
+            pos[last[1]] = i
+            # Re-sift the moved entry to restore the invariant either way.
+            self.update(last[1], last[0])
+
 
 def pick_minnow(idle: Dict[str, float], workers: Sequence[str]) -> str:
     """``ND_minnow``: the worker whose available idle time is minimum."""
@@ -462,6 +482,28 @@ class ClusterState:
 
     def reheap(self) -> None:
         self.heap = MinnowHeap(self.idle, self.workers)
+
+    def remove_worker(self, node: str) -> None:
+        """Evict a crashed host from every placement surface at once:
+        the worker list/set (``pick_local`` membership), the idle map and
+        the minnow heap — a dead machine must never win Eq. (1)'s argmin."""
+        if node not in self.workers_set:
+            return
+        self.workers.remove(node)
+        self.workers_set = frozenset(self.workers)
+        self.heap.remove(node)
+        del self.idle[node]
+
+    def add_worker(self, node: str, idle: Optional[float] = None) -> None:
+        """(Re-)admit a recovered host with its idle clock at ``idle``
+        (default: the current sim time — a fresh machine starts empty)."""
+        if node in self.workers_set:
+            return
+        t = self.now if idle is None else float(idle)
+        self.workers.append(node)
+        self.workers_set = frozenset(self.workers)
+        self.idle[node] = t
+        self.heap.insert(node, t)
 
     def observe_flow(self, flow: BackgroundFlow) -> None:
         """Dynamic background cross-traffic: book it on the ledger and
@@ -1010,6 +1052,39 @@ def run_policy(
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded task re-execution under host crashes (Hadoop-style).
+
+    A killed task is re-placed through the normal policy path (so retries
+    stay bandwidth-aware) after ``backoff(attempt)`` sim-seconds; a retry
+    that finds no live replica (transient all-replicas-dead window) burns
+    an attempt and backs off again, and exhausting ``max_attempts`` raises
+    :class:`UnroutableError` — no silent stalls, matching the reroute
+    contract.  A host that crashes ``blacklist_after`` times is not
+    re-admitted on recovery (its replicas stay priced out).
+    """
+
+    max_attempts: int = 4
+    backoff_s: float = 1.0
+    backoff_factor: float = 2.0
+    blacklist_after: int = 3
+
+    def backoff(self, attempt: int) -> float:
+        """Sim-time delay before retry number ``attempt`` (0-based)."""
+        return self.backoff_s * (self.backoff_factor ** attempt)
+
+
+@dataclass
+class _SpecRecord:
+    """One in-flight LATE speculation: primary vs backup, first finisher
+    wins at the resolve event."""
+
+    jid: int
+    primary: Assignment
+    backup: Assignment
+
+
 @dataclass
 class JobRecord:
     """One submitted job: arrival time, tasks, and (once placed) results."""
@@ -1020,6 +1095,9 @@ class JobRecord:
     assignments: List[Assignment] = field(default_factory=list)
     placed: bool = False
     rerouted: int = 0  # transfers re-planned after a path died
+    reexecuted: int = 0     # tasks killed by a host crash and re-placed
+    speculative: int = 0    # LATE backup copies launched
+    wasted_bytes: float = 0.0  # delivered bytes thrown away (kills + losers)
 
     @property
     def makespan(self) -> float:
@@ -1057,6 +1135,8 @@ class ClusterController:
         horizon_slots: int = 256,
         background: Sequence[BackgroundFlow] = (),
         k_paths: int = 4,
+        retry: Optional[RetryPolicy] = None,
+        speculation: bool = False,
     ) -> None:
         if isinstance(policy, str):
             policy = POLICIES[policy]()
@@ -1118,6 +1198,29 @@ class ClusterController:
         #: None until attach_telemetry(); drives "poll" events.
         self.telemetry = None
         self._poll_pending = False
+        # -- task-plane robustness (DESIGN.md §10) --------------------------
+        #: Bounded re-execution policy for tasks killed by host crashes.
+        self.retry = retry if retry is not None else RetryPolicy()
+        #: LATE-style speculative execution: on straggler onset, launch a
+        #: backup copy iff the ledger's residual bandwidth says it finishes
+        #: before the straggler's projected finish (first finisher wins).
+        self.speculation = speculation
+        #: Per-host crash count; hosts reaching ``retry.blacklist_after``
+        #: are not re-admitted on recovery.
+        self._host_failures: Dict[str, int] = {}
+        self.blacklist: set = set()
+        self._specs: Dict[int, _SpecRecord] = {}  # tid -> live speculation
+        self.fault_stats = self.obs.group(
+            "faults",
+            ("host_down", "host_up", "killed", "retries", "reexecuted",
+             "spec_launch", "spec_win", "blacklisted", "wasted_bytes"),
+        )
+        #: Heartbeat monitor (``repro.runtime.ft.HeartbeatMonitor``), None
+        #: until attach_heartbeats(); drives "hb" sweep events in sim time.
+        self.heartbeats = None
+        self._hb_pending = False
+        self._hb_interval = 0.0
+        self._hb_last = 0.0
         self.now = 0.0
 
     @classmethod
@@ -1177,6 +1280,56 @@ class ClusterController:
         heapq.heappush(self._events, (at, self._seq, "poll", ()))
         self._seq += 1
 
+    # -- heartbeats ---------------------------------------------------------
+    def attach_heartbeats(
+        self, interval: Optional[float] = None, grace_s: Optional[float] = None
+    ):
+        """Attach a :class:`~repro.runtime.ft.HeartbeatMonitor` over this
+        controller's workers, driven by the event loop in *sim time* (the
+        same poll-chain pattern as ``attach_telemetry`` — never
+        ``time.monotonic``, so runs stay deterministic).  Every ``interval``
+        sim-seconds (default: one ledger slot) the monitor sweeps; hosts
+        whose last beat is older than ``grace_s`` (default: 3 intervals)
+        emit ``fail_host``.  Call ``monitor.beat(host, now)`` from the
+        workload to keep hosts alive; a recovered host needs an explicit
+        ``recover_host`` (plus a beat) to rejoin.  Returns the monitor."""
+        if self.heartbeats is not None:
+            raise RuntimeError("heartbeat monitor already attached")
+        from ..runtime.ft import HeartbeatMonitor
+
+        interval = (self.state.ledger.slot_duration if interval is None
+                    else float(interval))
+        if interval <= 0.0:
+            raise ValueError(f"heartbeat interval must be > 0, got {interval}")
+        mon = HeartbeatMonitor(
+            list(self.state.workers),
+            grace_s=3.0 * interval if grace_s is None else grace_s,
+            clock=lambda: self.now,
+        )
+        self.heartbeats = mon
+        self._hb_interval = interval
+        self._hb_last = self.now
+        if self._events:
+            self._arm_hb()
+        return mon
+
+    def _arm_hb(self) -> None:
+        """Schedule the next heartbeat sweep — like ``_arm_poll``, the
+        chain lives only while real events are queued, else ``run()``
+        would never terminate."""
+        at = max(self.now, self._hb_last + self._hb_interval)
+        self._hb_pending = True
+        heapq.heappush(self._events, (at, self._seq, "hb", ()))
+        self._seq += 1
+
+    def _hb_sweep(self, at: float) -> None:
+        """Missed beats become host failures, inline at the sweep time."""
+        self._hb_last = at
+        for host in self.heartbeats.sweep(at):
+            if (host in self.state.workers_set
+                    and host not in self.dataplane.dead_hosts):
+                self._on_host_down(host, at)
+
     # -- event submission ---------------------------------------------------
     def _push(self, at: float, kind: str, payload: tuple) -> None:
         if at < self.now - _EPS:
@@ -1185,6 +1338,8 @@ class ClusterController:
         self._seq += 1
         if self.telemetry is not None and not self._poll_pending:
             self._arm_poll()
+        if self.heartbeats is not None and not self._hb_pending:
+            self._arm_hb()
 
     def submit(
         self,
@@ -1243,9 +1398,40 @@ class ClusterController:
             raise ValueError(f"unknown node {node!r}")
         self._push(self.now if at is None else at, "switch_up", (node,))
 
+    def fail_host(self, node: str, at: Optional[float] = None) -> None:
+        """Queue a host crash: when it fires, the worker leaves every
+        placement surface, its queued/running tasks are killed (transfer
+        tails released), and the kills are re-placed through the normal
+        policy path under :class:`RetryPolicy`."""
+        if not self.state.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self._push(self.now if at is None else at, "host_down", (node,))
+
+    def recover_host(self, node: str, at: Optional[float] = None) -> None:
+        """Queue a host recovery — re-admitted empty unless blacklisted."""
+        if not self.state.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self._push(self.now if at is None else at, "host_up", (node,))
+
+    def straggle(self, node: str, factor: float, at: Optional[float] = None) -> None:
+        """Queue a straggler onset: the task running on ``node`` when the
+        event fires has its *remaining* compute inflated by ``factor``
+        (the progress-rate model).  With ``speculation=True`` the LATE
+        rule may launch a backup copy against ledger residuals."""
+        if factor < 1.0:
+            raise ValueError(f"straggle factor must be >= 1, got {factor}")
+        self._push(self.now if at is None else at, "straggle", (node, factor))
+
     def inject_net(self, event) -> None:
         """Queue a ``repro.net.events`` NetworkEvent at its own ``at``."""
-        from ..net.events import LinkDown, LinkUp, SwitchDown, SwitchUp
+        from ..net.events import (
+            HostDown,
+            HostUp,
+            LinkDown,
+            LinkUp,
+            SwitchDown,
+            SwitchUp,
+        )
 
         if isinstance(event, LinkDown):
             self.fail_link(event.link, at=event.at)
@@ -1255,6 +1441,10 @@ class ClusterController:
             self.fail_switch(event.node, at=event.at)
         elif isinstance(event, SwitchUp):
             self.recover_switch(event.node, at=event.at)
+        elif isinstance(event, HostDown):
+            self.fail_host(event.node, at=event.at)
+        elif isinstance(event, HostUp):
+            self.recover_host(event.node, at=event.at)
         else:
             raise TypeError(f"not a network event: {event!r}")
 
@@ -1321,6 +1511,31 @@ class ClusterController:
                 self._ev_stats["net_events"] += 1
                 self.dataplane.recover_switch(node)
                 self._resume_flows(at)
+            elif kind == "host_down":
+                (node,) = payload
+                self._ev_stats["net_events"] += 1
+                self._on_host_down(node, at)
+            elif kind == "host_up":
+                (node,) = payload
+                self._ev_stats["net_events"] += 1
+                self._on_host_up(node, at)
+            elif kind == "straggle":
+                node, factor = payload
+                self._on_straggle(node, factor, at)
+            elif kind == "task_retry":
+                jid, tid, attempt = payload
+                self._retry_task(jid, tid, attempt, at)
+            elif kind == "spec_resolve":
+                (tid,) = payload
+                self._resolve_spec(tid, at)
+            elif kind == "hb":
+                self._hb_pending = False
+                if self.heartbeats is not None:
+                    # A sweep can _push retries, which re-arms the chain —
+                    # don't arm twice.
+                    self._hb_sweep(at)
+                    if self._events and not self._hb_pending:
+                        self._arm_hb()
         self.now = max(self.now, t)
         self._gc_tables(self.now)
         # Rolling horizon: a quiet controller (no events near ``t``) still
@@ -1436,6 +1651,228 @@ class ClusterController:
             self.flows[tag] = plan
         self._suspended = still
 
+    # -- host lifecycle + task re-execution (DESIGN.md §10) -----------------
+    def _kill_assignment(self, rec: "JobRecord", a: Assignment, at: float,
+                         cookie=None) -> float:
+        """Tear one unfinished assignment down: release the transfer's
+        unconsumed tail (PR 4 ``release_after`` — the boundary slot is
+        forfeited whole), account the delivered-but-unusable bytes as
+        waste, drop its flow rule, and remove it from the job record.
+        Returns the wasted byte count."""
+        ledger = self.state.ledger
+        wasted = 0.0
+        if a.transfer is not None and a.transfer.slot_fracs:
+            kept = ledger.release_after(a.transfer, at)
+            a.transfer = kept
+            wasted = ledger.plan_bytes(kept)
+            if cookie is None:
+                cookie = ("job", rec.jid, a.tid)
+            if cookie in self._flow_gen:
+                self.dataplane.tables.uninstall(cookie)
+                del self._flow_gen[cookie]
+        rec.wasted_bytes += wasted
+        self.fault_stats["wasted_bytes"] += wasted
+        rec.assignments.remove(a)
+        return wasted
+
+    def _on_host_down(self, node: str, at: float) -> None:
+        """Host crash: leave every placement surface, kill the machine's
+        unfinished work, then reroute in-flight transfers it was sourcing.
+
+        Ordering matters: kills run *before* ``_reroute_dead`` so the
+        victim sweep never tries to replan a transfer toward a dead
+        destination (which has no surviving path by definition); the
+        sweep then only sees transfers *from* the dead host's replicas
+        toward live nodes, which reroute to surviving replicas."""
+        if node in self.dataplane.dead_hosts:
+            return  # duplicate crash event
+        self.fault_stats["host_down"] += 1
+        n_fail = self._host_failures.get(node, 0) + 1
+        self._host_failures[node] = n_fail
+        if n_fail >= self.retry.blacklist_after and node not in self.blacklist:
+            self.blacklist.add(node)
+            self.fault_stats["blacklisted"] += 1
+        self.dataplane.fail_host(node)
+        self.state.remove_worker(node)
+        retries: List[Tuple[int, int]] = []
+        for jid in sorted(self.jobs):
+            rec = self.jobs[jid]
+            if not rec.placed:
+                continue
+            for a in [x for x in rec.assignments
+                      if x.node == node and x.finish > at + _EPS]:
+                self.fault_stats["killed"] += 1
+                spec = self._specs.get(a.tid)
+                if spec is not None and (spec.primary is a or spec.backup is a):
+                    # Its speculation partner survives: resolve by forfeit
+                    # instead of re-executing.
+                    self._kill_assignment(
+                        rec, a, at,
+                        cookie=("spec", jid, a.tid) if spec.backup is a
+                        else None,
+                    )
+                    del self._specs[a.tid]
+                    if spec.backup is not a:
+                        self.fault_stats["spec_win"] += 1
+                    elif self.speculation:
+                        # The backup died with the host but the straggler
+                        # is still slow — relaunch against the post-crash
+                        # ledger (LATE keeps one live backup per task).
+                        self._maybe_speculate(rec, spec.primary, at)
+                    continue
+                self._kill_assignment(rec, a, at)
+                retries.append((jid, a.tid))
+        self._reroute_dead(at)
+        if self.retry.max_attempts > 0:
+            for jid, tid in retries:
+                self._push(at + self.retry.backoff(0), "task_retry",
+                           (jid, tid, 0))
+        rec_t = self.obs.trace
+        if rec_t.enabled:
+            rec_t.record("host_down", node=node, at=at, killed=len(retries))
+
+    def _on_host_up(self, node: str, at: float) -> None:
+        """Host recovery: re-admit the worker empty (idle = now) unless it
+        crashed its way onto the blacklist — then it stays priced out."""
+        if node not in self.dataplane.dead_hosts:
+            return  # never failed (or duplicate recovery)
+        if node in self.blacklist:
+            return  # administratively down
+        self.fault_stats["host_up"] += 1
+        self.dataplane.recover_host(node)
+        self.state.add_worker(node, at)
+        self._resume_flows(at)
+
+    def _retry_task(self, jid: int, tid: int, attempt: int, at: float) -> None:
+        """Re-place one killed task through the normal (bandwidth-aware)
+        policy path; a transient all-replicas-dead window burns an attempt
+        and backs off, exhaustion raises — no silent stalls."""
+        rec = self.jobs.get(jid)
+        if rec is None:
+            return
+        task = next(t for t in rec.tasks if t.tid == tid)
+        self.fault_stats["retries"] += 1
+        try:
+            a = self.policy.place(task, self.state)
+        except UnroutableError:
+            nxt = attempt + 1
+            if nxt >= self.retry.max_attempts:
+                raise UnroutableError(
+                    f"task {tid}: no live replica after {nxt} attempts"
+                )
+            self._push(at + self.retry.backoff(nxt), "task_retry",
+                       (jid, tid, nxt))
+            return
+        rec.assignments.append(a)
+        rec.reexecuted += 1
+        self.fault_stats["reexecuted"] += 1
+        if a.transfer is not None and a.transfer.slot_fracs:
+            self._install(("job", jid, tid), a.source, a.node, a.transfer)
+            self._live_jobs[jid] = max(
+                self._live_jobs.get(jid, 0.0), a.transfer.end
+            )
+
+    # -- stragglers + LATE speculation --------------------------------------
+    def _on_straggle(self, node: str, factor: float, at: float) -> None:
+        """Progress-rate drop: the task running on ``node`` now needs
+        ``factor``× its remaining compute.  Node exclusivity means at most
+        one assignment is running; queued tasks are not stragglers yet."""
+        victim = vrec = None
+        for rec in self.jobs.values():
+            for a in rec.assignments:
+                if a.node != node or a.finish <= at + _EPS:
+                    continue
+                # Running task wins; otherwise the node's next queued task
+                # (the slowdown is a property of the machine at ``at``).
+                key = (a.start > at + _EPS, a.start, a.tid)
+                if victim is None or key < (victim.start > at + _EPS,
+                                            victim.start, victim.tid):
+                    victim, vrec = a, rec
+        if victim is None:
+            return
+        # Remaining (running) or whole (queued) compute inflates.
+        t0 = max(at, victim.start)
+        victim.finish = t0 + (victim.finish - t0) * factor
+        self._retime_nodes({node})
+        if self.speculation and victim.tid not in self._specs:
+            self._maybe_speculate(vrec, victim, at)
+
+    def _maybe_speculate(self, rec: "JobRecord", a: Assignment,
+                         at: float) -> None:
+        """The LATE rule, priced by the ledger: launch a backup copy on
+        the least-loaded other worker iff the ledger's *residual* slots
+        say the backup (data movement included) finishes before the
+        straggler's projected finish.  A progress-rate-only rule would
+        launch backups whose transfers crawl through congested links and
+        finish after the straggler anyway — pure waste."""
+        task = next(t for t in rec.tasks if t.tid == a.tid)
+        state = self.state
+        cands = [n for n in state.workers if n != a.node]
+        if not cands:
+            return
+        bnode = min(cands, key=lambda n: (state.idle[n], n))
+        plan = src = None
+        if bnode in task.replicas:
+            backup_finish = state.idle[bnode] + task.compute
+        else:
+            try:
+                src, _rows, plan = state.choose_source_path(
+                    task, bnode, at=state.idle[bnode]
+                )
+            except UnroutableError:
+                return
+            start = plan.end if plan.slot_fracs else state.idle[bnode]
+            backup_finish = start + task.compute
+        if backup_finish >= a.finish - _EPS:
+            return  # residuals say the backup loses: don't burn bandwidth
+        if plan is None:
+            b = state.commit_local(task, bnode)
+        else:
+            b = state.commit_remote(task, bnode, src, plan)
+            self._install(("spec", rec.jid, a.tid), src, bnode, plan)
+            self._live_jobs[rec.jid] = max(
+                self._live_jobs.get(rec.jid, 0.0), plan.end
+            )
+        rec.assignments.append(b)
+        rec.speculative += 1
+        self.fault_stats["spec_launch"] += 1
+        self._specs[a.tid] = _SpecRecord(rec.jid, a, b)
+        self._push(min(a.finish, b.finish), "spec_resolve", (a.tid,))
+
+    def _resolve_spec(self, tid: int, at: float) -> None:
+        """First finisher wins; the loser's remaining slots are released
+        and its delivered bytes counted as waste.  Retimes may have pushed
+        both copies past the scheduled resolve time — re-arm at the new
+        earliest finish instead of guessing."""
+        spec = self._specs.get(tid)
+        if spec is None:
+            return  # resolved by forfeit (host crash) meanwhile
+        p, b = spec.primary, spec.backup
+        done = min(p.finish, b.finish)
+        if done > at + _EPS:
+            self._push(done, "spec_resolve", (tid,))
+            return
+        winner, loser = (p, b) if p.finish <= b.finish + _EPS else (b, p)
+        del self._specs[tid]
+        rec = self.jobs[spec.jid]
+        self._kill_assignment(
+            rec, loser, at,
+            cookie=("spec", spec.jid, tid) if loser is b else None,
+        )
+        if winner is b:
+            self.fault_stats["spec_win"] += 1
+        # The loser's node genuinely lost a queue entry: let its remaining
+        # tasks rewind to their natural no-idle starts (same contract as a
+        # reroute's retime) — otherwise the win never reaches tasks queued
+        # behind the dead straggler and speculation can't move makespan.
+        rewind = {a2.tid for r2 in self.jobs.values()
+                  for a2 in r2.assignments if a2.node == loser.node}
+        self._retime_nodes({loser.node}, rewind)
+        rec_t = self.obs.trace
+        if rec_t.enabled:
+            rec_t.record("spec_resolve", tid=tid, at=at,
+                         winner=winner.node, loser=loser.node)
+
     def _retime_nodes(self, nodes, rerouted_tids=frozenset()) -> None:
         """Recompute the compute timeline of every touched node.
 
@@ -1533,4 +1970,7 @@ class ClusterController:
         n = len(rec.assignments)
         lr = sum(1 for a in rec.assignments if a.local) / n if n else 0.0
         return JobMetrics(mt=mt, rt=jt - mt, jt=jt, lr=lr,
-                          rerouted=rec.rerouted)
+                          rerouted=rec.rerouted,
+                          reexecuted=rec.reexecuted,
+                          speculative=rec.speculative,
+                          wasted_bytes=rec.wasted_bytes)

@@ -183,6 +183,9 @@ class JobMetrics:
     jt: float
     lr: float
     rerouted: int = 0  # transfers re-planned after link/switch failures
+    reexecuted: int = 0     # tasks killed by host crashes and re-placed
+    speculative: int = 0    # LATE backup copies launched
+    wasted_bytes: float = 0.0  # delivered bytes discarded (kills + spec losers)
 
     def to_dict(self) -> dict:
         """Plain-dict form for the obs snapshot / JSON artifacts."""
@@ -192,6 +195,9 @@ class JobMetrics:
             "jt": self.jt,
             "lr": self.lr,
             "rerouted": self.rerouted,
+            "reexecuted": self.reexecuted,
+            "speculative": self.speculative,
+            "wasted_bytes": self.wasted_bytes,
         }
 
 

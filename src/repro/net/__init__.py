@@ -12,6 +12,8 @@ estimators, and the measured-bandwidth :class:`BeliefState` that
 """
 from .dataplane import DataPlane
 from .events import (
+    HostDown,
+    HostUp,
     LinkDown,
     LinkUp,
     NetworkEvent,
@@ -36,6 +38,8 @@ __all__ = [
     "LinkStatsMonitor",
     "WindowRateEstimator",
     "FlowRule",
+    "HostDown",
+    "HostUp",
     "FlowTable",
     "FlowTables",
     "LinkDown",

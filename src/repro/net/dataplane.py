@@ -31,6 +31,7 @@ class DataPlane:
         self.tables = FlowTables(fabric)
         self.dead_links: Set[str] = set()    # individually failed
         self.dead_switches: Set[str] = set()
+        self.dead_hosts: Set[str] = set()    # crashed workers/sources
         self._dead_all: Optional[FrozenSet[str]] = None  # overlay cache
         #: Monotone counter bumped on every liveness mutation — cheap cache
         #: key for consumers (the wavefront planner) whose candidate sets
@@ -61,24 +62,41 @@ class DataPlane:
         self._dead_all = None
         self.liveness_version += 1
 
+    def fail_host(self, node: str) -> None:
+        """Host crash: its NIC links die with it (kept distinct from
+        ``dead_switches`` so 'host crashed' is semantically visible)."""
+        if not self.fabric.has_node(node):
+            raise ValueError(f"unknown node {node!r}")
+        self.dead_hosts.add(node)
+        self._dead_all = None
+        self.liveness_version += 1
+
+    def recover_host(self, node: str) -> None:
+        self.dead_hosts.discard(node)
+        self._dead_all = None
+        self.liveness_version += 1
+
     def all_dead_links(self) -> FrozenSet[str]:
-        """Explicitly failed links plus every link touching a dead switch."""
+        """Explicitly failed links plus every link touching a dead switch
+        or crashed host."""
         if self._dead_all is None:
             dead = set(self.dead_links)
             for sw in self.dead_switches:
                 dead.update(self.fabric.incident_links(sw))
+            for h in self.dead_hosts:
+                dead.update(self.fabric.incident_links(h))
             self._dead_all = frozenset(dead)
         return self._dead_all
 
     def has_failures(self) -> bool:
-        return bool(self.dead_links or self.dead_switches)
+        return bool(self.dead_links or self.dead_switches or self.dead_hosts)
 
     def link_alive(self, name: str) -> bool:
         return name not in self.all_dead_links()
 
     def host_alive(self, node: str) -> bool:
         """A host can send/receive iff it is up and has a live incident link."""
-        if node in self.dead_switches:
+        if node in self.dead_switches or node in self.dead_hosts:
             return False
         dead = self.all_dead_links()
         return any(l not in dead for l in self.fabric.incident_links(node))
@@ -88,7 +106,9 @@ class DataPlane:
         self, src: str, dst: str, k: Optional[int] = None
     ) -> Tuple[Path, ...]:
         """Surviving candidate paths src→dst (raises UnroutableError)."""
-        if src in self.dead_switches or dst in self.dead_switches:
+        down = self.dead_switches
+        if (src in down or dst in down
+                or src in self.dead_hosts or dst in self.dead_hosts):
             raise UnroutableError(f"endpoint down: {src!r} -> {dst!r}")
         return self.engine.route(src, dst, self.all_dead_links(), k=k)
 
@@ -102,10 +122,8 @@ class DataPlane:
         replicas per victim and raises only when a victim has none left.
         """
         dead = self.all_dead_links()
-        live = [
-            p for p in pairs
-            if p[0] not in self.dead_switches and p[1] not in self.dead_switches
-        ]
+        down = self.dead_switches | self.dead_hosts
+        live = [p for p in pairs if p[0] not in down and p[1] not in down]
         out = self.engine.route_batch(live, dead, k=k)
         for p in pairs:
             out.setdefault(p, ())

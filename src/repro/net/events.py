@@ -49,7 +49,25 @@ class SwitchUp:
     at: float
 
 
-NetworkEvent = Union[LinkDown, LinkUp, SwitchDown, SwitchUp]
+@dataclass(frozen=True)
+class HostDown:
+    """Host crash at ``at``: its NIC links die, queued/running tasks are
+    killed and re-placed through the normal (bandwidth-aware) policy path."""
+
+    node: str
+    at: float
+
+
+@dataclass(frozen=True)
+class HostUp:
+    """Host recovery at ``at`` — the worker is re-admitted (unless
+    blacklisted) with its idle clock set to the recovery time."""
+
+    node: str
+    at: float
+
+
+NetworkEvent = Union[LinkDown, LinkUp, SwitchDown, SwitchUp, HostDown, HostUp]
 
 
 @dataclass(frozen=True)

@@ -30,22 +30,37 @@ class HostState:
 
 
 class HeartbeatMonitor:
-    def __init__(self, hosts: Sequence[str], grace_s: float = 30.0):
-        now = time.monotonic()
+    """Liveness by heartbeat age.
+
+    ``clock`` is the time source consulted whenever a call omits ``now``;
+    it defaults to ``time.monotonic`` for the real launcher, but any
+    controller integration must inject a *sim-time* clock (see
+    ``ClusterController.attach_heartbeats``) — wall-clock sweeps inside a
+    discrete-event loop are nondeterministic by construction.
+    """
+
+    def __init__(self, hosts: Sequence[str], grace_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        now = clock()
         self.grace_s = grace_s
         self.hosts: Dict[str, HostState] = {
             h: HostState(h, now) for h in hosts
         }
 
     def beat(self, host: str, now: Optional[float] = None) -> None:
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         st = self.hosts[host]
         st.last_beat = now
         st.alive = True
 
+    def revive(self, host: str, now: Optional[float] = None) -> None:
+        """Re-admit a recovered host (a beat on a dead host also revives)."""
+        self.beat(host, now)
+
     def sweep(self, now: Optional[float] = None) -> List[str]:
         """→ newly-dead hosts."""
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         dead = []
         for st in self.hosts.values():
             if st.alive and now - st.last_beat > self.grace_s:

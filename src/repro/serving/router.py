@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core.controller import BassPolicy, ClusterController
 from ..core.tasks import Assignment, Task
-from ..core.topology import Fabric, UnroutableError, tpu_dcn_fabric
+from ..core.topology import Fabric, tpu_dcn_fabric
 from .engine import Request
 
 #: Backlog surcharge (seconds) pricing an unreachable replica out of the
@@ -41,6 +41,10 @@ class RouteDecision:
     migrated_from: Optional[str]
     ready_at: float
     slots: Tuple[int, ...]
+    #: True when every replica stayed unreachable through the retry window:
+    #: nothing was committed, ``ready_at`` is +inf, and ``replica`` is only
+    #: a parking hint (the coldest configured replica) — shed or requeue.
+    degraded: bool = False
 
 
 class BassRouter:
@@ -52,7 +56,15 @@ class BassRouter:
         bytes_per_ctx_token: float = 2 * 8 * 128 * 2,  # kv bf16, 8 heads × 128
         slot_duration: float = 0.05,
         nic_bytes_per_s: float = 25e9,
+        max_retries: int = 3,
+        retry_backoff_s: float = 0.05,
     ):
+        #: Transient all-replicas-dead windows (mid-failover) are retried
+        #: with exponential sim-time backoff before degrading — a router
+        #: that propagates UnroutableError turns a 50 ms blip into a
+        #: caller-visible crash.
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.replicas = list(replicas)
         if fabric is None:
             # star fabric over the replica names (25 GB/s NICs)
@@ -94,12 +106,29 @@ class BassRouter:
         return self.controller.dataplane.host_alive(replica)
 
     def route(self, req: Request, now: float = 0.0) -> RouteDecision:
-        if not any(self._alive(r) for r in self.replicas):
-            # No silent stalls: parking a request on a partitioned replica
-            # would strand it behind the 1e15 s backlog surcharge.
-            raise UnroutableError(
-                f"request {req.rid}: every replica is unreachable"
-            )
+        at = max(now, self.controller.now)
+        attempt = 0
+        while not any(self._alive(r) for r in self.replicas):
+            if attempt >= self.max_retries:
+                # Degraded mode: every replica stayed unreachable through
+                # the whole backoff window.  Commit nothing and surface a
+                # non-routable decision instead of raising — parking a
+                # request on a partitioned replica would strand it behind
+                # the 1e15 s backlog surcharge, and propagating would turn
+                # a transient failover window into a caller-visible crash.
+                return RouteDecision(
+                    rid=req.rid,
+                    replica=self._coldest(),
+                    migrated_from=None,
+                    ready_at=float("inf"),
+                    slots=(),
+                    degraded=True,
+                )
+            attempt += 1
+            # Advance sim time so queued recoveries (link_up/host_up events
+            # already on the controller heap) get a chance to fire.
+            at += self.retry_backoff_s * (2 ** (attempt - 1))
+            self.controller.run_until(at)
         work_s = req.max_new * self.decode_s_per_token
         holders = [
             r
@@ -120,7 +149,7 @@ class BassRouter:
         # concurrent frontends may arrive slightly out of order.
         # Unreachable replicas (dead NIC / partitioned) are priced out of the
         # minnow choice instead of removed — recovery needs no rebuild.
-        at = max(now, self.controller.now)
+        at = max(at, self.controller.now)
         self.controller.state.set_idle(
             {
                 r: at + self.backlog.get(r, 0.0)

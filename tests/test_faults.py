@@ -1,0 +1,451 @@
+"""Host-failure fault injection, retries, LATE speculation (DESIGN.md §10).
+
+Covers the robustness contract end to end:
+
+* exception parity — a task whose replicas are all dead raises
+  :class:`UnroutableError` after bounded retries (no silent stalls);
+* recovery — a recovered host is re-admitted and serves new jobs, and a
+  retry that lands inside the recovery window succeeds;
+* exact slot release — killing a host mid-transfer releases precisely
+  the unconsumed tail of every victim plan (property test against a
+  never-failed twin controller, mirroring ``test_reroute_props``);
+* blacklist — a host that crashes ``blacklist_after`` times stays out;
+* FaultPlan — same seed ⇒ identical scripts and byte-identical runs;
+* heartbeats — missed beats become ``fail_host`` in sim time;
+* router — transient all-dead windows retry then recover; permanent
+  ones degrade instead of raising.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    BassPolicy,
+    ClusterController,
+    MinnowHeap,
+    RetryPolicy,
+)
+from repro.core.faults import FaultPlan, HostCrash, StragglerOnset
+from repro.core.tasks import Task
+from repro.core.topology import UnroutableError, storage_hosts, two_tier_fabric
+from repro.net.events import HostDown, HostUp
+from repro.net.fattree import fat_tree_fabric
+
+from test_wavefront import canon
+
+
+def _controller(fab, workers, idle=None, retry=None, speculation=False,
+                slot=0.5):
+    return ClusterController(
+        fab, workers, BassPolicy(), idle=idle, slot_duration=slot,
+        retry=retry or RetryPolicy(max_attempts=3, backoff_s=0.25),
+        speculation=speculation,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MinnowHeap membership churn
+# ---------------------------------------------------------------------------
+
+
+def test_minnow_heap_insert_remove():
+    idle = {"a": 3.0, "b": 1.0, "c": 2.0}
+    h = MinnowHeap(idle, list(idle))
+    assert h.minnow() == "b"
+    h.remove("b")
+    assert h.minnow() == "c"
+    h.insert("b", 0.5)
+    assert h.minnow() == "b"
+    with pytest.raises(ValueError):
+        h.insert("b", 9.0)
+    # removing from the middle must keep every survivor addressable
+    h.remove("c")
+    h.update("a", 0.1)
+    assert h.minnow() == "a"
+    with pytest.raises(KeyError):
+        h.remove("c")
+
+
+def test_cluster_state_worker_membership():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H0", "H1", "H2"])
+    s = ctrl.state
+    s.remove_worker("H1")
+    assert "H1" not in s.workers_set and "H1" not in s.idle
+    assert set(s.workers) == {"H0", "H2"}
+    s.remove_worker("H1")  # idempotent
+    s.add_worker("H1", 5.0)
+    assert s.idle["H1"] == 5.0 and "H1" in s.workers_set
+
+
+# ---------------------------------------------------------------------------
+# Exception parity + recovery
+# ---------------------------------------------------------------------------
+
+
+def _one_remote_task(**kw):
+    """H0-replica shard computed on H2/H3 (upper tier crossing)."""
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"], **kw)
+    ctrl.submit([Task(tid=1, size=200.0, compute=4.0, replicas=("H0",))],
+                at=0.0)
+    ctrl.run_until(0.0)
+    (a,) = ctrl.jobs[0].assignments
+    return ctrl, a
+
+
+def test_all_replicas_dead_raises_unroutable():
+    ctrl, a = _one_remote_task()
+    # Kill the source after its transfer delivered (no reroute path), then
+    # the worker mid-compute: every retry finds no live replica.
+    ctrl.fail_host("H0", at=a.transfer.end + 0.1)
+    ctrl.fail_host(a.node, at=a.transfer.end + 0.2)
+    with pytest.raises(UnroutableError, match="no live replica"):
+        ctrl.run()
+    assert ctrl.fault_stats["killed"] == 1
+    assert ctrl.fault_stats["reexecuted"] == 0
+
+
+def test_retry_succeeds_inside_recovery_window():
+    ctrl, a = _one_remote_task()
+    t0 = a.transfer.end + 0.1
+    ctrl.fail_host("H0", at=t0)
+    ctrl.fail_host(a.node, at=t0 + 0.1)
+    # The source comes back before the bounded retries exhaust: the
+    # transient all-replicas-dead window burns attempts, then places.
+    ctrl.recover_host("H0", at=t0 + 0.5)
+    ctrl.run()
+    rec = ctrl.jobs[0]
+    assert rec.reexecuted == 1
+    (b,) = rec.assignments
+    assert b.node != a.node and b.start >= t0 + 0.5
+    assert ctrl.fault_stats["retries"] >= 2  # at least one burned attempt
+
+
+def test_recovery_readmits_for_new_jobs():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"])
+    ctrl.fail_host("H2", at=0.0)
+    ctrl.recover_host("H2", at=2.0)
+    ctrl.submit([Task(tid=i, size=50.0, compute=1.0, replicas=("H0",))
+                 for i in range(4)], at=3.0)
+    ctrl.run()
+    nodes = {a.node for a in ctrl.jobs[0].assignments}
+    assert nodes == {"H2", "H3"}  # the recovered worker serves again
+    for a in ctrl.jobs[0].assignments:
+        if a.node == "H2":
+            assert a.start >= 2.0
+
+
+def test_host_events_via_inject_net():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"])
+    ctrl.inject_net(HostDown("H2", at=1.0))
+    ctrl.inject_net(HostUp("H2", at=2.0))
+    ctrl.run()
+    assert ctrl.fault_stats["host_down"] == 1
+    assert ctrl.fault_stats["host_up"] == 1
+    assert "H2" in ctrl.state.workers_set
+
+
+def test_blacklisted_host_stays_out():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"],
+                       retry=RetryPolicy(max_attempts=0, blacklist_after=2))
+    for k in range(2):
+        ctrl.fail_host("H2", at=float(k))
+        ctrl.recover_host("H2", at=float(k) + 0.5)
+    ctrl.run()
+    assert "H2" in ctrl.blacklist
+    assert "H2" in ctrl.dataplane.dead_hosts  # second recovery refused
+    assert "H2" not in ctrl.state.workers_set
+    assert ctrl.fault_stats["blacklisted"] == 1
+
+
+def test_straggle_factor_validated():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"])
+    with pytest.raises(ValueError):
+        ctrl.straggle("H2", 0.5)
+    with pytest.raises(ValueError):
+        ctrl.fail_host("NOPE")
+
+
+# ---------------------------------------------------------------------------
+# Exact slot release on kill-mid-transfer (never-failed twin property)
+# ---------------------------------------------------------------------------
+
+
+def _twin_case(seed):
+    rng = np.random.default_rng(seed)
+    fab = two_tier_fabric(2, 4, 100.0, 60.0)
+    hosts = [f"H{i}" for i in range(8)]
+    sources, workers = hosts[:4], hosts[4:]
+    tasks = [
+        Task(tid=i, size=float(rng.uniform(80, 500)),
+             compute=float(rng.uniform(1, 5)),
+             replicas=tuple(rng.choice(sources, 2, replace=False)))
+        for i in range(int(rng.integers(4, 10)))
+    ]
+    idle = {w: float(rng.uniform(0, 2)) for w in workers}
+    return fab, workers, idle, tasks, rng
+
+
+def _released_tail(ledger, plan, t):
+    """(rows, slot, frac) triples release_after frees at cut time ``t`` —
+    the boundary slot is forfeited whole (DESIGN.md §4)."""
+    if not plan.slot_fracs or t >= plan.end:
+        return []
+    cut = (plan.slot_fracs[0][0] if t <= plan.start
+           else ledger.slot_of(t))
+    return [(plan.links, s, f) for s, f in plan.slot_fracs if s >= cut]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_host_kill_releases_exactly_unconsumed_slots(seed):
+    """Kill one worker mid-storm with re-execution disabled: the failed
+    controller's ledger must equal the never-failed twin's minus exactly
+    the victims' unconsumed tails, and the wasted-byte counter must equal
+    the delivered bytes of the truncated plans."""
+    fab, workers, idle, tasks, rng = _twin_case(seed)
+
+    twin = _controller(fab, workers, idle=dict(idle),
+                       retry=RetryPolicy(max_attempts=0))
+    twin.state.ledger.retire_stride = None
+    twin.submit(tasks, at=0.0)
+    twin.run_until(0.0)
+
+    victim_node = workers[int(rng.integers(len(workers)))]
+    t_kill = float(rng.uniform(0.3, 4.0))
+
+    ctrl = _controller(fab, workers, idle=dict(idle),
+                       retry=RetryPolicy(max_attempts=0))
+    ctrl.state.ledger.retire_stride = None
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)
+    ctrl.fail_host(victim_node, at=t_kill)
+    ctrl.run_until(t_kill + 0.01)
+
+    led = twin.state.ledger
+    expected = led.reserved.copy()
+    wasted = 0.0
+    for a in twin.jobs[0].assignments:
+        if a.node != victim_node or a.finish <= t_kill + 1e-9:
+            continue
+        if a.transfer is None or not a.transfer.slot_fracs:
+            continue
+        for links, s, f in _released_tail(led, a.transfer, t_kill):
+            expected[list(links), s] = np.maximum(
+                expected[list(links), s] - f, 0.0
+            )
+        wasted += led.plan_bytes(_truncated(led, a.transfer, t_kill))
+    got = ctrl.state.ledger.reserved
+    n = min(expected.shape[1], got.shape[1])
+    assert np.allclose(got[:, :n], expected[:, :n], atol=1e-12)
+    assert not got[:, n:].any() and not expected[:, n:].any()
+    assert ctrl.jobs[0].wasted_bytes == pytest.approx(wasted)
+    # re-execution disabled: kills only, nothing re-placed
+    assert ctrl.fault_stats["reexecuted"] == 0
+    surviving = {a.tid for a in ctrl.jobs[0].assignments}
+    assert all(a.node != victim_node or a.finish <= t_kill + 1e-9
+               for a in ctrl.jobs[0].assignments)
+    assert surviving <= {t.tid for t in tasks}
+
+
+def _truncated(ledger, plan, t):
+    """The kept (delivered) prefix of ``plan`` cut at ``t`` — pure
+    arithmetic twin of ``release_after`` with no ledger scatter."""
+    from repro.core.timeslot import TransferPlan
+
+    if not plan.slot_fracs or t >= plan.end:
+        return plan
+    cut = (plan.slot_fracs[0][0] if t <= plan.start
+           else ledger.slot_of(t))
+    keep = tuple((s, f) for s, f in plan.slot_fracs if s < cut)
+    if not keep:
+        return TransferPlan(plan.links, plan.start, plan.start, ())
+    return TransferPlan(plan.links, plan.start,
+                        min(plan.end, cut * ledger.slot_duration), keep)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_same_seed_same_script():
+    hosts = [f"H{i}" for i in range(12)]
+    kw = dict(n_crashes=3, mttr=2.0, n_stragglers=4,
+              slow_factor=(2.0, 5.0))
+    p1 = FaultPlan.generate(42, hosts, 1.0, 9.0, **kw)
+    p2 = FaultPlan.generate(42, hosts, 1.0, 9.0, **kw)
+    assert p1 == p2
+    assert p1 != FaultPlan.generate(43, hosts, 1.0, 9.0, **kw)
+    ats = [e.at for e in p1.events]
+    assert ats == sorted(ats)
+    assert all(1.0 <= e.at < 9.0 for e in p1.events)
+    assert sum(isinstance(e, HostCrash) for e in p1.events) == 3
+    assert sum(isinstance(e, StragglerOnset) for e in p1.events) == 4
+    for e in p1.events:
+        if isinstance(e, HostCrash):
+            assert e.recover_at == pytest.approx(e.at + 2.0)
+
+
+def test_fault_plan_apply_is_byte_deterministic():
+    fab = fat_tree_fabric(4, link_mbps=100.0)
+    hosts = storage_hosts(fab)
+    sources, workers = hosts[:8], hosts[8:]
+    rng = np.random.default_rng(3)
+    tasks = [
+        Task(tid=i, size=float(32 + 16 * (i % 3)), compute=2.0,
+             replicas=tuple(rng.choice(sources, 3, replace=False)))
+        for i in range(12)
+    ]
+
+    def run():
+        ctrl = ClusterController(
+            fab, workers, BassPolicy(multipath=True), slot_duration=0.1,
+            retry=RetryPolicy(max_attempts=4, backoff_s=0.5),
+            speculation=True,
+        )
+        ctrl.submit(tasks, at=0.0)
+        ctrl.run_until(0.0)
+        FaultPlan.generate(5, workers, 0.5, 3.0, n_crashes=2, mttr=2.0,
+                           n_stragglers=3, slow_factor=(4.0, 8.0)).apply(ctrl)
+        ctrl.run()
+        return ctrl
+
+    c1, c2 = run(), run()
+    assert canon(c1.schedule().assignments) == canon(c2.schedule().assignments)
+    assert dict(c1.fault_stats) == dict(c2.fault_stats)
+    assert c1.fault_stats["killed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# LATE speculation
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_beats_straggler_and_releases_loser():
+    fab = two_tier_fabric(2, 3, 100.0, 100.0)
+    workers = ["H3", "H4", "H5"]
+
+    def run(speculation):
+        ctrl = _controller(fab, workers, speculation=speculation, slot=0.1)
+        ctrl.submit([Task(tid=1, size=50.0, compute=3.0, replicas=("H0",))],
+                    at=0.0)
+        ctrl.run_until(0.0)
+        (a,) = ctrl.jobs[0].assignments
+        ctrl.straggle(a.node, 8.0, at=a.start + 0.2)
+        ctrl.run()
+        return ctrl
+
+    off, on = run(False), run(True)
+    assert on.fault_stats["spec_launch"] == 1
+    assert on.fault_stats["spec_win"] == 1
+    assert on.jobs[0].makespan < off.jobs[0].makespan
+    # first finisher won; the loser was torn down — one copy survives
+    assert len(on.jobs[0].assignments) == 1
+    assert on.jobs[0].wasted_bytes >= 0.0
+    assert not on._specs
+
+
+def test_speculation_gate_skips_hopeless_backup():
+    """A mild straggle on an otherwise-loaded cluster must not launch a
+    backup the ledger says cannot finish earlier."""
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"], speculation=True, slot=0.1)
+    # Load both workers so any backup queues behind real work.
+    ctrl.submit([Task(tid=i, size=10.0, compute=5.0, replicas=("H0",))
+                 for i in range(4)], at=0.0)
+    ctrl.run_until(0.0)
+    a = min(ctrl.jobs[0].assignments, key=lambda x: x.start)
+    ctrl.straggle(a.node, 1.05, at=a.start + 0.1)
+    ctrl.run()
+    assert ctrl.fault_stats["spec_launch"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats drive fail_host in sim time
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_misses_become_host_failures():
+    fab = two_tier_fabric(2, 2, 100.0, 100.0)
+    ctrl = _controller(fab, ["H2", "H3"], slot=0.5,
+                       retry=RetryPolicy(max_attempts=3, backoff_s=0.25))
+    mon = ctrl.attach_heartbeats(interval=0.5, grace_s=1.5)
+    ctrl.submit([Task(tid=i, size=50.0, compute=2.0, replicas=("H0",))
+                 for i in range(4)], at=0.0)
+    # A straggler of a job keeps the event heap non-empty past the grace
+    # window — the sweep chain lives only while real events are queued.
+    ctrl.submit([Task(tid=9, size=50.0, compute=1.0, replicas=("H0",))],
+                at=4.0)
+    victim = "H3"
+    mon.beat("H2", 1e9)  # healthy forever; the victim never beats
+    ctrl.run()  # chain dies with the event heap — must terminate
+    assert victim in ctrl.dataplane.dead_hosts
+    assert ctrl.fault_stats["host_down"] == 1
+    rec = ctrl.jobs[0]
+    assert sorted(a.tid for a in rec.assignments) == [0, 1, 2, 3]
+    assert all(a.node == "H2" for a in rec.assignments)
+    assert rec.reexecuted > 0
+    # the monitor ran on sim time, never the wall clock
+    assert mon.clock() == ctrl.now
+
+
+def test_heartbeat_monitor_custom_clock_unit():
+    from repro.runtime.ft import HeartbeatMonitor
+
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b"], grace_s=1.0, clock=lambda: t[0])
+    t[0] = 0.9
+    assert mon.sweep() == []
+    mon.beat("a")
+    t[0] = 1.5
+    assert mon.sweep() == ["b"]
+    mon.revive("b")
+    mon.beat("a")
+    t[0] = 2.0
+    assert mon.sweep() == []  # both beat at 1.5
+
+
+# ---------------------------------------------------------------------------
+# Router: transient windows retry; permanent ones degrade
+# ---------------------------------------------------------------------------
+
+
+def _router():
+    from repro.serving.router import BassRouter
+
+    return BassRouter(["r0", "r1"], slot_duration=0.05,
+                      max_retries=3, retry_backoff_s=0.05)
+
+
+def _req(rid=0):
+    from repro.serving.engine import Request
+
+    return Request(rid=rid, prompt=np.arange(8, dtype=np.int32), max_new=4)
+
+
+def test_router_degrades_instead_of_raising():
+    r = _router()
+    r.fail_link("nic0")
+    r.fail_link("nic1")
+    before = r.ledger.reserved.copy()
+    d = r.route(_req(), now=0.0)
+    assert d.degraded and d.ready_at == float("inf") and d.slots == ()
+    assert d.replica in ("r0", "r1")  # parking hint only
+    np.testing.assert_array_equal(r.ledger.reserved, before)  # no commit
+
+
+def test_router_retry_rides_out_transient_window():
+    r = _router()
+    r.fail_link("nic0")
+    r.fail_link("nic1")
+    # Recovery is already queued inside the backoff window: the retry
+    # loop advances sim time until it fires, then routes normally.
+    r.controller.recover_link("nic1", at=0.08)
+    d = r.route(_req(), now=0.0)
+    assert not d.degraded
+    assert d.replica == "r1"
+    assert d.ready_at < float("inf")

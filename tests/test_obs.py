@@ -160,9 +160,11 @@ def test_controller_snapshot_covers_every_layer():
 def test_job_metrics_to_dict_roundtrip():
     from repro.core.simulator import JobMetrics
 
-    m = JobMetrics(mt=3.0, rt=1.0, jt=4.0, lr=0.5, rerouted=2)
+    m = JobMetrics(mt=3.0, rt=1.0, jt=4.0, lr=0.5, rerouted=2,
+                   reexecuted=1, speculative=2, wasted_bytes=40.0)
     assert m.to_dict() == {"mt": 3.0, "rt": 1.0, "jt": 4.0, "lr": 0.5,
-                           "rerouted": 2}
+                           "rerouted": 2, "reexecuted": 1, "speculative": 2,
+                           "wasted_bytes": 40.0}
 
 
 # --------------------------------------------------------- artifact append
