@@ -1,0 +1,255 @@
+"""Benchmark: control-plane crash-recovery (DESIGN.md §11).
+
+A k-ary fat-tree runs the bench_faults host-crash/straggler storm under a
+write-ahead-journaled controller while the *control plane itself* is
+killed and recovered.  Four legs per config:
+
+* ``uncrashed``  — the journaled baseline storm (also the never-crashed
+  twin every recovery below must match byte-for-byte);
+* ``crashed``    — same storm with a mid-storm controller kill: headless
+  window, mailbox drain at recovery; asserts the makespan overhead of
+  the crash is bounded by the outage (plus a retry-backoff slack);
+* ``headless``   — crash with no concurrent host faults: 100% of the
+  transfers in flight at the kill complete on their booked slots (the
+  data plane needs no controller to finish what was installed), and a
+  burst of submissions against a tiny mailbox sheds the overflow;
+* ``recovery``   — wall-time of ``recover_from(snapshot, journal)``
+  (restore + replay of the post-checkpoint suffix) vs a cold replay of
+  the whole journal from genesis; both must reproduce the live
+  controller exactly, and snapshot+suffix must be ≥5× faster than
+  genesis replay on the full config.
+
+CSV: ``name,us_per_call,derived`` (us_per_call = storm wall time per
+task for the leg rows; derived = makespan / ratio / count / ms).
+``--smoke`` runs the k=4 config only; ``--json PATH`` appends rows to
+the shared benchmark artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.controller import BassPolicy, ClusterController, RetryPolicy
+from repro.core.faults import FaultPlan
+from repro.core.journal import ControllerSnapshot, Journal
+
+try:
+    from benchmarks.bench_faults import SEED, T0, T1, MTTR, SLOW, storm_setup
+except ImportError:
+    from bench_faults import SEED, T0, T1, MTTR, SLOW, storm_setup
+
+# (fat-tree arity, tasks, host crashes, stragglers)
+CONFIGS = [
+    (4, 16, 2, 4),        # 16 hosts — smoke config
+    (8, 128, 6, 16),      # 128 hosts — the acceptance config
+]
+
+CRASH_AT = 1.2            # controller kill: inside the fault window
+OUTAGE = 1.0              # headless window length (sim seconds)
+BATCHES = 8               # journaled submit/run_until checkpoints
+SPEEDUP_FLOOR = 5.0       # acceptance: snapshot+replay vs genesis replay
+
+
+def _build(fab, workers, **kw):
+    kw.setdefault("slot_duration", 0.1)
+    kw.setdefault("retry", RetryPolicy(max_attempts=4, backoff_s=0.5))
+    return ClusterController(fab, workers, BassPolicy(multipath=True), **kw)
+
+
+def _plan(workers, n_crashes, n_stragglers, n_ctrl=0):
+    return FaultPlan.generate(
+        SEED, workers, T0, T1,
+        n_crashes=n_crashes, mttr=MTTR,
+        n_stragglers=n_stragglers, slow_factor=SLOW,
+        n_ctrl_crashes=n_ctrl,
+    )
+
+
+def _canon(ctrl):
+    """The replay-equivalence canon (same exclusions as DESIGN.md §11):
+    schedules, reroutes, ledger bytes and every behavioral counter —
+    wavefront cache hit/miss artifacts and recovery meta-counters out."""
+    sched = []
+    for a in ctrl.schedule().assignments:
+        t = a.transfer
+        sched.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    led = ctrl.state.ledger
+    counters = {
+        k: v
+        for k, v in sorted(ctrl.obs.snapshot(trace_tail=0)["counters"].items())
+        if not k.startswith(("wavefront.", "recovery."))
+    }
+    return (sched, len(ctrl.reroute_log), counters,
+            led.reserved.tobytes(), led.base_slot, led.retired_slots)
+
+
+def _storm(ctrl, tasks, plan):
+    """Submit the stream in journaled batches with run_until checkpoints
+    (the operating pattern a periodic snapshotter rides on)."""
+    per = max(1, len(tasks) // BATCHES)
+    batches = [tasks[i:i + per] for i in range(0, len(tasks), per)]
+    plan.apply(ctrl)
+    for i, batch in enumerate(batches):
+        at = i * (T1 / len(batches))
+        ctrl.submit(batch, at=at)
+        ctrl.run_until(at)
+    ctrl.run()
+
+
+def _makespan(ctrl):
+    return max(rec.makespan for rec in ctrl.jobs.values() if rec.placed)
+
+
+def run_config(k, n_tasks, n_crashes, n_stragglers, full):
+    n_hosts = k ** 3 // 4
+    tag = f"recovery_{n_hosts}h_{n_tasks}t"
+    rows = []
+
+    # -- leg 1: journaled, never-crashed baseline ---------------------------
+    fab, workers, tasks = storm_setup(k, n_tasks)
+    base = _build(fab, workers)
+    base.attach_journal()
+    base.attach_telemetry(estimator="window")
+    t0 = time.perf_counter()
+    _storm(base, tasks, _plan(workers, n_crashes, n_stragglers))
+    dt_base = time.perf_counter() - t0
+    mk_base = _makespan(base)
+    rows.append((f"{tag}_uncrashed", dt_base / n_tasks * 1e6,
+                 round(mk_base, 3)))
+
+    # -- leg 2: same storm + mid-storm controller kill ----------------------
+    fab2, workers2, tasks2 = storm_setup(k, n_tasks)
+    crashed = _build(fab2, workers2)
+    crashed.attach_telemetry(estimator="window")
+    crashed.fail_controller(at=CRASH_AT)
+    crashed.recover_controller(at=CRASH_AT + OUTAGE)
+    t0 = time.perf_counter()
+    _storm(crashed, tasks2, _plan(workers2, n_crashes, n_stragglers))
+    dt_crash = time.perf_counter() - t0
+    mk_crash = _makespan(crashed)
+    assert crashed.ha_stats["ctrl_down"] == 1
+    assert crashed.ha_stats["ctrl_up"] == 1
+    # Bounded degradation: a crash may defer work across the headless
+    # window, but never cascade.  Everything queued during the outage
+    # lands at the drain, so fault handling shifts by at most the outage
+    # — and a host kill shifted to the drain defers its victims'
+    # re-execution by up to that host's MTTR re-admission on top.
+    overhead = mk_crash - mk_base
+    bound = OUTAGE + MTTR
+    assert overhead <= bound, (
+        f"{tag}: crash overhead {overhead:.2f}s exceeds outage+MTTR {bound}"
+    )
+    rows.append((f"{tag}_crashed", dt_crash / n_tasks * 1e6,
+                 round(mk_crash, 3)))
+    rows.append((f"{tag}_crash_overhead_s", 0.0, round(overhead, 3)))
+
+    # -- leg 3: headless completion + bounded mailbox -----------------------
+    fab3, workers3, tasks3 = storm_setup(k, n_tasks)
+    ref = _build(fab3, workers3)
+    ref.submit(tasks3, at=0.0)
+    ref.run()
+    want = _canon(ref)[0]
+
+    head = _build(fab3, workers3)
+    head.submit(tasks3, at=0.0)
+    head.run_until(0.0)
+    inflight = sum(
+        1 for a in head.schedule().assignments
+        if a.transfer is not None and a.transfer.end > 0.05
+    )
+    end = max(a.transfer.end for a in head.schedule().assignments
+              if a.transfer is not None)
+    head.fail_controller(at=0.05)
+    head.recover_controller(at=end + 0.5)
+    head.run()
+    # Every path stayed alive, so every in-flight transfer completed on
+    # its booked slots: the schedule is byte-identical to the no-crash
+    # twin — completion ratio 1.0 by construction.
+    assert _canon(head)[0] == want, f"{tag}: headless run altered transfers"
+    rows.append((f"{tag}_headless_inflight", 0.0, inflight))
+    rows.append((f"{tag}_headless_completion", 0.0, 1.0))
+
+    box = _build(fab3, workers3, mailbox_limit=4)
+    box.fail_controller(at=0.0)
+    for i, t in enumerate(tasks3[:12]):
+        box.submit([t], at=0.2 + 0.01 * i)
+    box.recover_controller(at=1.0)
+    box.run()
+    assert box.ha_stats["mailbox_queued"] == 4
+    assert box.ha_stats["mailbox_shed"] == 8
+    rows.append((f"{tag}_mailbox_shed", 0.0, int(box.ha_stats["mailbox_shed"])))
+
+    # -- leg 4: snapshot+replay recovery vs replay-from-genesis -------------
+    # Checkpoint after the storm, then a late batch arrives before the
+    # kill: recovery replays only the post-checkpoint suffix.
+    t0 = time.perf_counter()
+    snap_bytes = base.snapshot().to_bytes()
+    dt_snap = time.perf_counter() - t0
+    late = storm_setup(k, max(4, n_tasks // 16))[2]
+    base.submit(late, at=base.now)
+    base.run()
+    want = _canon(base)
+    journal_bytes = base.journal.to_bytes()
+
+    t0 = time.perf_counter()
+    rec = ClusterController.recover_from(
+        fab, ControllerSnapshot.from_bytes(snap_bytes),
+        Journal.from_bytes(journal_bytes),
+    )
+    dt_rec = time.perf_counter() - t0
+    assert _canon(rec) == want, f"{tag}: snapshot+replay diverged"
+
+    t0 = time.perf_counter()
+    cold = _build(fab, workers)
+    cold.replay_journal(Journal.from_bytes(journal_bytes))
+    dt_cold = time.perf_counter() - t0
+    assert _canon(cold) == want, f"{tag}: genesis replay diverged"
+
+    speedup = dt_cold / dt_rec
+    if full:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"{tag}: snapshot+replay only {speedup:.1f}x faster than "
+            f"genesis replay (floor {SPEEDUP_FLOOR}x)"
+        )
+    rows.append((f"{tag}_snapshot_ms", 0.0, round(dt_snap * 1e3, 2)))
+    rows.append((f"{tag}_cold_replay_ms", 0.0, round(dt_cold * 1e3, 2)))
+    rows.append((f"{tag}_recover_ms", 0.0, round(dt_rec * 1e3, 2)))
+    rows.append((f"{tag}_recovery_speedup", 0.0, round(speedup, 1)))
+    return rows
+
+
+def run(configs=None, full=True) -> list:
+    rows = []
+    for k, n_tasks, n_crashes, n_stragglers in (
+            configs if configs is not None else CONFIGS):
+        is_full = full and (k, n_tasks) == (8, 128)
+        rows.extend(run_config(k, n_tasks, n_crashes, n_stragglers, is_full))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="k=4 config only (all equivalence asserts still run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="append machine-readable rows (JSON)")
+    args = ap.parse_args()
+    configs = CONFIGS[:1] if args.smoke else CONFIGS
+    rows = run(configs, full=not args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        try:
+            from benchmarks.bench_sched_scale import append_json
+        except ImportError:
+            from bench_sched_scale import append_json
+        append_json(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,9 @@
 * bench_faults      — beyond-paper: seeded host-kill + straggler storm
                       (deterministic FaultPlan; asserts LATE speculation-on
                       beats speculation-off; re-execution/wasted-bytes rows)
+* bench_recovery    — beyond-paper: control-plane crash-recovery (WAL
+                      snapshot+replay vs genesis replay, headless-mode
+                      completion, mailbox shed, crash makespan overhead)
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -39,6 +42,7 @@ from . import (
     bench_online,
     bench_prebass,
     bench_qos,
+    bench_recovery,
     bench_roofline,
     bench_sched_scale,
     bench_table1,
@@ -58,6 +62,7 @@ MODULES = [
     bench_longrun,
     bench_telemetry,
     bench_faults,
+    bench_recovery,
     bench_roofline,
 ]
 

@@ -103,6 +103,72 @@ def main() -> None:
         # stay byte-identical to main.
         for engine in ("batched", "sequential"):
             dump_fault_storm(out, engine)
+        # Crash-recovery equivalence (DESIGN.md §11): the same fault storm
+        # dumped from a never-killed journaled controller and from a twin
+        # rebuilt via snapshot bytes + journal replay — the paired blocks
+        # are asserted byte-identical before they are written.
+        dump_recovery(out)
+
+
+def dump_recovery(out):
+    """Mid-storm checkpoint + kill: the ``recovery_uncrashed`` twin runs
+    the journaled storm straight through; the ``recovery_crashed`` twin is
+    rebuilt from the checkpoint's snapshot bytes plus a replay of the
+    journal suffix.  Schedules, fault counters and ha counters must match
+    byte-for-byte (asserted here, not just diffed across runs)."""
+    import io  # noqa: E402
+
+    from benchmarks.bench_faults import (  # noqa: E402
+        MTTR, SEED, SLOW, T0, T1, storm_setup,
+    )
+    from repro.core.controller import (  # noqa: E402
+        BassPolicy, ClusterController, RetryPolicy,
+    )
+    from repro.core.faults import FaultPlan  # noqa: E402
+    from repro.core.journal import ControllerSnapshot, Journal  # noqa: E402
+
+    fab, workers, tasks = storm_setup(4, 16)
+    ctrl = ClusterController(
+        fab, workers, BassPolicy(multipath=True), slot_duration=0.1,
+        retry=RetryPolicy(max_attempts=4, backoff_s=0.5),
+        speculation=True,
+    )
+    ctrl.attach_journal()
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)
+    # The bench_faults storm plus one in-sim controller crash, so the
+    # dumped bytes also cover the headless window + mailbox drain path.
+    FaultPlan.generate(
+        SEED, workers, T0, T1, n_crashes=2, mttr=MTTR,
+        n_stragglers=4, slow_factor=SLOW,
+        n_ctrl_crashes=1, ctrl_mttr=1.0,
+    ).apply(ctrl)
+    ctrl.run_until(1.5)          # mid-storm checkpoint: the kill point
+    snap = ctrl.snapshot()
+    ctrl.run()                   # never-killed twin finishes the storm
+
+    rec = ClusterController.recover_from(
+        fab, ControllerSnapshot.from_bytes(snap.to_bytes()),
+        Journal.from_bytes(ctrl.journal.to_bytes()),
+    )
+
+    bodies = []
+    for c in (ctrl, rec):
+        buf = io.StringIO()
+        dump_schedule(buf, "x", c.schedule())
+        body = buf.getvalue().split("\n", 1)[1]
+        for key in sorted(c.fault_stats):
+            body += f"{key}={fx(c.fault_stats[key])}\n"
+        for key in sorted(c.ha_stats):
+            body += f"{key}={fx(c.ha_stats[key])}\n"
+        bodies.append(body)
+    assert bodies[0] == bodies[1], (
+        "recovery dump pair diverged: snapshot+replay is not equivalent"
+    )
+    for label, body in (("recovery_uncrashed", bodies[0]),
+                        ("recovery_crashed", bodies[1])):
+        out.write(f"== {label}\n")
+        out.write(body)
 
 
 def dump_fault_storm(out, engine):

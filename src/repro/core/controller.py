@@ -25,6 +25,7 @@ is that controller, split into three layers:
 """
 from __future__ import annotations
 
+import copy
 import heapq
 from dataclasses import dataclass, field
 from typing import (
@@ -547,13 +548,19 @@ class ClusterState:
     # -- snapshots (Pre-BASS guard, what-if planning) -----------------------
     def snapshot(self) -> Tuple:
         return (dict(self.idle), self.ledger.reserved.copy(),
-                self.ledger.base_slot, self.now, len(self.background))
+                self.ledger.base_slot, self.ledger.retired_slots,
+                self.now, len(self.background))
 
     def restore(self, snap: Tuple) -> None:
-        idle, reserved, base_slot, now, n_bg = snap
+        idle, reserved, base_slot, retired_slots, now, n_bg = snap
         self.idle = dict(idle)
+        # Through the ``reserved`` setter: any attached device mirror is
+        # invalidated and re-uploads the full window on its next sync —
+        # a restore crossing a retire must not leave mirrored columns
+        # aligned to the pre-restore origin.
         self.ledger.reserved = reserved.copy()
         self.ledger.base_slot = base_slot
+        self.ledger.retired_slots = retired_slots
         self.now = now
         del self.background[n_bg:]
         self.reheap()
@@ -1098,6 +1105,7 @@ class JobRecord:
     reexecuted: int = 0     # tasks killed by a host crash and re-placed
     speculative: int = 0    # LATE backup copies launched
     wasted_bytes: float = 0.0  # delivered bytes thrown away (kills + losers)
+    shed: bool = False  # load-shed by a headless controller's full mailbox
 
     @property
     def makespan(self) -> float:
@@ -1137,6 +1145,7 @@ class ClusterController:
         k_paths: int = 4,
         retry: Optional[RetryPolicy] = None,
         speculation: bool = False,
+        mailbox_limit: int = 64,
     ) -> None:
         if isinstance(policy, str):
             policy = POLICIES[policy]()
@@ -1161,6 +1170,12 @@ class ClusterController:
         self.flows: Dict[object, TransferPlan] = {}
         self.reroute_log: List[object] = []     # RerouteRecords, in fire order
         self._events: List[Tuple[float, int, str, tuple]] = []
+        #: Queued events that are *work* (everything except the poll/hb
+        #: chain ticks).  The chains re-arm only while this is non-zero:
+        #: keying off ``self._events`` would let the two chains count each
+        #: other as pending work and sustain themselves forever once both
+        #: telemetry and heartbeats are attached.
+        self._n_real_events = 0
         self._seq = 0
         self._next_jid = 0       # monotonic: ids stay unique if jobs are pruned
         self._auto_flow = 0      # untagged reservations get ("flow", n) keys
@@ -1221,6 +1236,28 @@ class ClusterController:
         self._hb_pending = False
         self._hb_interval = 0.0
         self._hb_last = 0.0
+        # -- control-plane crash-recovery (DESIGN.md §11) -------------------
+        #: Write-ahead journal (``core.journal.Journal``), None until
+        #: attach_journal(); records every public entry-point call.
+        self.journal = None
+        self._replaying = False  # replay must not re-journal its own calls
+        self._in_run = False     # run() journals once, not its inner targets
+        #: Headless data-plane mode: while the control plane is down, the
+        #: data plane keeps forwarding on installed rules but scheduling
+        #: stops — job arrivals queue in a bounded mailbox (overflow →
+        #: load-shed), every other event is deferred to recovery, and the
+        #: poll/heartbeat chains are suspended.
+        self.ctrl_down = False
+        self._down_since = 0.0
+        self.mailbox_limit = int(mailbox_limit)
+        self._mailbox: List[Tuple[str, tuple]] = []  # deferred, arrival order
+        self._mailbox_jobs = 0
+        self.shed_jobs: List[int] = []
+        self.ha_stats = self.obs.group(
+            "ha",
+            ("ctrl_down", "ctrl_up", "mailbox_queued", "mailbox_shed",
+             "deferred", "reconciled_rules"),
+        )
         self.now = 0.0
 
     @classmethod
@@ -1235,6 +1272,297 @@ class ClusterController:
             slot_duration=instance.slot_duration,
             background=instance.background,
         )
+
+    # -- write-ahead journal (DESIGN.md §11) --------------------------------
+    def attach_journal(self, journal=None):
+        """Attach a :class:`~repro.core.journal.Journal`: from now on every
+        public entry-point call (``submit``, ``inject_flow``,
+        ``reserve_transfer_at``, ``fail_*``/``recover_*``, ``straggle``,
+        ``fail_controller``/``recover_controller``, ``attach_telemetry``/
+        ``attach_heartbeats``, ``run_until``/``run``) is recorded with its
+        *resolved* arguments before the mutation happens.  Returns the
+        journal (a fresh one by default)."""
+        if self.journal is not None:
+            raise RuntimeError("journal already attached")
+        from .journal import Journal
+
+        self.journal = journal if journal is not None else Journal()
+        return self.journal
+
+    def _journal(self, op: str, *args) -> None:
+        if self.journal is None or self._replaying or self._in_run:
+            return
+        self.journal.append(op, *args)
+
+    def _apply_record(self, rec) -> None:
+        """Re-issue one journaled entry-point call (replay dispatch)."""
+        op, a = rec.op, rec.args
+        if op == "submit":
+            self.submit(list(a[2]), at=a[0], jid=a[1])
+        elif op == "inject_flow":
+            self.inject_flow(a[0], at=a[1])
+        elif op == "reserve_transfer":
+            self.reserve_transfer_at(a[0], a[1], a[2], tag=a[3])
+        elif op == "fail_link":
+            self.fail_link(a[0], at=a[1])
+        elif op == "recover_link":
+            self.recover_link(a[0], at=a[1])
+        elif op == "fail_switch":
+            self.fail_switch(a[0], at=a[1])
+        elif op == "recover_switch":
+            self.recover_switch(a[0], at=a[1])
+        elif op == "fail_host":
+            self.fail_host(a[0], at=a[1])
+        elif op == "recover_host":
+            self.recover_host(a[0], at=a[1])
+        elif op == "straggle":
+            self.straggle(a[0], a[1], at=a[2])
+        elif op == "fail_controller":
+            self.fail_controller(at=a[0])
+        elif op == "recover_controller":
+            self.recover_controller(at=a[0])
+        elif op == "attach_telemetry":
+            self.attach_telemetry(
+                poll_interval=a[0], estimator=a[1], **a[2]
+            )
+        elif op == "attach_heartbeats":
+            self.attach_heartbeats(interval=a[0], grace_s=a[1])
+        elif op == "run_until":
+            self.run_until(a[0])
+        elif op == "run":
+            self.run()
+        else:
+            raise ValueError(f"unknown journal op {op!r}")
+
+    def replay_journal(self, journal, from_lsn: int = 0) -> int:
+        """Re-issue ``journal``'s records from ``from_lsn`` through the
+        normal entry points; returns the number of records applied.
+        Replayed calls are not re-journaled."""
+        self._replaying = True
+        try:
+            n = 0
+            for rec in journal.since(from_lsn):
+                self._apply_record(rec)
+                n += 1
+            return n
+        finally:
+            self._replaying = False
+
+    # -- full-fidelity snapshots + recovery (DESIGN.md §11) -----------------
+    def _policy_spec(self) -> Tuple[str, Optional[dict]]:
+        """(name, kwargs) rebuilding this controller's policy, or
+        ``(name, None)`` for a custom policy object ``recover_from`` cannot
+        reconstruct on its own (pass ``policy=`` explicitly there)."""
+        p = self.policy
+        if type(p) is BassPolicy:
+            return ("bass", {"multipath": p.multipath, "k_paths": p.k_paths,
+                             "telemetry": p.telemetry})
+        if type(p) is PreBassPolicy:
+            return ("prebass", {"guard": p.guard, "telemetry": p.telemetry})
+        if type(p) is HdsPolicy:
+            return ("hds", {})
+        if type(p) is BarPolicy:
+            return ("bar", {})
+        return (getattr(p, "name", type(p).__name__), None)
+
+    def snapshot(self):
+        """Full-fidelity :class:`~repro.core.journal.ControllerSnapshot` at
+        the current journal position.
+
+        Coverage matrix (field → captured-by) is documented in DESIGN.md
+        §11; everything is plain picklable data — no fabric, registry or
+        callable references.  Jobs, assignments and live speculations are
+        deep-copied *together* so the ``_SpecRecord.primary is assignment``
+        identity links survive both the dump and the restore.
+        """
+        st, led, dp = self.state, self.state.ledger, self.dataplane
+        with self.obs.span("recovery.snapshot"):
+            jobs, specs = copy.deepcopy((self.jobs, self._specs))
+            hb = None
+            if self.heartbeats is not None:
+                hb = {
+                    "grace_s": self.heartbeats.grace_s,
+                    "interval": self._hb_interval,
+                    "last": self._hb_last,
+                    "hosts": [(h.name, h.last_beat, h.alive)
+                              for h in self.heartbeats.hosts.values()],
+                }
+            payload = {
+                "config": {
+                    "policy": self._policy_spec(),
+                    "slot_duration": led.slot_duration,
+                    "k_paths": dp.engine.k,
+                    "retry": (self.retry.max_attempts, self.retry.backoff_s,
+                              self.retry.backoff_factor,
+                              self.retry.blacklist_after),
+                    "speculation": self.speculation,
+                    "mailbox_limit": self.mailbox_limit,
+                    "reroute_engine": self.reroute_engine,
+                },
+                "now": self.now,
+                "state": {
+                    "workers": list(st.workers),
+                    "idle": dict(st.idle),
+                    "now": st.now,
+                    "background": list(st.background),
+                    "idle0": dict(self._idle0),
+                },
+                "ledger": led.dump_state(),
+                "liveness": dp.dump_liveness(),
+                "tables": dp.tables.dump_state(),
+                "jobs": jobs,
+                "specs": specs,
+                "flows": dict(self.flows),
+                "reroute_log": list(self.reroute_log),
+                # The heap list verbatim: heapq's layout is part of the
+                # deterministic tie-break story, so restore must not
+                # re-heapify a differently-shaped but equivalent heap.
+                "events": list(self._events),
+                "seq": self._seq,
+                "next_jid": self._next_jid,
+                "auto_flow": self._auto_flow,
+                "live_jobs": dict(self._live_jobs),
+                "suspended": list(self._suspended),
+                "expiry": list(self._expiry),
+                "flow_gen": dict(self._flow_gen),
+                "host_failures": dict(self._host_failures),
+                "blacklist": sorted(self.blacklist),
+                "poll_pending": self._poll_pending,
+                "hb_pending": self._hb_pending,
+                "ctrl_down": self.ctrl_down,
+                "down_since": self._down_since,
+                "mailbox": list(self._mailbox),
+                "mailbox_jobs": self._mailbox_jobs,
+                "shed_jobs": list(self.shed_jobs),
+                "obs": self.obs.dump_values(),
+                "telemetry": (None if self.telemetry is None
+                              else self.telemetry.dump_state()),
+                "heartbeats": hb,
+            }
+        from .journal import ControllerSnapshot
+
+        self.obs.counter("recovery.snapshots").inc()
+        lsn = 0 if self.journal is None else self.journal.lsn
+        return ControllerSnapshot(lsn=lsn, payload=payload)
+
+    def _restore_full(self, payload: dict) -> None:
+        """Overwrite this (freshly-constructed) controller's mutable state
+        with a snapshot payload.  The inverse of :meth:`snapshot`."""
+        cfg = payload["config"]
+        self.reroute_engine = cfg["reroute_engine"]
+        self.mailbox_limit = cfg["mailbox_limit"]
+        st = self.state
+        ps = payload["state"]
+        st.workers = list(ps["workers"])
+        st.workers_set = frozenset(st.workers)
+        st.idle = dict(ps["idle"])
+        st.background = list(ps["background"])
+        st.heap = MinnowHeap(st.idle, st.workers)
+        st.now = ps["now"]
+        # Drop any cached wavefront planner: it holds pre-restore ledger
+        # state (placements are bit-identical either way; its hit/miss
+        # counters are cache artifacts outside the equivalence canon).
+        st.__dict__.pop("_wavefront", None)
+        st.ledger.load_state(payload["ledger"])
+        self.dataplane.load_liveness(payload["liveness"])
+        self.dataplane.tables.load_state(payload["tables"])
+        # Deep-copy again so one snapshot can seed several recoveries.
+        self.jobs, self._specs = copy.deepcopy(
+            (payload["jobs"], payload["specs"])
+        )
+        self.flows = dict(payload["flows"])
+        self.reroute_log = list(payload["reroute_log"])
+        self._events = list(payload["events"])
+        self._n_real_events = sum(
+            1 for ev in self._events if ev[2] not in ("poll", "hb")
+        )
+        self._seq = payload["seq"]
+        self._next_jid = payload["next_jid"]
+        self._auto_flow = payload["auto_flow"]
+        self._idle0 = dict(ps["idle0"])
+        self._live_jobs = dict(payload["live_jobs"])
+        self._suspended = list(payload["suspended"])
+        self._expiry = list(payload["expiry"])
+        self._flow_gen = dict(payload["flow_gen"])
+        self._host_failures = dict(payload["host_failures"])
+        self.blacklist = set(payload["blacklist"])
+        self._poll_pending = payload["poll_pending"]
+        self._hb_pending = payload["hb_pending"]
+        self.ctrl_down = payload["ctrl_down"]
+        self._down_since = payload["down_since"]
+        self._mailbox = list(payload["mailbox"])
+        self._mailbox_jobs = payload["mailbox_jobs"]
+        self.shed_jobs = list(payload["shed_jobs"])
+        self.now = payload["now"]
+        # Counters before the telemetry monitor: its stats group must find
+        # the restored cells when it re-registers by prefix.
+        self.obs.load_values(payload["obs"])
+        if payload["telemetry"] is not None:
+            from ..net.telemetry import LinkStatsMonitor
+
+            mon = LinkStatsMonitor.load_state(
+                st.ledger, payload["telemetry"], obs=self.obs
+            )
+            self.telemetry = mon
+            st.belief = mon.belief
+            self.obs.register_provider("telemetry", mon.snapshot)
+        hb = payload["heartbeats"]
+        if hb is not None:
+            from ..runtime.ft import HeartbeatMonitor, HostState
+
+            mon = HeartbeatMonitor(
+                [], grace_s=hb["grace_s"], clock=lambda: self.now
+            )
+            mon.hosts = {
+                name: HostState(name, last_beat, alive)
+                for name, last_beat, alive in hb["hosts"]
+            }
+            self.heartbeats = mon
+            self._hb_interval = hb["interval"]
+            self._hb_last = hb["last"]
+
+    @classmethod
+    def recover_from(
+        cls, fabric: Fabric, snapshot, journal=None, policy=None
+    ) -> "ClusterController":
+        """Rebuild a controller from a :meth:`snapshot` and replay the
+        journaled suffix ``journal.since(snapshot.lsn)`` through the normal
+        entry points — byte-identical (schedule dumps, reroute logs,
+        behavioral obs counters, ledger bytes) to a controller that never
+        crashed.  ``policy=`` overrides reconstruction for custom policy
+        objects the snapshot cannot describe."""
+        payload = snapshot.payload
+        cfg = payload["config"]
+        if policy is None:
+            name, kwargs = cfg["policy"]
+            if kwargs is None:
+                raise ValueError(
+                    f"snapshot carries custom policy {name!r}; pass policy="
+                )
+            policy = POLICIES[name](**kwargs)
+        ledger_state = payload["ledger"]
+        ctrl = cls(
+            fabric,
+            payload["state"]["workers"],
+            policy,
+            slot_duration=cfg["slot_duration"],
+            horizon_slots=max(1, ledger_state["reserved"].shape[1]),
+            k_paths=cfg["k_paths"],
+            retry=RetryPolicy(*cfg["retry"]),
+            speculation=cfg["speculation"],
+            mailbox_limit=cfg["mailbox_limit"],
+        )
+        with ctrl.obs.span("recovery.restore"):
+            ctrl._restore_full(payload)
+        ctrl.obs.counter("recovery.recoveries").inc()
+        if journal is not None:
+            with ctrl.obs.span("recovery.replay"):
+                n = ctrl.replay_journal(journal, from_lsn=snapshot.lsn)
+            ctrl.obs.counter("recovery.replayed").inc(n)
+            # Re-attach *after* replay so the replayed suffix is not
+            # double-journaled.
+            ctrl.journal = journal
+        return ctrl
 
     # -- telemetry ------------------------------------------------------------
     def attach_telemetry(
@@ -1252,6 +1580,14 @@ class ClusterController:
         monitor."""
         if self.telemetry is not None:
             raise RuntimeError("telemetry monitor already attached")
+        if (self.journal is not None and not self._replaying
+                and not self._in_run and not isinstance(estimator, str)):
+            raise ValueError(
+                "a journaled controller needs a named estimator (str) — "
+                "estimator objects are not replayable"
+            )
+        self._journal("attach_telemetry", poll_interval, estimator,
+                      dict(est_kwargs))
         from ..net.telemetry import LinkStatsMonitor
 
         mon = LinkStatsMonitor(
@@ -1265,7 +1601,7 @@ class ClusterController:
         self.state.belief = mon.belief
         self.obs.register_provider("telemetry", mon.snapshot)
         mon.poll(self.now)
-        if self._events:
+        if self._n_real_events:
             self._arm_poll()
         return mon
 
@@ -1301,15 +1637,17 @@ class ClusterController:
                     else float(interval))
         if interval <= 0.0:
             raise ValueError(f"heartbeat interval must be > 0, got {interval}")
+        grace_s = 3.0 * interval if grace_s is None else float(grace_s)
+        self._journal("attach_heartbeats", interval, grace_s)
         mon = HeartbeatMonitor(
             list(self.state.workers),
-            grace_s=3.0 * interval if grace_s is None else grace_s,
+            grace_s=grace_s,
             clock=lambda: self.now,
         )
         self.heartbeats = mon
         self._hb_interval = interval
         self._hb_last = self.now
-        if self._events:
+        if self._n_real_events:
             self._arm_hb()
         return mon
 
@@ -1336,6 +1674,11 @@ class ClusterController:
             raise ValueError(f"event at {at} is in the controller's past {self.now}")
         heapq.heappush(self._events, (at, self._seq, kind, payload))
         self._seq += 1
+        self._n_real_events += 1
+        # A down controller neither polls nor sweeps — chains stay dead
+        # until _on_ctrl_up re-arms them.
+        if self.ctrl_down:
+            return
         if self.telemetry is not None and not self._poll_pending:
             self._arm_poll()
         if self.heartbeats is not None and not self._hb_pending:
@@ -1352,6 +1695,9 @@ class ClusterController:
             jid = self._next_jid
         if jid in self.jobs:
             raise ValueError(f"duplicate job id {jid}")
+        # Journal with the *resolved* jid so a replayed auto-assignment
+        # lands on the same id regardless of the restored counter.
+        self._journal("submit", float(at), int(jid), tuple(tasks))
         self._next_jid = max(self._next_jid, jid + 1)
         self.jobs[jid] = JobRecord(jid, at, list(tasks))
         self._push(at, "job", (jid,))
@@ -1361,7 +1707,9 @@ class ClusterController:
         self, flow: BackgroundFlow, at: Optional[float] = None
     ) -> None:
         """Queue dynamic background cross-traffic (defaults to its start)."""
-        self._push(flow.start if at is None else at, "flow", (flow,))
+        at = flow.start if at is None else at
+        self._journal("inject_flow", flow, float(at))
+        self._push(at, "flow", (flow,))
 
     def reserve_transfer_at(
         self,
@@ -1372,6 +1720,8 @@ class ClusterController:
     ) -> None:
         """Queue a raw flow reservation on explicit links at time ``at`` —
         the training-side gradient-sync entry (``distributed.dcn``)."""
+        self._journal("reserve_transfer", float(at), float(size),
+                      tuple(links), tag)
         self._push(at, "transfer", (size, tuple(links), tag))
 
     # -- network churn ------------------------------------------------------
@@ -1379,24 +1729,32 @@ class ClusterController:
         """Queue a link failure: in-flight transfers on it reroute when it
         fires (UnroutableError if a victim has no surviving path)."""
         self.state.fabric.link(name)  # validate early: KeyError on unknown
-        self._push(self.now if at is None else at, "link_down", (name,))
+        at = self.now if at is None else at
+        self._journal("fail_link", name, float(at))
+        self._push(at, "link_down", (name,))
 
     def recover_link(self, name: str, at: Optional[float] = None) -> None:
         # Validate like fail_link: a typo'd recovery would otherwise be a
         # silent no-op that stalls suspended flows forever.
         self.state.fabric.link(name)
-        self._push(self.now if at is None else at, "link_up", (name,))
+        at = self.now if at is None else at
+        self._journal("recover_link", name, float(at))
+        self._push(at, "link_up", (name,))
 
     def fail_switch(self, node: str, at: Optional[float] = None) -> None:
         """Queue a switch failure — every incident link goes down."""
         if not self.state.fabric.has_node(node):
             raise ValueError(f"unknown node {node!r}")
-        self._push(self.now if at is None else at, "switch_down", (node,))
+        at = self.now if at is None else at
+        self._journal("fail_switch", node, float(at))
+        self._push(at, "switch_down", (node,))
 
     def recover_switch(self, node: str, at: Optional[float] = None) -> None:
         if not self.state.fabric.has_node(node):
             raise ValueError(f"unknown node {node!r}")
-        self._push(self.now if at is None else at, "switch_up", (node,))
+        at = self.now if at is None else at
+        self._journal("recover_switch", node, float(at))
+        self._push(at, "switch_up", (node,))
 
     def fail_host(self, node: str, at: Optional[float] = None) -> None:
         """Queue a host crash: when it fires, the worker leaves every
@@ -1405,13 +1763,17 @@ class ClusterController:
         policy path under :class:`RetryPolicy`."""
         if not self.state.fabric.has_node(node):
             raise ValueError(f"unknown node {node!r}")
-        self._push(self.now if at is None else at, "host_down", (node,))
+        at = self.now if at is None else at
+        self._journal("fail_host", node, float(at))
+        self._push(at, "host_down", (node,))
 
     def recover_host(self, node: str, at: Optional[float] = None) -> None:
         """Queue a host recovery — re-admitted empty unless blacklisted."""
         if not self.state.fabric.has_node(node):
             raise ValueError(f"unknown node {node!r}")
-        self._push(self.now if at is None else at, "host_up", (node,))
+        at = self.now if at is None else at
+        self._journal("recover_host", node, float(at))
+        self._push(at, "host_up", (node,))
 
     def straggle(self, node: str, factor: float, at: Optional[float] = None) -> None:
         """Queue a straggler onset: the task running on ``node`` when the
@@ -1420,11 +1782,34 @@ class ClusterController:
         rule may launch a backup copy against ledger residuals."""
         if factor < 1.0:
             raise ValueError(f"straggle factor must be >= 1, got {factor}")
-        self._push(self.now if at is None else at, "straggle", (node, factor))
+        at = self.now if at is None else at
+        self._journal("straggle", node, float(factor), float(at))
+        self._push(at, "straggle", (node, factor))
+
+    # -- control-plane lifecycle (headless data-plane mode) -----------------
+    def fail_controller(self, at: Optional[float] = None) -> None:
+        """Queue a control-plane crash: when it fires, the data plane keeps
+        forwarding on installed rules (in-flight transfers complete) but
+        scheduling stops — new jobs queue in the bounded mailbox (overflow
+        → load-shed), all other events are deferred, and the poll/heartbeat
+        chains are suspended until :meth:`recover_controller`."""
+        at = self.now if at is None else at
+        self._journal("fail_controller", float(at))
+        self._push(at, "ctrl_down", ())
+
+    def recover_controller(self, at: Optional[float] = None) -> None:
+        """Queue a control-plane recovery: reconcile lapsed rule expiries,
+        forgive the heartbeat gap, drain the mailbox in arrival order and
+        re-arm the polling chains."""
+        at = self.now if at is None else at
+        self._journal("recover_controller", float(at))
+        self._push(at, "ctrl_up", ())
 
     def inject_net(self, event) -> None:
         """Queue a ``repro.net.events`` NetworkEvent at its own ``at``."""
         from ..net.events import (
+            ControllerDown,
+            ControllerUp,
             HostDown,
             HostUp,
             LinkDown,
@@ -1433,6 +1818,12 @@ class ClusterController:
             SwitchUp,
         )
 
+        if isinstance(event, ControllerDown):
+            self.fail_controller(at=event.at)
+            return
+        if isinstance(event, ControllerUp):
+            self.recover_controller(at=event.at)
+            return
         if isinstance(event, LinkDown):
             self.fail_link(event.link, at=event.at)
         elif isinstance(event, LinkUp):
@@ -1452,92 +1843,26 @@ class ClusterController:
     def run_until(self, t: float) -> None:
         """Process every queued event with fire time ≤ ``t``, in time order
         (ties: submission order)."""
+        self._journal("run_until", float(t))
         while self._events and self._events[0][0] <= t + _EPS:
             at, _seq, kind, payload = heapq.heappop(self._events)
+            if kind not in ("poll", "hb"):
+                self._n_real_events -= 1
             self.now = max(self.now, at)
             self.state.advance(max(self.state.now, at))
-            self._gc_tables(at)
+            if not self.ctrl_down:
+                # Headless: rule expiry is a *control-plane* action — the
+                # data plane keeps forwarding on whatever is installed
+                # until recovery reconciles the lapsed entries.
+                self._gc_tables(at)
             self._ev_stats["events"] += 1
-            if kind == "job":
-                (jid,) = payload
-                self._ev_stats["jobs"] += 1
-                with self.obs.span("controller.drain"):
-                    self._drain(self.jobs[jid])
-            elif kind == "poll":
-                self._poll_pending = False
-                if self.telemetry is not None:
-                    self._ev_stats["polls"] += 1
-                    self.telemetry.poll(at)
-                    if self._events:
-                        self._arm_poll()
-            elif kind == "flow":
-                (flow,) = payload
-                self._ev_stats["flows"] += 1
-                self.state.observe_flow(flow)
-            elif kind == "transfer":
-                size, links, tag = payload
-                self._ev_stats["transfers"] += 1
-                if tag is None:
-                    tag = ("flow", self._auto_flow)
-                    self._auto_flow += 1
-                dead = self.dataplane.all_dead_links()
-                if any(l in dead for l in links):
-                    # Requested links are down: suspend until recovery.
-                    self._suspended.append((tag, links, size))
-                else:
-                    rows = self.state.ledger.rows(links)
-                    plan = self.state.ledger.plan_transfer(
-                        size, rows, not_before=at
-                    )
-                    self.state.ledger.commit(plan)
-                    self.flows[tag] = plan
-            elif kind == "link_down":
-                (name,) = payload
-                self._ev_stats["net_events"] += 1
-                self.dataplane.fail_link(name)
-                self._reroute_dead(at)
-            elif kind == "link_up":
-                (name,) = payload
-                self._ev_stats["net_events"] += 1
-                self.dataplane.recover_link(name)
-                self._resume_flows(at)
-            elif kind == "switch_down":
-                (node,) = payload
-                self._ev_stats["net_events"] += 1
-                self.dataplane.fail_switch(node)
-                self._reroute_dead(at)
-            elif kind == "switch_up":
-                (node,) = payload
-                self._ev_stats["net_events"] += 1
-                self.dataplane.recover_switch(node)
-                self._resume_flows(at)
-            elif kind == "host_down":
-                (node,) = payload
-                self._ev_stats["net_events"] += 1
-                self._on_host_down(node, at)
-            elif kind == "host_up":
-                (node,) = payload
-                self._ev_stats["net_events"] += 1
-                self._on_host_up(node, at)
-            elif kind == "straggle":
-                node, factor = payload
-                self._on_straggle(node, factor, at)
-            elif kind == "task_retry":
-                jid, tid, attempt = payload
-                self._retry_task(jid, tid, attempt, at)
-            elif kind == "spec_resolve":
-                (tid,) = payload
-                self._resolve_spec(tid, at)
-            elif kind == "hb":
-                self._hb_pending = False
-                if self.heartbeats is not None:
-                    # A sweep can _push retries, which re-arms the chain —
-                    # don't arm twice.
-                    self._hb_sweep(at)
-                    if self._events and not self._hb_pending:
-                        self._arm_hb()
+            if self.ctrl_down and kind != "ctrl_up":
+                self._headless_event(at, kind, payload)
+                continue
+            self._dispatch(at, kind, payload)
         self.now = max(self.now, t)
-        self._gc_tables(self.now)
+        if not self.ctrl_down:
+            self._gc_tables(self.now)
         # Rolling horizon: a quiet controller (no events near ``t``) still
         # retires up to its target time — any later event may fire no
         # earlier than ``now - _EPS``, which maybe_retire's guard slot
@@ -1546,8 +1871,180 @@ class ClusterController:
 
     def run(self) -> None:
         """Drain the event queue completely."""
-        while self._events:
-            self.run_until(self._events[0][0])
+        self._journal("run")
+        was_in_run, self._in_run = self._in_run, True
+        try:
+            while self._events:
+                self.run_until(self._events[0][0])
+        finally:
+            self._in_run = was_in_run
+
+    def _dispatch(self, at: float, kind: str, payload: tuple) -> None:
+        """Apply one popped (or mailbox-drained) event at time ``at``."""
+        if kind == "job":
+            (jid,) = payload
+            self._ev_stats["jobs"] += 1
+            with self.obs.span("controller.drain"):
+                self._drain(self.jobs[jid])
+        elif kind == "poll":
+            self._poll_pending = False
+            if self.telemetry is not None:
+                self._ev_stats["polls"] += 1
+                self.telemetry.poll(at)
+                if self._n_real_events:
+                    self._arm_poll()
+        elif kind == "flow":
+            (flow,) = payload
+            self._ev_stats["flows"] += 1
+            self.state.observe_flow(flow)
+        elif kind == "transfer":
+            size, links, tag = payload
+            self._ev_stats["transfers"] += 1
+            if tag is None:
+                tag = ("flow", self._auto_flow)
+                self._auto_flow += 1
+            dead = self.dataplane.all_dead_links()
+            if any(l in dead for l in links):
+                # Requested links are down: suspend until recovery.
+                self._suspended.append((tag, links, size))
+            else:
+                rows = self.state.ledger.rows(links)
+                plan = self.state.ledger.plan_transfer(
+                    size, rows, not_before=at
+                )
+                self.state.ledger.commit(plan)
+                self.flows[tag] = plan
+        elif kind == "link_down":
+            (name,) = payload
+            self._ev_stats["net_events"] += 1
+            self.dataplane.fail_link(name)
+            self._reroute_dead(at)
+        elif kind == "link_up":
+            (name,) = payload
+            self._ev_stats["net_events"] += 1
+            self.dataplane.recover_link(name)
+            self._resume_flows(at)
+        elif kind == "switch_down":
+            (node,) = payload
+            self._ev_stats["net_events"] += 1
+            self.dataplane.fail_switch(node)
+            self._reroute_dead(at)
+        elif kind == "switch_up":
+            (node,) = payload
+            self._ev_stats["net_events"] += 1
+            self.dataplane.recover_switch(node)
+            self._resume_flows(at)
+        elif kind == "host_down":
+            (node,) = payload
+            self._ev_stats["net_events"] += 1
+            self._on_host_down(node, at)
+        elif kind == "host_up":
+            (node,) = payload
+            self._ev_stats["net_events"] += 1
+            self._on_host_up(node, at)
+        elif kind == "straggle":
+            node, factor = payload
+            self._on_straggle(node, factor, at)
+        elif kind == "task_retry":
+            jid, tid, attempt = payload
+            self._retry_task(jid, tid, attempt, at)
+        elif kind == "spec_resolve":
+            (tid,) = payload
+            self._resolve_spec(tid, at)
+        elif kind == "hb":
+            self._hb_pending = False
+            if self.heartbeats is not None:
+                # A sweep can _push retries, which re-arms the chain —
+                # don't arm twice.
+                self._hb_sweep(at)
+                if self._n_real_events and not self._hb_pending:
+                    self._arm_hb()
+        elif kind == "ctrl_down":
+            self._on_ctrl_down(at)
+        elif kind == "ctrl_up":
+            self._on_ctrl_up(at)
+
+    # -- headless data-plane mode (DESIGN.md §11) ---------------------------
+    def _headless_event(self, at: float, kind: str, payload: tuple) -> None:
+        """One event firing while the control plane is down.
+
+        The data plane needs no controller to finish what was installed —
+        transfers already booked on the ledger complete on their reserved
+        slots and their rules stay up until recovery reconciles expiries.
+        Everything needing a *decision* waits: job arrivals enter the
+        bounded mailbox (overflow → load-shed, surfaced as a ``degraded``
+        reject by ``serving.router``), and every other event (flows, raw
+        transfers, net churn, retries, speculation resolves) is deferred
+        in arrival order.  Deferred net events apply their liveness change
+        at drain time — a path that died headless reroutes at recovery,
+        with the outage bytes counted delivered (the documented
+        approximation: in-flight completion is only guaranteed on paths
+        that stay alive).  Poll/heartbeat chain events are dropped with
+        their pending flags cleared — the chains die (a dead controller
+        neither polls counters nor hears beats) and recovery re-arms them.
+        """
+        if kind == "ctrl_down":
+            return  # duplicate crash while already down
+        if kind in ("poll", "hb"):
+            if kind == "poll":
+                self._poll_pending = False
+            else:
+                self._hb_pending = False
+            return
+        if kind == "job":
+            (jid,) = payload
+            if self._mailbox_jobs >= self.mailbox_limit:
+                self.jobs[jid].shed = True
+                self.shed_jobs.append(jid)
+                self.ha_stats["mailbox_shed"] += 1
+                return
+            self._mailbox_jobs += 1
+            self.ha_stats["mailbox_queued"] += 1
+        else:
+            self.ha_stats["deferred"] += 1
+        self._mailbox.append((kind, payload))
+
+    def _on_ctrl_down(self, at: float) -> None:
+        if self.ctrl_down:
+            return  # duplicate crash event
+        self.ctrl_down = True
+        self._down_since = at
+        self.ha_stats["ctrl_down"] += 1
+        rec_t = self.obs.trace
+        if rec_t.enabled:
+            rec_t.record("ctrl_down", at=at)
+
+    def _on_ctrl_up(self, at: float) -> None:
+        if not self.ctrl_down:
+            return  # never crashed (or duplicate recovery)
+        self.ctrl_down = False
+        outage = at - self._down_since
+        self.ha_stats["ctrl_up"] += 1
+        # A dead controller heard no beats: forgive the gap so the first
+        # post-recovery sweep doesn't mass-declare healthy hosts dead.
+        if self.heartbeats is not None:
+            self.heartbeats.suspend_accrual(outage, now=at)
+        # Reconcile rule expiries that lapsed during the outage.
+        n0 = self.dataplane.tables.n_rules()
+        self._gc_tables(at)
+        self.ha_stats["reconciled_rules"] += (
+            n0 - self.dataplane.tables.n_rules()
+        )
+        # Drain the mailbox in arrival order, all at recovery time.
+        backlog, self._mailbox, self._mailbox_jobs = self._mailbox, [], 0
+        for kind, payload in backlog:
+            self._dispatch(at, kind, payload)
+        # Re-arm the suspended chains.
+        if (self.telemetry is not None and self._n_real_events
+                and not self._poll_pending):
+            self._arm_poll()
+        if (self.heartbeats is not None and self._n_real_events
+                and not self._hb_pending):
+            self._arm_hb()
+        rec_t = self.obs.trace
+        if rec_t.enabled:
+            rec_t.record("ctrl_up", at=at, outage=outage,
+                         drained=len(backlog))
 
     def _drain(self, rec: "JobRecord") -> None:
         """Place one arrived job's task list and install its flow rules.

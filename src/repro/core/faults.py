@@ -50,7 +50,17 @@ class LinkFlap:
     up_at: float
 
 
-FaultEvent = "HostCrash | StragglerOnset | LinkFlap"
+@dataclass(frozen=True)
+class ControllerCrash:
+    """The control plane itself dies at ``at``; recovers at ``recover_at``
+    (None: stays headless — the data plane finishes what was installed
+    and everything else waits)."""
+
+    at: float
+    recover_at: Optional[float] = None
+
+
+FaultEvent = "HostCrash | StragglerOnset | LinkFlap | ControllerCrash"
 
 
 @dataclass(frozen=True)
@@ -74,16 +84,20 @@ class FaultPlan:
         slow_factor: Tuple[float, float] = (2.0, 6.0),
         n_flaps: int = 0,
         flap_duration: float = 1.0,
+        n_ctrl_crashes: int = 0,
+        ctrl_mttr: float = 1.0,
     ) -> "FaultPlan":
         """Draw a plan from ``random.Random(seed)`` — one stream, fixed
-        draw order (crashes, then stragglers, then flaps), so the script
-        is a pure function of the arguments.
+        draw order (crashes, then stragglers, then flaps, then controller
+        crashes), so the script is a pure function of the arguments and
+        plans drawn before controller crashes existed are byte-identical.
 
         Crash/straggle/flap times are uniform in ``[t0, t1)``; a crash
         recovers ``mttr`` sim-seconds later (``mttr <= 0``: stays dead);
         straggler factors are uniform in ``slow_factor``.  Hosts are
         sampled without replacement per category (a host can both crash
-        and straggle — that is realistic churn).
+        and straggle — that is realistic churn).  Controller crashes
+        recover ``ctrl_mttr`` later (``<= 0``: stays headless).
         """
         rng = random.Random(seed)
         hosts = list(hosts)
@@ -102,6 +116,11 @@ class FaultPlan:
         for link in rng.sample(links, min(n_flaps, len(links))):
             at = rng.uniform(t0, t1)
             events.append(LinkFlap(link, at, at + flap_duration))
+        for _ in range(n_ctrl_crashes):
+            at = rng.uniform(t0, t1)
+            events.append(ControllerCrash(
+                at, at + ctrl_mttr if ctrl_mttr > 0.0 else None
+            ))
         events.sort(key=lambda e: (e.at, type(e).__name__, _key(e)))
         return cls(seed=seed, events=tuple(events))
 
@@ -117,6 +136,10 @@ class FaultPlan:
             elif isinstance(ev, LinkFlap):
                 ctrl.fail_link(ev.link, at=ev.at)
                 ctrl.recover_link(ev.link, at=ev.up_at)
+            elif isinstance(ev, ControllerCrash):
+                ctrl.fail_controller(at=ev.at)
+                if ev.recover_at is not None:
+                    ctrl.recover_controller(at=ev.recover_at)
             else:
                 raise TypeError(f"not a fault event: {ev!r}")
 

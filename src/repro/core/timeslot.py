@@ -216,6 +216,32 @@ class TimeSlotLedger:
         if self._mirror is not None:
             self._mirror.invalidate()
 
+    # -- full-state serialization (controller crash-recovery) ---------------
+    def dump_state(self) -> dict:
+        """Plain-data serialization of the rolling reservation window —
+        everything :meth:`load_state` needs to make a same-fabric ledger
+        byte-identical: the live matrix, its absolute origin, the
+        compaction telemetry/stride, and the batch-scan counter (DESIGN.md
+        §11).  Static structure (row map, capacities) is derived from the
+        fabric at construction and is not serialized."""
+        return {
+            "reserved": self.reserved.copy(),
+            "base_slot": self.base_slot,
+            "retired_slots": self.retired_slots,
+            "retire_stride": self.retire_stride,
+            "scan_cells": self.batch_scan_cells,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`dump_state` dict in place.  Goes through the
+        ``reserved`` setter, so any attached device mirror is invalidated
+        and re-uploads the full window on its next sync."""
+        self.reserved = state["reserved"].copy()
+        self.base_slot = state["base_slot"]
+        self.retired_slots = state["retired_slots"]
+        self.retire_stride = state["retire_stride"]
+        self.batch_scan_cells = state["scan_cells"]
+
     def slot_of(self, t: float) -> int:
         return int(math.floor(t / self.slot_duration + _EPS))
 

@@ -91,6 +91,27 @@ class DataPlane:
     def has_failures(self) -> bool:
         return bool(self.dead_links or self.dead_switches or self.dead_hosts)
 
+    # -- liveness serialization (controller crash-recovery) -----------------
+    def dump_liveness(self) -> dict:
+        """Plain-data liveness overlay for controller snapshots (DESIGN.md
+        §11).  Sets are dumped sorted so the bytes are deterministic; the
+        path engine's caches are pure memoization and are not serialized —
+        a restored plane recomputes identical candidates cold."""
+        return {
+            "dead_links": sorted(self.dead_links),
+            "dead_switches": sorted(self.dead_switches),
+            "dead_hosts": sorted(self.dead_hosts),
+            "version": self.liveness_version,
+        }
+
+    def load_liveness(self, state: dict) -> None:
+        """Restore a :meth:`dump_liveness` overlay in place."""
+        self.dead_links = set(state["dead_links"])
+        self.dead_switches = set(state["dead_switches"])
+        self.dead_hosts = set(state["dead_hosts"])
+        self._dead_all = None
+        self.liveness_version = state["version"]
+
     def link_alive(self, name: str) -> bool:
         return name not in self.all_dead_links()
 

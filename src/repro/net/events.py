@@ -67,7 +67,29 @@ class HostUp:
     at: float
 
 
-NetworkEvent = Union[LinkDown, LinkUp, SwitchDown, SwitchUp, HostDown, HostUp]
+@dataclass(frozen=True)
+class ControllerDown:
+    """Control-plane crash at ``at``: the data plane keeps forwarding on
+    installed rules (in-flight transfers complete), but scheduling stops —
+    new submissions queue in a bounded mailbox, heartbeat/telemetry chains
+    are suspended, and every other event is deferred until recovery."""
+
+    at: float
+
+
+@dataclass(frozen=True)
+class ControllerUp:
+    """Control-plane recovery at ``at``: reconcile lapsed rule expiries,
+    forgive the heartbeat gap, drain the mailbox in arrival order, and
+    re-arm the polling chains."""
+
+    at: float
+
+
+NetworkEvent = Union[
+    LinkDown, LinkUp, SwitchDown, SwitchUp, HostDown, HostUp,
+    ControllerDown, ControllerUp,
+]
 
 
 @dataclass(frozen=True)

@@ -117,6 +117,41 @@ class FlowTables:
             self._tables[n].uninstall(cookie) for n in dict.fromkeys(nodes)
         )
 
+    # -- full-state serialization (controller crash-recovery) ---------------
+    def dump_state(self) -> dict:
+        """Plain-data serialization of every installed rule, preserving
+        table order, per-cookie bucket order and the priority counter, so
+        :meth:`load_state` rebuilds tables whose ``dump``/``lookup``/
+        ``trace`` answers are byte-identical (DESIGN.md §11)."""
+        return {
+            "tables": [
+                (
+                    node,
+                    [
+                        (cookie, [(r.match, r.out_port, r.priority)
+                                  for r in rules])
+                        for cookie, rules in t._rules.items()
+                    ],
+                )
+                for node, t in self._tables.items()
+            ],
+            "cookie_nodes": list(self._cookie_nodes.items()),
+            "prio": self._prio,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`dump_state` dict in place (replaces every
+        currently-installed rule)."""
+        self._tables = {}
+        for node, buckets in state["tables"]:
+            t = self.table(node)
+            for cookie, rules in buckets:
+                for match, out_port, priority in rules:
+                    t.install(FlowRule(node, tuple(match), out_port, cookie,
+                                       priority=priority))
+        self._cookie_nodes = {c: tuple(ns) for c, ns in state["cookie_nodes"]}
+        self._prio = state["prio"]
+
     # -- inspection ---------------------------------------------------------
     def dump(self, node: Optional[str] = None) -> List[FlowRule]:
         if node is not None:

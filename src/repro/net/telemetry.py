@@ -134,6 +134,20 @@ class EwmaEstimator:
     def utilization(self) -> np.ndarray:
         return self._u
 
+    # -- serialization (controller crash-recovery) ----------------------
+    def dump_state(self) -> dict:
+        return {
+            "kind": self.name,
+            "alpha": self.alpha,
+            "u": self._u.copy(),
+            "primed": self._primed,
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.alpha = state["alpha"]
+        self._u = state["u"].copy()
+        self._primed = state["primed"]
+
 
 class WindowRateEstimator:
     """Sliding-window rate from cumulative byte counters.
@@ -153,9 +167,21 @@ class WindowRateEstimator:
         self.capacity = np.asarray(capacity, dtype=float)
         self._samples: deque = deque()  # (t, cum_bytes.copy())
         self._occ = np.zeros(n_links)
+        #: Counter discontinuities survived (controller restarts zero the
+        #: synthetic port counters; a real switch reboot does the same).
+        self.resets = 0
 
     def update(self, t: float, occupancy: np.ndarray, cum_bytes: np.ndarray) -> None:
         self._occ = occupancy.astype(float, copy=True)
+        # Monotonic-counter discontinuity (a counter went *backwards*, e.g.
+        # a switch/controller restart zeroed it): differencing across the
+        # reset would produce a negative rate, so drop the pre-reset
+        # history and start a fresh window from this sample — utilization
+        # falls back to instantaneous occupancy until two post-reset
+        # samples exist.
+        if self._samples and bool(np.any(cum_bytes < self._samples[-1][1] - _EPS)):
+            self._samples.clear()
+            self.resets += 1
         self._samples.append((t, cum_bytes.copy()))
         # Keep one sample at or before the window edge so the finite
         # difference always spans >= the window once enough history exists.
@@ -172,6 +198,22 @@ class WindowRateEstimator:
             return self._occ
         u = (b1 - b0) / (self.capacity * dt)
         return np.clip(u, 0.0, 1.0)
+
+    # -- serialization (controller crash-recovery) ----------------------
+    def dump_state(self) -> dict:
+        return {
+            "kind": self.name,
+            "window": self.window,
+            "occ": self._occ.copy(),
+            "samples": [(t, b.copy()) for t, b in self._samples],
+            "resets": self.resets,
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.window = state["window"]
+        self._occ = state["occ"].copy()
+        self._samples = deque((t, b.copy()) for t, b in state["samples"])
+        self.resets = state["resets"]
 
 
 ESTIMATORS = {"ewma": EwmaEstimator, "window": WindowRateEstimator}
@@ -314,4 +356,53 @@ class LinkStatsMonitor:
             "belief_as_of": self.belief.as_of,
             "mean_util": float(self.belief.util.mean()) if len(self.belief.util) else 0.0,
             "max_util": float(self.belief.util.max()) if len(self.belief.util) else 0.0,
+            "resets": getattr(self.estimator, "resets", 0),
         }
+
+    # -- serialization (controller crash-recovery) ----------------------
+    def dump_state(self) -> dict:
+        """Plain-data serialization of the telemetry loop (DESIGN.md §11):
+        poll cursor, synthesized counters, estimator internals and belief.
+        The ledger reference and the obs group are reattached by
+        :meth:`load_state` — they belong to the restoring controller."""
+        est = self.estimator
+        if not hasattr(est, "dump_state"):
+            raise TypeError(
+                f"estimator {type(est).__name__} does not support dump_state; "
+                "snapshotting requires a serializable estimator"
+            )
+        return {
+            "poll_interval": self.poll_interval,
+            "estimator": est.dump_state(),
+            "cum_bytes": self.cum_bytes.copy(),
+            "last_poll": self.last_poll,
+            "last_t": self._last_t,
+            "belief": {
+                "util": self.belief.util.copy(),
+                "as_of": self.belief.as_of,
+                "polls": self.belief.polls,
+            },
+        }
+
+    @classmethod
+    def load_state(cls, ledger, state: dict, obs=None) -> "LinkStatsMonitor":
+        """Rebuild a monitor against ``ledger`` from a :meth:`dump_state`
+        dict.  Stats counters live in the obs registry and are restored by
+        ``Registry.load_values`` — passing the same ``obs`` here makes the
+        rebuilt monitor's group share those cells."""
+        est_state = state["estimator"]
+        est = make_estimator(
+            est_state["kind"], len(ledger.capacity), ledger.capacity
+        )
+        est.load_state(est_state)
+        mon = cls(
+            ledger, poll_interval=state["poll_interval"], estimator=est, obs=obs
+        )
+        mon.cum_bytes = state["cum_bytes"].copy()
+        mon.last_poll = state["last_poll"]
+        mon._last_t = state["last_t"]
+        b = state["belief"]
+        mon.belief.util = b["util"].copy()
+        mon.belief.as_of = b["as_of"]
+        mon.belief.polls = b["polls"]
+        return mon

@@ -245,6 +245,37 @@ class Registry:
         """Attach a lazily-evaluated snapshot section (last write wins)."""
         self._providers[name] = fn
 
+    # -- serialization (controller crash-recovery) ----------------------
+    def dump_values(self) -> dict:
+        """Plain-data dump of every counter, gauge and group cell for
+        controller snapshots (DESIGN.md §11).  Spans and the flight
+        recorder are deliberately excluded: they measure wall-clock and
+        debugging artifacts of *this* process, not replayable scheduler
+        behavior, so recovery equivalence is not defined over them."""
+        return {
+            "counters": {n: c.value for n, c in self._counters.items()},
+            "gauges": {n: g.value for n, g in self._gauges.items()},
+            "groups": {prefix: dict(g) for prefix, g in self._groups.items()},
+        }
+
+    def load_values(self, state: dict) -> None:
+        """Restore a :meth:`dump_values` dump in place.
+
+        Writes through :meth:`group`/:meth:`counter`/:meth:`gauge`, so
+        cells already registered by the restoring controller's constructor
+        are updated rather than duplicated, and later ``group()`` calls
+        (e.g. a telemetry monitor re-attaching its stats group) observe the
+        restored values.
+        """
+        for prefix, cells in state["groups"].items():
+            g = self.group(prefix)
+            for key, value in cells.items():
+                g[key] = value
+        for name, value in state["counters"].items():
+            self.counter(name).value = value
+        for name, value in state["gauges"].items():
+            self.gauge(name).value = value
+
     # -- reporting ------------------------------------------------------
     def snapshot(self, trace_tail: int = 200) -> dict:
         counters = {c.name: c.value for c in self._counters.values()}

@@ -58,6 +58,25 @@ class HeartbeatMonitor:
         """Re-admit a recovered host (a beat on a dead host also revives)."""
         self.beat(host, now)
 
+    def suspend_accrual(self, dt: float, now: Optional[float] = None) -> None:
+        """Forgive ``dt`` seconds of missed-beat accrual on every live host.
+
+        A dead *controller* hears no heartbeats: when it comes back after a
+        ``dt``-second outage, every healthy host looks ``dt`` seconds stale
+        and a naive sweep would mass-declare the fleet dead.  Shifting
+        ``last_beat`` forward by the outage (capped at ``now`` — a beat
+        cannot come from the future) makes the first post-recovery sweep
+        judge hosts only on staleness accrued while the controller could
+        actually hear them.  Hosts already marked dead stay dead — the
+        outage is not evidence of recovery.
+        """
+        if dt <= 0:
+            return
+        now = self.clock() if now is None else now
+        for st in self.hosts.values():
+            if st.alive:
+                st.last_beat = min(st.last_beat + dt, now)
+
     def sweep(self, now: Optional[float] = None) -> List[str]:
         """→ newly-dead hosts."""
         now = self.clock() if now is None else now

@@ -83,6 +83,12 @@ class BassRouter:
             horizon_slots=2048,
         )
         self.ledger = self.controller.state.ledger
+        # Routing outcomes in the controller's obs registry, so degraded/
+        # load-shed decisions show up in Registry.snapshot() alongside the
+        # scheduler counters (bench_recovery asserts shed counts here).
+        self.stats = self.controller.obs.group(
+            "router", ("routed", "migrated", "degraded", "retries")
+        )
         self.decode_s_per_token = decode_s_per_token
         self.bytes_per_ctx_token = bytes_per_ctx_token
         self.prefix_home: Dict[int, List[str]] = {}   # prefix_hash -> replicas
@@ -116,6 +122,7 @@ class BassRouter:
                 # request on a partitioned replica would strand it behind
                 # the 1e15 s backlog surcharge, and propagating would turn
                 # a transient failover window into a caller-visible crash.
+                self.stats["degraded"] += 1
                 return RouteDecision(
                     rid=req.rid,
                     replica=self._coldest(),
@@ -125,6 +132,7 @@ class BassRouter:
                     degraded=True,
                 )
             attempt += 1
+            self.stats["retries"] += 1
             # Advance sim time so queued recoveries (link_up/host_up events
             # already on the controller heap) get a chance to fire.
             at += self.retry_backoff_s * (2 ** (attempt - 1))
@@ -168,6 +176,9 @@ class BassRouter:
         self.prefix_home.setdefault(req.prefix_hash, [])
         if a.node not in self.prefix_home[req.prefix_hash]:
             self.prefix_home[req.prefix_hash].append(a.node)
+        self.stats["routed"] += 1
+        if a.source is not None:
+            self.stats["migrated"] += 1
         return RouteDecision(
             rid=req.rid,
             replica=a.node,

@@ -1,0 +1,588 @@
+"""Control-plane crash-recovery suite (DESIGN.md §11).
+
+The contract under test: a controller rebuilt from a full-fidelity
+snapshot plus a write-ahead-journal replay must be **byte-identical** to a
+twin that never crashed — schedule dumps, reroute logs, ledger bytes,
+flow-table dumps and every behavioral obs counter — at *any* crash point
+of a seeded fault storm.  Plus the headless data-plane semantics: while
+the control plane is down, in-flight transfers on alive paths complete,
+new jobs queue in a bounded mailbox (overflow sheds), and the poll/
+heartbeat chains are suspended and re-armed on recovery.
+
+No ``hypothesis`` in this environment: the round-trip property suite
+draws its cases from seeded ``random.Random`` streams instead, the same
+convention as ``test_reroute_props``/``test_scheduler_props``.
+"""
+import pickle
+import random
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    BassPolicy,
+    ClusterController,
+    ClusterState,
+    RetryPolicy,
+)
+from repro.core.faults import ControllerCrash, FaultPlan
+from repro.core.journal import ControllerSnapshot, Journal
+from repro.core.tasks import BackgroundFlow, Task
+from repro.core.topology import storage_hosts
+from repro.net.events import ControllerDown, ControllerUp
+from repro.net.fattree import fat_tree_fabric
+from repro.net.telemetry import WindowRateEstimator
+from repro.runtime.ft import HeartbeatMonitor
+
+SEED = 7
+
+
+# ---------------------------------------------------------------------------
+# workload + canon helpers
+# ---------------------------------------------------------------------------
+
+
+def storm_fixture(n_tasks=12):
+    fab = fat_tree_fabric(4, link_mbps=100.0)
+    hosts = storage_hosts(fab)
+    half = len(hosts) // 2
+    sources, workers = hosts[:half], hosts[half:]
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, len(sources), size=(n_tasks, 3))
+    tasks = [
+        Task(
+            tid=i,
+            size=float(32 + (i % 5) * 16),
+            compute=2.0,
+            replicas=tuple(sources[j] for j in idx[i]),
+        )
+        for i in range(n_tasks)
+    ]
+    return fab, workers, tasks
+
+
+def build(fab, workers, **kw):
+    kw.setdefault("slot_duration", 0.1)
+    kw.setdefault("retry", RetryPolicy(max_attempts=4, backoff_s=0.5))
+    return ClusterController(fab, workers, BassPolicy(multipath=True), **kw)
+
+
+#: Counter prefixes outside the equivalence canon: wavefront hit/miss
+#: ratios are artifacts of the planner *cache* (placements are
+#: bit-identical regardless — PR 3's tested contract), and recovery.*
+#: are meta-counters of the recovery machinery itself.
+_CANON_EXCLUDE = ("wavefront.", "recovery.")
+
+
+def canon_counters(ctrl):
+    return {
+        k: v
+        for k, v in sorted(ctrl.obs.snapshot(trace_tail=0)["counters"].items())
+        if not k.startswith(_CANON_EXCLUDE)
+    }
+
+
+def canon_sched(ctrl):
+    out = []
+    for a in ctrl.schedule().assignments:
+        t = a.transfer
+        out.append((
+            a.tid, a.node, a.source, a.start.hex(), a.finish.hex(),
+            None if t is None else (t.links, t.start.hex(), t.end.hex(),
+                                    tuple((s, f.hex()) for s, f in
+                                          t.slot_fracs)),
+        ))
+    return out
+
+
+def canon_reroutes(ctrl):
+    return [
+        (float(r.at).hex(), r.flow, r.dead_links, r.src, r.dst,
+         r.old_path, r.new_path, float(r.delivered).hex(),
+         float(r.remaining).hex(), float(r.old_end).hex(),
+         float(r.new_end).hex())
+        for r in ctrl.reroute_log
+    ]
+
+
+def canon(ctrl):
+    led = ctrl.state.ledger
+    return {
+        "sched": canon_sched(ctrl),
+        "reroutes": canon_reroutes(ctrl),
+        "counters": canon_counters(ctrl),
+        "ledger": (led.reserved.tobytes(), led.base_slot, led.retired_slots),
+        "tables": tuple(ctrl.dataplane.tables.dump()),
+        "shed": list(ctrl.shed_jobs),
+    }
+
+
+def storm_script(fab, workers, tasks, with_telemetry=True):
+    """The seeded storm as a list of (label, entry-point call) steps —
+    crash points are injected *between* any two of these."""
+    plan = FaultPlan.generate(
+        SEED, workers, 0.5, 3.0, n_crashes=2, mttr=2.0,
+        n_stragglers=3, slow_factor=(4.0, 8.0),
+        n_ctrl_crashes=1, ctrl_mttr=0.8,
+    )
+    first = fab.path(tasks[0].replicas[0], workers[0])
+    steps = []
+    if with_telemetry:
+        steps.append(("attach_telemetry",
+                      lambda c: c.attach_telemetry(estimator="window")))
+    steps += [
+        ("submit0", lambda c: c.submit(tasks[: len(tasks) // 2], at=0.0)),
+        ("run0", lambda c: c.run_until(0.0)),
+        ("flow", lambda c: c.inject_flow(
+            BackgroundFlow(tasks[0].replicas[0], workers[0], 0.3, 0.4, 1.2))),
+        ("raw", lambda c: c.reserve_transfer_at(0.6, 24.0, first, tag="sync")),
+        ("faults", plan.apply),
+        ("run1", lambda c: c.run_until(1.0)),
+        ("submit1", lambda c: c.submit(tasks[len(tasks) // 2:], at=1.5)),
+        ("run", lambda c: c.run()),
+    ]
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# tentpole: crash-point equivalence sweep
+# ---------------------------------------------------------------------------
+
+
+def _script_len():
+    fab, workers, tasks = storm_fixture()
+    return len(storm_script(fab, workers, tasks))
+
+
+@pytest.mark.parametrize("crash_at", range(_script_len() + 1))
+def test_crash_point_equivalence(crash_at):
+    """At *every* crash point of the seeded storm, snapshot + journal
+    replay reproduces the never-crashed twin byte-for-byte."""
+    fab, workers, tasks = storm_fixture()
+    steps = storm_script(fab, workers, tasks)
+
+    a = build(fab, workers)
+    a.attach_journal()
+    for _label, step in steps[:crash_at]:
+        step(a)
+    snap = a.snapshot()
+    for _label, step in steps[crash_at:]:
+        step(a)
+    want = canon(a)
+
+    # The crashed controller: restore the snapshot from *bytes* (nothing
+    # shared with the dead process) and replay the journaled suffix.
+    snap2 = ControllerSnapshot.from_bytes(snap.to_bytes())
+    journal = Journal.from_bytes(a.journal.to_bytes())
+    assert snap2.lsn <= journal.lsn
+    b = ClusterController.recover_from(fab, snap2, journal)
+    assert canon(b) == want
+    # The meta-counters prove it actually recovered + replayed.
+    got = b.obs.snapshot(trace_tail=0)["counters"]
+    assert got["recovery.recoveries"] == 1
+    assert got["recovery.replayed"] == journal.lsn - snap2.lsn
+
+
+def test_recovered_controller_keeps_journaling():
+    """After recovery the journal is re-attached: later entry points
+    append past the replayed suffix, so a second crash also recovers."""
+    fab, workers, tasks = storm_fixture(n_tasks=6)
+    a = build(fab, workers)
+    a.attach_journal()
+    a.submit(tasks[:3], at=0.0)
+    a.run()
+    snap = a.snapshot()
+    lsn0 = a.journal.lsn
+
+    b = ClusterController.recover_from(fab, snap, a.journal)
+    assert b.journal is a.journal
+    b.submit(tasks[3:], at=b.now)
+    b.run()
+    assert b.journal.lsn > lsn0
+
+    c = ClusterController.recover_from(fab, snap, b.journal)
+    assert canon(c) == canon(b)
+
+
+def test_journal_records_resolved_args():
+    """``at=None`` defaults and auto job ids are materialized into the
+    record — replay must not depend on the crashed process's counters."""
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    ctrl = build(fab, workers)
+    journal = ctrl.attach_journal()
+    jid = ctrl.submit(tasks, at=2.5)
+    ctrl.fail_host(workers[0])       # at=None -> resolved to now
+    ops = [(r.op, r.args) for r in journal.records]
+    assert ops[0] == ("submit", (2.5, jid, tuple(tasks)))
+    assert ops[1] == ("fail_host", (workers[0], ctrl.now))
+
+
+def test_run_journals_once():
+    """``run()`` is one record; the inner ``run_until`` targets it picks
+    off the heap are its own implementation detail."""
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    ctrl = build(fab, workers)
+    journal = ctrl.attach_journal()
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run()
+    assert [r.op for r in journal.records] == ["submit", "run"]
+
+
+def test_journaled_controller_rejects_estimator_objects():
+    fab, workers, _tasks = storm_fixture(n_tasks=4)
+    ctrl = build(fab, workers)
+    ctrl.attach_journal()
+    est = WindowRateEstimator(
+        len(ctrl.state.ledger.capacity), ctrl.state.ledger.capacity
+    )
+    with pytest.raises(ValueError, match="named estimator"):
+        ctrl.attach_telemetry(estimator=est)
+
+
+# ---------------------------------------------------------------------------
+# satellite: seeded round-trip property suite (snapshot -> bytes -> restore)
+# ---------------------------------------------------------------------------
+
+
+def _deep_eq(x, y):
+    if isinstance(x, np.ndarray) or isinstance(y, np.ndarray):
+        return (isinstance(x, np.ndarray) and isinstance(y, np.ndarray)
+                and x.dtype == y.dtype and x.shape == y.shape
+                and bool(np.all(x == y)))
+    if isinstance(x, dict):
+        return (isinstance(y, dict) and x.keys() == y.keys()
+                and all(_deep_eq(x[k], y[k]) for k in x))
+    if isinstance(x, (set, frozenset)):
+        return type(x) is type(y) and sorted(x) == sorted(y)
+    if isinstance(x, (list, tuple, deque)):
+        return (type(x) is type(y) and len(x) == len(y)
+                and all(_deep_eq(a, b) for a, b in zip(x, y)))
+    return pickle.dumps(x) == pickle.dumps(y)
+
+
+def _comparable_payload(payload):
+    """Snapshot payload minus the recovery meta-counters — taking a
+    snapshot (and recovering from one) bumps ``recovery.*``, which is
+    bookkeeping *about* the mechanism, not controller state."""
+    q = dict(payload)
+    obs = dict(q["obs"])
+    obs["counters"] = {k: v for k, v in obs["counters"].items()
+                       if not k.startswith("recovery.")}
+    q["obs"] = obs
+    return q
+
+
+@pytest.mark.parametrize("case", range(6))
+def test_snapshot_roundtrip_at_random_storm_points(case):
+    """snapshot -> bytes -> restore -> snapshot is the identity — ledger
+    bytes, event-heap order, flow-table dumps and estimator state — at a
+    random point of a seeded fault storm."""
+    rng = random.Random(1000 + case)
+    fab, workers, tasks = storm_fixture()
+    plan = FaultPlan.generate(
+        100 + case, workers, 0.5, 3.0, n_crashes=2, mttr=2.0,
+        n_stragglers=2, slow_factor=(3.0, 6.0),
+        n_ctrl_crashes=case % 2, ctrl_mttr=0.5,
+    )
+    ctrl = build(fab, workers)
+    ctrl.attach_telemetry(estimator=rng.choice(["ewma", "window"]))
+    # Generous grace: nobody feeds beats in this storm, and mass heartbeat
+    # kills are test_faults territory — here the monitor only has to
+    # round-trip its state.
+    ctrl.attach_heartbeats(interval=0.5, grace_s=100.0)
+    ctrl.submit(tasks, at=0.0)
+    plan.apply(ctrl)
+    ctrl.run_until(rng.uniform(0.0, 4.0))
+
+    snap = ctrl.snapshot()
+    restored = ClusterController.recover_from(
+        fab, ControllerSnapshot.from_bytes(snap.to_bytes())
+    )
+    again = restored.snapshot()
+    assert _deep_eq(
+        _comparable_payload(snap.payload), _comparable_payload(again.payload)
+    ), "round-trip not identity"
+    # ...and the restored controller finishes exactly like the original.
+    ctrl.run()
+    restored.run()
+    assert canon(restored) == canon(ctrl)
+    est0, est1 = ctrl.telemetry.estimator, restored.telemetry.estimator
+    assert _deep_eq(est0.dump_state(), est1.dump_state())
+    assert [h for h in ctrl.heartbeats.hosts] == \
+        [h for h in restored.heartbeats.hosts]
+
+
+# ---------------------------------------------------------------------------
+# satellite: ClusterState.restore fidelity (retired_slots + device mirror)
+# ---------------------------------------------------------------------------
+
+
+class _MirrorStub:
+    def __init__(self):
+        self.invalidated = 0
+
+    def invalidate(self):
+        self.invalidated += 1
+
+    def note_flat(self, *a):  # pragma: no cover - defensive
+        pass
+
+    def note_grid(self, *a):  # pragma: no cover - defensive
+        pass
+
+
+def test_state_restore_crosses_retire_and_invalidates_mirror():
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    state = ClusterState(fab, workers, slot_duration=0.1, horizon_slots=64)
+    rows = state.ledger.path_rows(tasks[0].replicas[0], workers[0])
+    plan = state.ledger.plan_transfer(40.0, rows, not_before=0.0)
+    state.ledger.commit(plan)
+    snap = state.snapshot()
+    reserved0 = state.ledger.reserved.copy()
+
+    # Cross a retire: the window origin moves, history is dropped.
+    mirror = _MirrorStub()
+    state.ledger._mirror = mirror
+    retired = state.ledger.retire_to(state.ledger.slot_of(plan.end) + 8)
+    assert retired > 0
+    assert state.ledger.base_slot > 0 and state.ledger.retired_slots > 0
+    n_inv = mirror.invalidated
+
+    state.restore(snap)
+    # Full ledger fidelity: origin, retire count AND the matrix.
+    assert state.ledger.base_slot == 0
+    assert state.ledger.retired_slots == 0
+    assert state.ledger.reserved.tobytes() == reserved0.tobytes()
+    # The device mirror must have been invalidated by the restore — its
+    # uploaded columns were aligned to the post-retire origin.
+    assert mirror.invalidated > n_inv
+
+
+# ---------------------------------------------------------------------------
+# tentpole: headless data-plane mode
+# ---------------------------------------------------------------------------
+
+
+def test_headless_inflight_transfers_complete():
+    """A transfer whose rules are installed before the crash completes on
+    the data plane: same assignment times as a never-crashed twin, rules
+    stay up during the outage, and recovery reconciles the lapsed
+    expiries."""
+    fab, workers, tasks = storm_fixture(n_tasks=6)
+
+    ref = build(fab, workers)
+    ref.submit(tasks, at=0.0)
+    ref.run()
+    want = canon_sched(ref)
+
+    ctrl = build(fab, workers)
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run_until(0.0)   # placed: transfers booked, rules installed
+    n_rules = ctrl.dataplane.tables.n_rules()
+    assert n_rules > 0
+    end = max(a.transfer.end for a in ctrl.schedule().assignments
+              if a.transfer is not None and a.transfer.slot_fracs)
+    ctrl.fail_controller(at=0.1)
+    ctrl.recover_controller(at=end + 1.0)
+    ctrl.run()
+    # 100% of in-flight transfers completed: the schedule is untouched.
+    assert canon_sched(ctrl) == want
+    # Rules lapsed during the outage were reconciled at recovery, not GC'd
+    # mid-outage.
+    assert ctrl.ha_stats["reconciled_rules"] == n_rules
+    assert ctrl.dataplane.tables.n_rules() == 0
+
+
+def test_headless_mailbox_bounded_load_shed():
+    fab, workers, tasks = storm_fixture(n_tasks=8)
+    ctrl = build(fab, workers, mailbox_limit=2)
+    ctrl.fail_controller(at=0.0)
+    jids = [ctrl.submit([t], at=0.5 + 0.01 * i)
+            for i, t in enumerate(tasks[:5])]
+    ctrl.recover_controller(at=1.0)
+    ctrl.run()
+    # First two queued jobs drained at recovery; the overflow shed.
+    assert [ctrl.jobs[j].placed for j in jids] == [
+        True, True, False, False, False
+    ]
+    assert [ctrl.jobs[j].shed for j in jids] == [
+        False, False, True, True, True
+    ]
+    assert ctrl.shed_jobs == jids[2:]
+    assert ctrl.ha_stats["mailbox_queued"] == 2
+    assert ctrl.ha_stats["mailbox_shed"] == 3
+    # Drained jobs were placed at recovery time, not their arrival time.
+    assert all(a.start >= 1.0 - 1e-9
+               for j in jids[:2] for a in ctrl.jobs[j].assignments)
+
+
+def test_headless_suspends_poll_and_hb_chains():
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    srcs = tasks[0].replicas
+    tiny = lambda tid: Task(tid=tid, size=8.0, compute=0.1, replicas=srcs)
+    ctrl = build(fab, workers)
+    mon = ctrl.attach_telemetry(estimator="ewma")
+    hb = ctrl.attach_heartbeats(interval=0.2, grace_s=1.0)
+    j0 = ctrl.submit([tiny(0)], at=0.0)
+    ctrl.fail_controller(at=0.4)
+    ctrl.recover_controller(at=3.0)
+    j1 = ctrl.submit([tiny(1)], at=2.0)  # arrives mid-outage -> mailbox
+    j2 = ctrl.submit([tiny(2)], at=3.5)  # post-recovery work for the chains
+    ctrl.run_until(0.3)
+    for h in workers:
+        hb.beat(h, now=0.35)
+    ctrl.run_until(1.0)
+    frozen = mon.stats["polls"]
+    assert frozen > 0
+    ctrl.run_until(2.9)
+    # The poll/hb chains are suspended, not merely starved: the j1 arrival
+    # at t=2.0 kept the heap busy mid-outage, yet nothing polled.
+    assert mon.stats["polls"] == frozen, "polled while down"
+    assert ctrl.ha_stats["mailbox_queued"] == 1
+    ctrl.run()
+    # Chains re-armed on recovery; the outage did not kill polling.
+    assert mon.stats["polls"] > frozen
+    assert ctrl._hb_last >= 3.0, "no post-recovery heartbeat sweep ran"
+    # grace 1.0 < outage 2.6, a sweep DID run after recovery, and yet no
+    # host was declared dead: missed-beat accrual was suspended across the
+    # window (without suspend_accrual every worker would look 2.65 s
+    # stale at the t=3.0 sweep).
+    assert ctrl.fault_stats["host_down"] == 0
+    assert sorted(hb.alive()) == sorted(workers)
+    assert all(ctrl.jobs[j].placed for j in (j0, j1, j2))
+    # The mailboxed job was scheduled at drain time, not its arrival time.
+    assert all(a.start >= 3.0 - 1e-9 for a in ctrl.jobs[j1].assignments)
+
+
+def test_controller_events_via_inject_net_and_fault_plan():
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    ctrl = build(fab, workers)
+    ctrl.submit(tasks, at=0.0)
+    ctrl.inject_net(ControllerDown(at=0.2))
+    ctrl.inject_net(ControllerUp(at=0.8))
+    ctrl.run()
+    assert ctrl.ha_stats["ctrl_down"] == 1
+    assert ctrl.ha_stats["ctrl_up"] == 1
+
+    # Seed 1 draws crashes at t≈0.63 and t≈1.35 — the mttr=0.3 windows
+    # don't overlap, so both down/up pairs take effect.
+    plan = FaultPlan.generate(1, workers, 0.5, 1.5,
+                              n_ctrl_crashes=2, ctrl_mttr=0.3)
+    assert sum(isinstance(e, ControllerCrash) for e in plan.events) == 2
+    ctrl2 = build(fab, workers)
+    ctrl2.submit(tasks, at=0.0)
+    plan.apply(ctrl2)
+    ctrl2.run()
+    assert ctrl2.ha_stats["ctrl_down"] == 2
+    assert ctrl2.ha_stats["ctrl_up"] == 2
+
+
+def test_fault_plan_generation_unchanged_without_ctrl_crashes():
+    """Adding the controller-crash draw *after* the existing streams keeps
+    pre-existing seeded plans byte-identical."""
+    kw = dict(n_crashes=2, mttr=2.0, n_stragglers=3, slow_factor=(4.0, 8.0))
+    fab, workers, _tasks = storm_fixture()
+    old = FaultPlan.generate(SEED, workers, 0.5, 3.0, **kw)
+    new = FaultPlan.generate(SEED, workers, 0.5, 3.0, n_ctrl_crashes=0, **kw)
+    assert old == new
+
+
+# ---------------------------------------------------------------------------
+# satellite: heartbeat accrual suspension (injectable clock)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_suspend_accrual_injectable_clock():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b", "c"], grace_s=1.0, clock=lambda: t[0])
+    t[0] = 2.0
+    mon.beat("a")
+    mon.beat("b")
+    assert mon.sweep() == ["c"] and not mon.hosts["c"].alive
+
+    # Outage [2.4, 12.4]: the hosts were already 0.4 s stale going in.
+    # Without forgiveness every live host would be 10.4 s stale at the
+    # first post-recovery sweep and get mass-declared dead.
+    t[0] = 12.4
+    mon.suspend_accrual(10.0)
+    assert mon.sweep() == []
+    assert sorted(mon.alive()) == ["a", "b"]
+    # Dead hosts stay dead — the outage is not evidence of recovery.
+    assert not mon.hosts["c"].alive
+    # last_beat never moves into the future.
+    assert all(st.last_beat <= t[0] for st in mon.hosts.values())
+    # ...and staleness accrued *before* the outage still counts: the hosts
+    # are 0.4 s stale again, so 0.7 s more pushes them over the 1.0 grace.
+    t[0] = 13.1
+    assert sorted(mon.sweep()) == ["a", "b"]
+    # No-op guards.
+    mon.suspend_accrual(0.0)
+    mon.suspend_accrual(-5.0)
+    # The cap: forgiving more than the wall allows pins last_beat at now,
+    # never beyond it.
+    mon.revive("a")
+    mon.suspend_accrual(50.0)
+    assert mon.hosts["a"].last_beat == t[0]
+
+
+# ---------------------------------------------------------------------------
+# satellite: telemetry counter-reset hardening
+# ---------------------------------------------------------------------------
+
+
+def test_window_estimator_clamps_counter_reset():
+    cap = np.array([100.0, 100.0])
+    est = WindowRateEstimator(2, cap, window=4.0)
+    est.update(0.0, np.array([0.5, 0.5]), np.array([0.0, 0.0]))
+    est.update(1.0, np.array([0.5, 0.5]), np.array([80.0, 40.0]))
+    assert est.utilization() == pytest.approx([0.8, 0.4])
+
+    # Counters went backwards (controller restart zeroed them): the rate
+    # must clamp to a fresh sample, never a negative utilization.
+    est.update(2.0, np.array([0.3, 0.2]), np.array([5.0, 2.0]))
+    assert est.resets == 1
+    u = est.utilization()
+    assert np.all(u >= 0.0)
+    assert u == pytest.approx([0.3, 0.2])  # fresh-sample fallback
+
+    # Two post-reset samples: rates are differenced within the new epoch.
+    est.update(3.0, np.array([0.3, 0.2]), np.array([25.0, 12.0]))
+    assert est.utilization() == pytest.approx([0.2, 0.1])
+    assert est.resets == 1
+
+
+def test_monitor_snapshot_reports_resets():
+    fab, workers, tasks = storm_fixture(n_tasks=4)
+    ctrl = build(fab, workers)
+    mon = ctrl.attach_telemetry(estimator="window")
+    ctrl.submit(tasks, at=0.0)
+    ctrl.run()
+    assert mon.snapshot()["resets"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: router degraded/shed decisions are observable
+# ---------------------------------------------------------------------------
+
+
+def test_router_counts_degraded_decisions():
+    from repro.serving.engine import Request
+    from repro.serving.router import BassRouter
+
+    router = BassRouter(["r0", "r1"], max_retries=1, retry_backoff_s=0.01)
+    prompt = np.arange(64, dtype=np.int32)
+    d0 = router.route(Request(rid=0, prompt=prompt, max_new=8,
+                              prefix_hash=1), now=0.0)
+    assert not d0.degraded
+
+    for i in range(2):
+        router.fail_link(f"nic{i}")
+    d1 = router.route(Request(rid=1, prompt=prompt, max_new=8,
+                              prefix_hash=2), now=router.controller.now)
+    assert d1.degraded
+
+    counters = router.controller.obs.snapshot(trace_tail=0)["counters"]
+    assert counters["router.routed"] == 1
+    assert counters["router.degraded"] == 1
+    assert counters["router.retries"] == 1
