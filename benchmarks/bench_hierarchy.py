@@ -1,0 +1,197 @@
+"""Benchmark: flat vs pod-sharded control plane (DESIGN.md §12).
+
+An open-loop sustained-arrival stream (jobs arrive on a fixed clock,
+independent of completions — the fleet's actual arrival process) drives
+the flat :class:`~repro.core.controller.ClusterController` and the
+pod-affine :class:`~repro.core.hierarchy.HierarchicalController` over the
+same fabric and workload.  Each row reports sustained scheduling
+throughput (``tasks_s``) plus the per-submit wall-latency tail
+(``p50_us``/``p99_us``/``p999_us`` per job) — the hierarchy's claim is a
+*tail* claim: pod-local placement keeps the per-arrival critical path
+O(pod), not O(fleet).
+
+Full mode runs two legs:
+
+* a ≥1,000,000-task stream on a k=8 fat-tree through the sharded
+  controller (the tail-latency leg);
+* flat vs sharded on a 16,384-host (64×256) TPU-DCN fleet — sharded
+  sustained throughput must be ≥ flat's (asserted).
+
+``--smoke`` runs a small k=4 config only: it asserts exact-mode
+byte-parity against the flat controller (the dump-level contract, cheap
+enough for CI) and emits flat/sharded rows without the throughput floor.
+CSV: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+import numpy as np
+
+from repro.core.controller import ClusterController
+from repro.core.hierarchy import HierarchicalController
+from repro.core.tasks import Task
+from repro.core.topology import storage_hosts, tpu_dcn_fabric
+from repro.net.fattree import fat_tree_fabric
+
+#: Full-mode legs: (label, fabric builder, jobs, tasks/job, arrival dt).
+#: 4096 × 256 = 1,048,576 tasks on the k=8 fat-tree — the acceptance
+#: floor for the tail-latency leg.
+TAIL_LEG = ("fattree_k8", lambda: fat_tree_fabric(8, link_mbps=25e9),
+            4096, 256, 0.1)
+FLEET_LEG = ("fleet_16384h", lambda: tpu_dcn_fabric(n_pods=64,
+                                                    hosts_per_pod=256),
+             128, 256, 0.05)
+SMOKE_LEG = ("fattree_k4", lambda: fat_tree_fabric(4, link_mbps=25e9),
+             64, 32, 0.1)
+
+SLOT = 0.1
+
+
+def _jobs(hosts, pods_of, n_jobs, tasks_per_job, dt, seed=0):
+    """Open-loop arrival stream: job ``j`` arrives at ``j*dt``; its
+    replicas live in one pod (rotating), so the affine controller's
+    pod-local fast path and the flat controller see the same bytes."""
+    rng = random.Random(seed)
+    by_pod = {}
+    for h in hosts:
+        by_pod.setdefault(pods_of(h), []).append(h)
+    pods = sorted(by_pod)
+    jobs = []
+    tid = 0
+    for j in range(n_jobs):
+        pool = by_pod[pods[j % len(pods)]]
+        tasks = [
+            Task(
+                tid + i,
+                size=float(rng.uniform(64e6, 256e6)),
+                compute=0.05,
+                replicas=tuple(rng.sample(pool, min(3, len(pool)))),
+            )
+            for i in range(tasks_per_job)
+        ]
+        tid += tasks_per_job
+        jobs.append((tasks, j * dt))
+    return jobs
+
+
+def _drive(ctl, jobs):
+    """Submit each arrival and drain it; per-job wall latency in µs."""
+    lat = np.empty(len(jobs), dtype=np.float64)
+    t0 = time.perf_counter()
+    for i, (tasks, at) in enumerate(jobs):
+        c0 = time.perf_counter()
+        ctl.submit(tasks, at=at)
+        ctl.run_until(at)
+        lat[i] = (time.perf_counter() - c0) * 1e6
+    wall = time.perf_counter() - t0
+    n_tasks = sum(len(t) for t, _ in jobs)
+    return wall, n_tasks, lat
+
+
+def _row(name, wall, n_tasks, lat):
+    p50, p99, p999 = np.percentile(lat, [50.0, 99.0, 99.9])
+    return (
+        name,
+        wall / n_tasks * 1e6,
+        f"tasks_s={n_tasks / wall:.0f},p50_us={p50:.1f},"
+        f"p99_us={p99:.1f},p999_us={p999:.1f}",
+    )
+
+
+def _tasks_s(row) -> float:
+    return float(str(row[2]).split("tasks_s=")[1].split(",")[0])
+
+
+def _leg(leg, modes=("flat", "sharded"), seed=0):
+    label, build, n_jobs, per_job, dt = leg
+    rows = {}
+    for mode in modes:
+        fab = build()
+        hosts = storage_hosts(fab)
+        if mode == "flat":
+            ctl = ClusterController(fab, hosts, "bass", slot_duration=SLOT)
+        else:
+            ctl = HierarchicalController(fab, hosts, affinity=True,
+                                         slot_duration=SLOT)
+        jobs = _jobs(hosts, lambda h: h.split("/", 1)[0], n_jobs, per_job,
+                     dt, seed=seed)
+        wall, n_tasks, lat = _drive(ctl, jobs)
+        assert sum(len(r.assignments) for r in ctl.jobs.values()) == n_tasks
+        rows[mode] = _row(f"hierarchy_{label}_{mode}", wall, n_tasks, lat)
+    return [rows[m] for m in modes]
+
+
+def _parity_check():
+    """Exact-mode byte parity on a cross-pod k=4 stream — the schedule-dump
+    contract, asserted in-process so CI trips without diffing dumps."""
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    rng = random.Random(3)
+    flat = ClusterController(fab, hosts, "bass")
+    hier = HierarchicalController(fab, hosts)
+    for j in range(12):
+        tasks = [
+            Task(j * 100 + i, size=rng.uniform(40, 400),
+                 compute=rng.uniform(1, 20),
+                 replicas=tuple(rng.sample(hosts, 3)))
+            for i in range(rng.randint(1, 8))
+        ]
+        flat.submit(tasks, at=j * 2.0)
+        hier.submit(tasks, at=j * 2.0)
+    flat.run()
+    hier.run()
+    for a, b in zip(flat.schedule().assignments, hier.schedule().assignments):
+        ta = (a.transfer.links, a.transfer.start, a.transfer.end,
+              a.transfer.slot_fracs) if a.transfer else None
+        tb = (b.transfer.links, b.transfer.start, b.transfer.end,
+              b.transfer.slot_fracs) if b.transfer else None
+        assert (a.tid, a.node, a.source, a.start, a.finish, ta) \
+            == (b.tid, b.node, b.source, b.start, b.finish, tb), (
+            f"exact-mode parity broken at tid {a.tid}"
+        )
+
+
+def run(smoke: bool = False) -> list:
+    _parity_check()
+    rows = []
+    if smoke:
+        rows += _leg(SMOKE_LEG)
+        return rows
+    # Tail-latency leg: ≥1M tasks on the k=8 fat-tree, sharded control
+    # plane — p99/p999 per-submit latency is the headline number.
+    rows += _leg(TAIL_LEG, modes=("sharded",))
+    # Fleet leg: 16,384 hosts, flat vs sharded on identical arrivals.
+    fleet = _leg(FLEET_LEG)
+    rows += fleet
+    flat_tps, shard_tps = _tasks_s(fleet[0]), _tasks_s(fleet[1])
+    assert shard_tps >= flat_tps, (
+        f"sharded controller slower than flat at 16,384 hosts: "
+        f"{shard_tps:.0f} < {flat_tps:.0f} tasks/s"
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small k=4 config + exact-mode parity assert only")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also merge machine-readable rows (JSON)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        try:  # as a module (benchmarks.run) vs standalone script (CI)
+            from benchmarks.bench_sched_scale import append_json
+        except ImportError:
+            from bench_sched_scale import append_json
+
+        append_json(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,10 @@
 * bench_recovery    — beyond-paper: control-plane crash-recovery (WAL
                       snapshot+replay vs genesis replay, headless-mode
                       completion, mailbox shed, crash makespan overhead)
+* bench_hierarchy   — beyond-paper: flat vs pod-sharded control plane —
+                      open-loop arrival streams (≥1M tasks on a k=8
+                      fat-tree), p50/p99/p999 per-submit latency, and the
+                      sharded ≥ flat throughput floor at 16,384 hosts
 * bench_roofline    — §Roofline report from the dry-run artifacts
 """
 from __future__ import annotations
@@ -37,6 +41,7 @@ from . import (
     bench_discussion1,
     bench_failover_scale,
     bench_faults,
+    bench_hierarchy,
     bench_longrun,
     bench_multipath,
     bench_online,
@@ -63,6 +68,7 @@ MODULES = [
     bench_telemetry,
     bench_faults,
     bench_recovery,
+    bench_hierarchy,
     bench_roofline,
 ]
 

@@ -108,6 +108,12 @@ def main() -> None:
         # rebuilt via snapshot bytes + journal replay — the paired blocks
         # are asserted byte-identical before they are written.
         dump_recovery(out)
+        # Flat vs sharded control plane (DESIGN.md §12): the same arrival
+        # streams through the flat ClusterController and the exact-mode
+        # HierarchicalController — the paired ``hierarchy_*`` blocks are
+        # asserted byte-identical before they are written (single-pod AND
+        # cross-pod workloads, rebalancer off).
+        dump_hierarchy(out)
 
 
 def dump_recovery(out):
@@ -169,6 +175,67 @@ def dump_recovery(out):
                         ("recovery_crashed", bodies[1])):
         out.write(f"== {label}\n")
         out.write(body)
+
+
+def dump_hierarchy(out):
+    """Flat vs pod-sharded controller on identical arrival streams: the
+    paired ``hierarchy_<case>_flat`` / ``hierarchy_<case>_sharded`` blocks
+    must be byte-identical within one dump — the exact-mode parity
+    contract of ``core.hierarchy`` (lazy minnow, per-pod ledger shards and
+    the boundary shard are all invisible in every emitted coordinate)."""
+    import io  # noqa: E402
+    import random  # noqa: E402
+
+    from repro.core.controller import ClusterController  # noqa: E402
+    from repro.core.hierarchy import HierarchicalController  # noqa: E402
+    from repro.core.tasks import Task  # noqa: E402
+    from repro.core.topology import storage_hosts, tpu_dcn_fabric  # noqa: E402
+    from repro.net.fattree import fat_tree_fabric  # noqa: E402
+
+    def stream(hosts, seed, pod=None):
+        rng = random.Random(seed)
+        pool = [h for h in hosts if pod is None or h.startswith(pod + "/")]
+        jobs = []
+        for j in range(8):
+            jobs.append((
+                [
+                    Task(
+                        j * 100 + i,
+                        size=rng.uniform(40, 400),
+                        compute=rng.uniform(1, 20),
+                        replicas=tuple(rng.sample(pool, 3)),
+                    )
+                    for i in range(rng.randint(1, 10))
+                ],
+                j * 2.5,
+            ))
+        return jobs
+
+    cases = [
+        ("fattree_cross_pod", fat_tree_fabric(4), None, 11),
+        ("fattree_single_pod", fat_tree_fabric(4), "pod2", 23),
+        ("tpu_dcn_cross_pod", tpu_dcn_fabric(n_pods=4, hosts_per_pod=8),
+         None, 7),
+    ]
+    for case, fab, pod, seed in cases:
+        hosts = storage_hosts(fab)
+        jobs = stream(hosts, seed, pod)
+        bodies = []
+        for ctl in (ClusterController(fab, hosts, "bass"),
+                    HierarchicalController(fab, hosts)):
+            for tasks, at in jobs:
+                ctl.submit(tasks, at=at)
+            ctl.run()
+            buf = io.StringIO()
+            dump_schedule(buf, "x", ctl.schedule())
+            bodies.append(buf.getvalue().split("\n", 1)[1])
+        assert bodies[0] == bodies[1], (
+            f"hierarchy dump pair diverged on {case}: sharded control "
+            "plane is not byte-identical to flat"
+        )
+        for mode, body in (("flat", bodies[0]), ("sharded", bodies[1])):
+            out.write(f"== hierarchy_{case}_{mode}\n")
+            out.write(body)
 
 
 def dump_fault_storm(out, engine):

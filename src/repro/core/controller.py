@@ -204,6 +204,62 @@ def nearest_source(
 
 
 # ---------------------------------------------------------------------------
+# EventQueue — the deterministic event heap, extracted for pod-scope reuse
+# ---------------------------------------------------------------------------
+
+
+class EventQueue:
+    """Deterministic controller event heap: ``(at, seq, kind, payload)``.
+
+    Extracted from :class:`ClusterController` so pod-scope controllers
+    (``core.hierarchy``) reuse the exact ordering contract — time first,
+    then a monotonically increasing sequence number (FIFO among same-time
+    events); kind/payload are never compared.  ``items`` is a live
+    ``heapq`` list and stays a plain attribute on purpose: controller
+    snapshots store it verbatim, because heapq's internal layout is part
+    of the deterministic tie-break story.
+
+    ``n_real`` counts queued events that are *work* — everything except
+    the telemetry poll / heartbeat chain ticks — so those self-re-arming
+    chains can key off pending work without counting each other.
+    """
+
+    #: Event kinds that are chain ticks, not work: the telemetry poll and
+    #: heartbeat sweeps here, plus the hierarchical controller's periodic
+    #: rebalance tick (``core.hierarchy``) — all three re-arm themselves
+    #: only while real work is queued, so none can keep ``run()`` alive.
+    CHAIN_KINDS = ("poll", "hb", "rebalance")
+
+    __slots__ = ("items", "seq", "n_real")
+
+    def __init__(self) -> None:
+        self.items: List[Tuple[float, int, str, tuple]] = []
+        self.seq = 0
+        self.n_real = 0
+
+    def __bool__(self) -> bool:
+        return bool(self.items)
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    def next_at(self) -> float:
+        return self.items[0][0]
+
+    def push(self, at: float, kind: str, payload: tuple) -> None:
+        heapq.heappush(self.items, (at, self.seq, kind, payload))
+        self.seq += 1
+        if kind not in self.CHAIN_KINDS:
+            self.n_real += 1
+
+    def pop(self) -> Tuple[float, int, str, tuple]:
+        ev = heapq.heappop(self.items)
+        if ev[2] not in self.CHAIN_KINDS:
+            self.n_real -= 1
+        return ev
+
+
+# ---------------------------------------------------------------------------
 # ClusterState — the shared mutable world every policy operates on
 # ---------------------------------------------------------------------------
 
@@ -596,6 +652,55 @@ class ClusterState:
 # ---------------------------------------------------------------------------
 # SchedulingPolicy protocol + the four paper policies
 # ---------------------------------------------------------------------------
+
+
+class SchedulingSurface(Protocol):
+    """The exact state surface :meth:`BassPolicy.place` consumes — the
+    scheduling state machine as a *pod-scope reusable unit* (DESIGN.md
+    §12).  :class:`ClusterState` is the flat implementation;
+    ``repro.core.hierarchy.HierarchicalState`` implements the same surface
+    over per-pod shards (lazily-clamped idle map, per-pod minnow heaps, a
+    sharded ledger) so one Algorithm-1 implementation drives both and the
+    byte-parity contract is structural, not re-derived.
+    """
+
+    #: ``ΥI_j`` — a mapping view; implementations may clamp lazily against
+    #: ``now`` instead of eagerly advancing every worker.
+    idle: Dict[str, float]
+    #: Membership container for ``pick_local`` (a set at fleet scale).
+    workers_set: frozenset
+    #: Plan/commit surface (flat ``TimeSlotLedger`` or ``ShardedLedger``).
+    ledger: TimeSlotLedger
+    obs: Registry
+
+    def minnow(self) -> str:
+        """``ND_minnow`` under the (idle, name) order."""
+        ...
+
+    def choose_source(
+        self,
+        task: Task,
+        dst: str,
+        at: float,
+        load: Optional[Dict[str, float]] = None,
+        belief=None,
+    ) -> Tuple[str, Tuple[int, ...]]:
+        ...
+
+    def commit_local(
+        self, task: Task, node: str, bw_needed: Optional[float] = None
+    ) -> Assignment:
+        ...
+
+    def commit_remote(
+        self,
+        task: Task,
+        node: str,
+        src: str,
+        plan: TransferPlan,
+        bw_needed: Optional[float] = None,
+    ) -> Assignment:
+        ...
 
 
 class SchedulingPolicy(Protocol):
@@ -1169,14 +1274,16 @@ class ClusterController:
         self.jobs: Dict[int, JobRecord] = {}
         self.flows: Dict[object, TransferPlan] = {}
         self.reroute_log: List[object] = []     # RerouteRecords, in fire order
-        self._events: List[Tuple[float, int, str, tuple]] = []
-        #: Queued events that are *work* (everything except the poll/hb
-        #: chain ticks).  The chains re-arm only while this is non-zero:
-        #: keying off ``self._events`` would let the two chains count each
-        #: other as pending work and sustain themselves forever once both
-        #: telemetry and heartbeats are attached.
-        self._n_real_events = 0
-        self._seq = 0
+        #: The deterministic event heap (see :class:`EventQueue`; the
+        #: ``_events``/``_seq``/``_n_real_events`` names below stay as
+        #: delegating properties because snapshots and the dispatch loop
+        #: address the heap list and counters directly).  ``n_real``
+        #: counts queued events that are *work* (everything except the
+        #: poll/hb chain ticks); the chains re-arm only while it is
+        #: non-zero — keying off the heap itself would let the two chains
+        #: count each other as pending work and sustain themselves forever
+        #: once both telemetry and heartbeats are attached.
+        self._queue = EventQueue()
         self._next_jid = 0       # monotonic: ids stay unique if jobs are pruned
         self._auto_flow = 0      # untagged reservations get ("flow", n) keys
         self._idle0 = dict(self.state.idle)     # initial ΥI_j, for re-timelining
@@ -1259,6 +1366,34 @@ class ClusterController:
              "deferred", "reconciled_rules"),
         )
         self.now = 0.0
+
+    # -- event-queue delegation ---------------------------------------------
+    # The dispatch loop, the poll/hb chains and the snapshot machinery all
+    # address the heap list and its counters by these historical names;
+    # the queue object itself is what pod-scope controllers reuse.
+    @property
+    def _events(self) -> List[Tuple[float, int, str, tuple]]:
+        return self._queue.items
+
+    @_events.setter
+    def _events(self, items: List[Tuple[float, int, str, tuple]]) -> None:
+        self._queue.items = items
+
+    @property
+    def _seq(self) -> int:
+        return self._queue.seq
+
+    @_seq.setter
+    def _seq(self, value: int) -> None:
+        self._queue.seq = value
+
+    @property
+    def _n_real_events(self) -> int:
+        return self._queue.n_real
+
+    @_n_real_events.setter
+    def _n_real_events(self, value: int) -> None:
+        self._queue.n_real = value
 
     @classmethod
     def from_instance(

@@ -82,6 +82,61 @@ class Journal:
 
 
 @dataclass
+class ShardedJournal:
+    """Per-shard WAL segments under one global sequence (DESIGN.md §12).
+
+    The hierarchical controller journals each entry-point call into the
+    *segment* of the shard it touches (a job bound for one pod lands in
+    that pod's segment; clock advances and cross-pod placements land in
+    the root segment), while ``lsn`` assignment stays global — so each
+    segment can be written/shipped independently like a real per-shard WAL
+    file, and :meth:`merged` restores the exact total order replay needs.
+    """
+
+    #: segment name -> append-ordered records (lsn-increasing within each).
+    segments: dict = field(default_factory=dict)
+    _next_lsn: int = 0
+
+    ROOT = "__root__"
+
+    @property
+    def lsn(self) -> int:
+        return self._next_lsn
+
+    def append(self, op: str, *args, shard: str = ROOT) -> JournalRecord:
+        rec = JournalRecord(lsn=self._next_lsn, op=op, args=args)
+        self._next_lsn += 1
+        self.segments.setdefault(shard, []).append(rec)
+        return rec
+
+    def segment(self, shard: str) -> List[JournalRecord]:
+        return self.segments.get(shard, [])
+
+    def merged(self) -> List[JournalRecord]:
+        """All records across segments in global ``lsn`` order — the replay
+        stream.  Each segment is already lsn-sorted, so this is a k-way
+        merge; sorting the concatenation is equivalent and simpler."""
+        out = [r for seg in self.segments.values() for r in seg]
+        out.sort(key=lambda r: r.lsn)
+        return out
+
+    def since(self, lsn: int) -> List[JournalRecord]:
+        return [r for r in self.merged() if r.lsn >= lsn]
+
+    def to_bytes(self) -> bytes:
+        return pickle.dumps((self.segments, self._next_lsn),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ShardedJournal":
+        segments, next_lsn = pickle.loads(data)
+        return cls(segments=segments, _next_lsn=next_lsn)
+
+    def __len__(self) -> int:
+        return self._next_lsn
+
+
+@dataclass
 class ControllerSnapshot:
     """A full-fidelity controller serialization at journal position ``lsn``.
 

@@ -111,6 +111,41 @@ class TimeSlotLedger:
         self._path_rows: Dict[Tuple[str, str], Tuple[int, ...]] = {}
         self._path_rows_version = fabric.version
 
+    @classmethod
+    def for_links(
+        cls,
+        fabric: Fabric,
+        link_names: Iterable[str],
+        slot_duration: float = 1.0,
+        horizon_slots: int = 256,
+    ) -> "TimeSlotLedger":
+        """A ledger *shard*: same calendar machinery, rows restricted to
+        ``link_names`` (a pod's internal links, or the boundary slice).
+
+        Row numbering is local to the shard (sorted subset order) — the
+        :class:`ShardedLedger` facade owns the global↔local translation.
+        Built via ``__new__`` like ``ClusterState.clone`` so the flat
+        constructor's full-fabric row map is never materialized."""
+        led = cls.__new__(cls)
+        led.fabric = fabric
+        led.slot_duration = float(slot_duration)
+        names = sorted(link_names)
+        led._row = {n: i for i, n in enumerate(names)}
+        led._names = names
+        led.capacity = np.array(
+            [fabric.link(n).capacity for n in names], dtype=np.float64
+        )
+        led._buf = np.zeros((len(names), horizon_slots), dtype=np.float64)
+        led._col0 = 0
+        led._res = led._buf
+        led.base_slot = 0
+        led.retired_slots = 0
+        led.retire_stride = max(64, horizon_slots)
+        led.batch_scan_cells = 0
+        led._path_rows = {}
+        led._path_rows_version = fabric.version
+        return led
+
     # -- plumbing -----------------------------------------------------------
     # ``batch_scan_cells`` counter cell: class default None so instances
     # built via ``__new__`` (ClusterState.clone) lazily create theirs on
@@ -800,3 +835,405 @@ class TimeSlotLedger:
             return 0.0
         n = int(booked[-1]) + 1
         return float(res[:, :n].sum() / (res.shape[0] * n))
+
+
+# ---------------------------------------------------------------------------
+# ShardedLedger — per-pod shards behind the flat ledger's surface
+# ---------------------------------------------------------------------------
+
+
+class ShardedLedger:
+    """Pod-partitioned reservation calendar: one :class:`TimeSlotLedger`
+    shard per link group (each pod's internal links + one boundary shard
+    for the core/aggregation slice), behind the flat ledger's query/plan/
+    commit surface with the flat ledger's *global* row numbering.
+
+    Byte-parity contract (DESIGN.md §12): every public method returns the
+    exact floats the flat ledger would — the reservation matrix is
+    conceptually infinite with zeros outside each live window, so a
+    per-shard gather with per-shard origins reads the same cell values a
+    single matrix would, and max/min reductions over a row partition equal
+    the unpartitioned reduction (IEEE max/min are order-invariant).  Plans
+    carry global rows throughout, so ``TransferPlan`` equality against a
+    flat-ledger plan is structural.
+
+    Each shard keeps its own §7 rolling origin; :meth:`maybe_retire` fans
+    the clock out, and identical strides keep the origins in lockstep.
+    :meth:`commit` distributes a plan's cells shard-by-shard — the
+    over-reservation check runs per shard, so a rejected commit may leave
+    earlier shards booked (callers never over-reserve planned transfers;
+    the flat ledger's joint check is atomic, this one is loud-but-partial).
+    """
+
+    def __init__(
+        self,
+        fabric: Fabric,
+        groups: Dict[str, Sequence[str]],
+        slot_duration: float = 1.0,
+        horizon_slots: int = 256,
+    ) -> None:
+        self.fabric = fabric
+        self.slot_duration = float(slot_duration)
+        names = sorted(fabric.links)
+        self._row: Dict[str, int] = {n: i for i, n in enumerate(names)}
+        self._names = names
+        self.capacity = np.array(
+            [fabric.link(n).capacity for n in names], dtype=np.float64
+        )
+        owner: Dict[str, str] = {}
+        for g, lns in groups.items():
+            for n in lns:
+                if n in owner:
+                    raise ValueError(
+                        f"link {n!r} in shards {owner[n]!r} and {g!r}"
+                    )
+                owner[n] = g
+        missing = set(names) - set(owner)
+        if missing:
+            raise ValueError(f"links not covered by any shard: {sorted(missing)[:4]}")
+        self.shard_names = tuple(sorted(groups))
+        self.shards: Dict[str, TimeSlotLedger] = {
+            g: TimeSlotLedger.for_links(
+                fabric, groups[g], slot_duration, horizon_slots
+            )
+            for g in self.shard_names
+        }
+        self._shard_list = [self.shards[g] for g in self.shard_names]
+        # Global row → (owning shard index, shard-local row).
+        self._shard_idx = np.empty(len(names), dtype=np.intp)
+        self._local_row = np.empty(len(names), dtype=np.intp)
+        for gi, g in enumerate(self.shard_names):
+            sh = self.shards[g]
+            for n in sh._names:
+                r = self._row[n]
+                self._shard_idx[r] = gi
+                self._local_row[r] = sh._row[n]
+        self._path_rows: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        self._path_rows_version = fabric.version
+
+    # -- plumbing (flat-surface mirrors) ------------------------------------
+    def rows(self, link_names: Sequence[str]) -> Tuple[int, ...]:
+        return tuple(self._row[n] for n in link_names)
+
+    def link_names(self, rows: Sequence[int]) -> Tuple[str, ...]:
+        return tuple(self._names[r] for r in rows)
+
+    def path_rows(self, src: str, dst: str) -> Tuple[int, ...]:
+        if self.fabric.version != self._path_rows_version:
+            self._path_rows.clear()
+            self._path_rows_version = self.fabric.version
+        hit = self._path_rows.get((src, dst))
+        if hit is None:
+            hit = self.rows(self.fabric.path(src, dst))
+            if len(self._path_rows) > (1 << 18):
+                self._path_rows.clear()
+            self._path_rows[(src, dst)] = hit
+        return hit
+
+    def slot_of(self, t: float) -> int:
+        return int(math.floor(t / self.slot_duration + _EPS))
+
+    @property
+    def base_slot(self) -> int:
+        """Rolling origin (identical across shards under lockstep strides;
+        reported as the minimum so a mixed state stays conservative)."""
+        return min(sh.base_slot for sh in self._shard_list)
+
+    @property
+    def retired_slots(self) -> int:
+        return min(sh.retired_slots for sh in self._shard_list)
+
+    @property
+    def reserved(self) -> np.ndarray:
+        """Materialized global ``[n_links, width]`` reservation window in
+        flat row order (column 0 at the facade's :attr:`base_slot`),
+        gathered from each shard's live window at its origin offset —
+        cells outside a shard's window are zero, exactly the flat
+        ledger's conceptually-infinite matrix.  Read-only and built per
+        call: it exists for external auditors (the replay oracle's
+        over-booking sweep, tests); planning paths never touch it."""
+        origin = self.base_slot
+        width = max(
+            sh.base_slot - origin + sh.reserved.shape[1]
+            for sh in self._shard_list
+        )
+        out = np.zeros((len(self._names), width), dtype=np.float64)
+        for sh in self._shard_list:
+            win = sh.reserved
+            off = sh.base_slot - origin
+            grows = np.fromiter(
+                (self._row[n] for n in sh._names), dtype=np.intp,
+                count=len(sh._names),
+            )
+            lrows = np.fromiter(
+                (sh._row[n] for n in sh._names), dtype=np.intp,
+                count=len(sh._names),
+            )
+            out[grows, off:off + win.shape[1]] = win[lrows]
+        return out
+
+    @property
+    def retire_stride(self) -> Optional[int]:
+        return self._shard_list[0].retire_stride
+
+    @retire_stride.setter
+    def retire_stride(self, stride: Optional[int]) -> None:
+        for sh in self._shard_list:
+            sh.retire_stride = stride
+
+    @property
+    def batch_scan_cells(self) -> int:
+        return sum(sh.batch_scan_cells for sh in self._shard_list)
+
+    @batch_scan_cells.setter
+    def batch_scan_cells(self, value: int) -> None:
+        for sh in self._shard_list:
+            sh.batch_scan_cells = 0
+        self._shard_list[0].batch_scan_cells = value
+
+    def _split(
+        self, rows: Sequence[int]
+    ) -> List[Tuple[TimeSlotLedger, List[int]]]:
+        """Group global rows by owning shard (insertion-ordered, so the
+        grouping is deterministic in the path's link order)."""
+        per: Dict[int, List[int]] = {}
+        sidx, lrow = self._shard_idx, self._local_row
+        for r in rows:
+            per.setdefault(int(sidx[r]), []).append(int(lrow[r]))
+        return [(self._shard_list[si], lr) for si, lr in per.items()]
+
+    # -- serialization (crash recovery) -------------------------------------
+    def dump_state(self) -> dict:
+        return {
+            "shards": {g: self.shards[g].dump_state() for g in self.shard_names}
+        }
+
+    def load_state(self, state: dict) -> None:
+        for g, st in state["shards"].items():
+            self.shards[g].load_state(st)
+
+    # -- rolling-horizon compaction -----------------------------------------
+    def retire(self, t: float) -> int:
+        return sum(sh.retire(t) for sh in self._shard_list)
+
+    def retire_to(self, cut: int) -> int:
+        return sum(sh.retire_to(cut) for sh in self._shard_list)
+
+    def maybe_retire(self, t: float) -> int:
+        return sum(sh.maybe_retire(t) for sh in self._shard_list)
+
+    # -- queries ------------------------------------------------------------
+    def residual_fraction(self, rows: Sequence[int], slot: int) -> float:
+        if not rows:
+            return 1.0
+        best = 1.0
+        for sh, lr in self._split(rows):
+            p = slot - sh.base_slot
+            if p < 0 or p >= sh.reserved.shape[1]:
+                continue  # free slice: contributes exactly 1.0
+            v = float(1.0 - sh.reserved[lr, p].max())
+            if v < best:
+                best = v
+        return best
+
+    def path_bandwidth(self, rows: Sequence[int], t: float) -> float:
+        if not rows:
+            return float("inf")
+        s = self.slot_of(t)
+        best = float("inf")
+        for sh, lr in self._split(rows):
+            caps = sh.capacity[lr]
+            p = s - sh.base_slot
+            if p < 0 or p >= sh.reserved.shape[1]:
+                m = float(caps.min())
+            else:
+                m = float(((1.0 - sh.reserved[lr, p]) * caps).min())
+            if m < best:
+                best = m
+        return best
+
+    def path_bandwidth_batch(
+        self, rows_list: Sequence[Sequence[int]], t: float
+    ) -> np.ndarray:
+        return np.array(
+            [self.path_bandwidth(r, t) for r in rows_list], dtype=np.float64
+        )
+
+    def min_path_bandwidth(
+        self, rows: Sequence[int], t0: float, t1: float
+    ) -> float:
+        if not rows:
+            return float("inf")
+        s0, s1 = self.slot_of(t0), self.slot_of(max(t0, t1 - _EPS))
+        n = s1 - s0 + 1
+        vals: Optional[np.ndarray] = None
+        for sh, lr in self._split(rows):
+            caps = sh.capacity[lr]
+            block = np.zeros((len(lr), n))
+            lo = max(s0 - sh.base_slot, 0)
+            hi = min(s1 - sh.base_slot + 1, sh.reserved.shape[1])
+            if lo < hi:
+                a0 = sh.base_slot + lo - s0
+                block[:, a0 : a0 + (hi - lo)] = sh.reserved[lr, lo:hi]
+            v = ((1.0 - block) * caps[:, None]).min(axis=0)
+            vals = v if vals is None else np.minimum(vals, v)
+        assert vals is not None
+        return float(vals.min())
+
+    # -- planning -----------------------------------------------------------
+    def plan_transfer(
+        self,
+        size: float,
+        rows: Sequence[int],
+        not_before: float = 0.0,
+        bandwidth_cap: Optional[float] = None,
+        max_slots: int = 1 << 16,
+    ) -> TransferPlan:
+        """The flat greedy plan over a cross-shard path: per-shard window
+        slices are stacked and max-reduced (order-invariant, so the path
+        residue per slot is bit-identical to the flat matrix gather), then
+        the tail arithmetic is :meth:`TimeSlotLedger.plan_transfer`'s own,
+        verbatim."""
+        if size <= 0 or not rows:
+            return TransferPlan(tuple(rows), not_before, not_before, ())
+        idx = list(rows)
+        cap = float(self.capacity[idx].min())
+        t0 = float(not_before)
+        s0 = self.slot_of(t0)
+        split = self._split(idx)
+        for sh, _ in split:
+            if s0 < sh.base_slot:
+                raise ValueError(
+                    f"plan_transfer: slot {s0} precedes retired origin "
+                    f"{sh.base_slot} (not_before={t0})"
+                )
+        window = 64
+        while window <= max_slots:
+            booked: Optional[np.ndarray] = None
+            for sh, lr in split:
+                sh._ensure(s0 + window - 1)
+                p0 = s0 - sh.base_slot
+                m = sh.reserved[lr, p0 : p0 + window].max(axis=0)
+                booked = m if booked is None else np.maximum(booked, m)
+            resid_frac = 1.0 - booked
+            bw = resid_frac * cap
+            if bandwidth_cap is not None:
+                bw = np.minimum(bw, bandwidth_cap)
+            secs = np.full(window, self.slot_duration)
+            secs[0] = (s0 + 1) * self.slot_duration - t0
+            deliverable = bw * secs
+            cum = np.cumsum(deliverable)
+            hit = int(np.searchsorted(cum, size - _EPS))
+            if hit >= window:
+                window *= 4
+                continue
+            active = bw > _EPS
+            sel = np.nonzero(active[: hit + 1])[0]
+            first = int(sel[0])
+            start = max(t0, (s0 + first) * self.slot_duration)
+            before = float(cum[hit - 1]) if hit > 0 else 0.0
+            t_in = max(t0, (s0 + hit) * self.slot_duration)
+            end = t_in + (size - before) / float(bw[hit])
+            if bandwidth_cap is None:
+                fr = resid_frac
+            else:
+                fr = bw / cap
+            fracs = tuple((s0 + int(i), float(fr[i])) for i in sel)
+            return TransferPlan(tuple(rows), start, end, fracs)
+        raise RuntimeError("transfer does not fit within max_slots horizon")
+
+    def plan_transfer_batch(
+        self,
+        size: float,
+        rows_list: Sequence[Sequence[int]],
+        not_before: float = 0.0,
+        bandwidth_cap: Optional[float] = None,
+        max_slots: int = 1 << 16,
+    ) -> List[TransferPlan]:
+        """Per-candidate :meth:`plan_transfer` loop.  The flat batch path
+        documents element-wise bit-identity with ``plan_transfer``, so a
+        loop over the facade matches it exactly; the fused scan stays a
+        flat-matrix (and per-shard wavefront) optimization."""
+        return [
+            self.plan_transfer(size, rows, not_before, bandwidth_cap, max_slots)
+            for rows in rows_list
+        ]
+
+    # -- mutations ----------------------------------------------------------
+    def commit(self, plan: TransferPlan) -> None:
+        if not plan.slot_fracs:
+            return
+        for sh, lr in self._split(plan.links):
+            sh.commit(
+                TransferPlan(tuple(lr), plan.start, plan.end, plan.slot_fracs)
+            )
+
+    def commit_batch(self, plans: Sequence[TransferPlan]) -> None:
+        for plan in plans:
+            self.commit(plan)
+
+    def occupy(
+        self, rows: Sequence[int], start: float, end: float, fraction: float
+    ) -> None:
+        for sh, lr in self._split(rows):
+            sh.occupy(lr, start, end, fraction)
+
+    def release(self, plan: TransferPlan) -> None:
+        if not plan.slot_fracs:
+            return
+        for sh, lr in self._split(plan.links):
+            sh.release(
+                TransferPlan(tuple(lr), plan.start, plan.end, plan.slot_fracs)
+            )
+
+    def release_after(self, plan: TransferPlan, t: float) -> TransferPlan:
+        if not plan.slot_fracs or t >= plan.end:
+            return plan
+        if t <= plan.start:
+            cut = plan.slot_fracs[0][0]
+        else:
+            cut = self.slot_of(t)
+        keep = tuple((s, f) for s, f in plan.slot_fracs if s < cut)
+        tail = tuple((s, f) for s, f in plan.slot_fracs if s >= cut)
+        if tail:
+            # Per-shard tail wipe: ``release`` skips already-retired slots,
+            # exactly the flat ``wipe = max(cut, base_slot)`` clamp.
+            for sh, lr in self._split(plan.links):
+                sh.release(TransferPlan(tuple(lr), plan.start, plan.start, tail))
+        if not keep:
+            return TransferPlan(plan.links, plan.start, plan.start, ())
+        new_end = min(plan.end, cut * self.slot_duration)
+        return TransferPlan(plan.links, plan.start, new_end, keep)
+
+    def plan_bytes(self, plan: TransferPlan, until: Optional[float] = None) -> float:
+        if not plan.slot_fracs:
+            return 0.0
+        cap = float(self.capacity[list(plan.links)].min())
+        t1 = plan.end if until is None else min(float(until), plan.end)
+        slots = np.array([s for s, _ in plan.slot_fracs])
+        fracs = np.array([f for _, f in plan.slot_fracs])
+        lo = np.maximum(plan.start, slots * self.slot_duration)
+        hi = np.minimum(t1, (slots + 1) * self.slot_duration)
+        return float((fracs * cap * np.clip(hi - lo, 0.0, None)).sum())
+
+    # -- convenience --------------------------------------------------------
+    def transfer_time(
+        self, size: float, rows: Sequence[int], not_before: float = 0.0
+    ) -> float:
+        plan = self.plan_transfer(size, rows, not_before)
+        return plan.end - plan.start if plan.slot_fracs else 0.0
+
+    def utilization(self) -> float:
+        """Mean reserved fraction over the union of the shards' live booked
+        windows (same allocation-invariance argument as the flat ledger)."""
+        tot = 0.0
+        cells = 0
+        for sh in self._shard_list:
+            res = sh.reserved
+            booked = np.flatnonzero(res.any(axis=0))
+            if booked.size == 0:
+                continue
+            n = int(booked[-1]) + 1
+            tot += float(res[:, :n].sum())
+            cells += res.shape[0] * n
+        return tot / cells if cells else 0.0

@@ -1049,11 +1049,16 @@ class WavefrontPlanner:
             return hit
         try:
             pc = self.fabric.parent_chain(node)
-        except ValueError:
+            nodes = (node,) + tuple(p for p, _ in pc)
+            # KeyError: the chain leaves the ledger's link subset — a
+            # per-pod frontier planning over its shard (core.hierarchy)
+            # whose root chain crosses the pod boundary.  Fall back to the
+            # Dijkstra/path-cache pair path, which only translates links
+            # the (pod-internal) path actually uses.
+            rows = self.ledger.rows([l for _, l in pc])
+        except (ValueError, KeyError):
             res = None
         else:
-            nodes = (node,) + tuple(p for p, _ in pc)
-            rows = self.ledger.rows([l for _, l in pc])
             caps = self.ledger.capacity
             pcaps = [float("inf")]  # pcaps[d] = bottleneck of first d links
             m = float("inf")

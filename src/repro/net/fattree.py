@@ -16,8 +16,16 @@ Both are built from raw ``add_link`` edges (they are not trees), so
 ``Fabric.path`` transparently uses Dijkstra and the k-shortest engine sees
 every parallel path.  Naming is deterministic; roles are tagged so
 ``storage_hosts`` returns exactly the compute endpoints.
+
+:func:`pod_partition` derives the pod structure back *out* of a built
+fabric — which links are pod-internal, which cross the core — so the
+hierarchical controller (``core.hierarchy``) can shard its ledger and
+host ownership along the topology instead of guessing.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 from ..core.topology import Fabric
 
@@ -53,6 +61,94 @@ def fat_tree_fabric(k: int, link_mbps: float = 100.0) -> Fabric:
                 f.add_node(host, "host")
                 f.add_link(f"eh/p{p}e{e}h{i}", host, edge, link_mbps)
     return f
+
+
+@dataclass(frozen=True)
+class PodPartition:
+    """Topology-derived pod structure of a fabric.
+
+    * ``pods`` — pod ids, sorted (the ``podN`` prefix of the node names);
+    * ``pod_links[p]`` — link names with *both* endpoints inside pod ``p``
+      (edge–host and edge–agg tiers of a fat-tree, host NICs of a DCN pod);
+    * ``boundary_links`` — every remaining link: at least one endpoint is a
+      core/spine node or the endpoints live in different pods.  Exactly the
+      links a cross-pod path must traverse — the root controller's slice;
+    * ``pod_hosts[p]`` / ``host_pod`` — host ownership both ways.
+
+    The shard contract (DESIGN.md §12): ``pod_links`` are pairwise disjoint,
+    disjoint from ``boundary_links``, and their union is ``fabric.links`` —
+    so a per-pod ledger shard plus the boundary shard partition the flat
+    ledger's rows with nothing shared and nothing dropped, and any path
+    between same-pod hosts stays inside that pod's shard.
+    """
+
+    pods: Tuple[str, ...]
+    pod_links: Dict[str, Tuple[str, ...]]
+    boundary_links: Tuple[str, ...]
+    pod_hosts: Dict[str, Tuple[str, ...]]
+    host_pod: Dict[str, str]
+
+    def pod_of(self, host: str) -> Optional[str]:
+        return self.host_pod.get(host)
+
+    def groups(self) -> Dict[str, Tuple[str, ...]]:
+        """Shard name → link names, boundary shard included — the exact
+        ``groups`` argument ``timeslot.ShardedLedger`` takes."""
+        out = dict(self.pod_links)
+        out["__boundary__"] = self.boundary_links
+        return out
+
+
+def _node_pod(name: str) -> Optional[str]:
+    """Pod id of a node by naming convention: ``pod<p>/...`` → ``pod<p>``.
+
+    Every pod-structured builder in this repo (``fat_tree_fabric`` here,
+    ``tpu_dcn_fabric`` in ``core.topology``) names pod members with a
+    ``podN/`` prefix; cores/spines (``core0_1``, ``dcn-core``) carry none.
+    """
+    if name.startswith("pod"):
+        head, sep, _ = name.partition("/")
+        if sep:
+            return head
+    return None
+
+
+def pod_partition(fabric: Fabric) -> PodPartition:
+    """Classify a fabric's links and hosts into pods by topology.
+
+    A link is pod-internal iff both endpoints resolve to the same pod;
+    everything else (core uplinks, anything touching an unpodded switch)
+    is a boundary link.  Raises ``ValueError`` when the fabric has no pods
+    at all — a flat fabric has nothing to shard.
+    """
+    pod_links: Dict[str, list] = {}
+    boundary: list = []
+    for name in sorted(fabric.links):
+        link = fabric.link(name)
+        pa, pb = _node_pod(link.a), _node_pod(link.b)
+        if pa is not None and pa == pb:
+            pod_links.setdefault(pa, []).append(name)
+        else:
+            boundary.append(name)
+    if not pod_links:
+        raise ValueError("fabric has no pod-structured links to partition")
+    pod_hosts: Dict[str, list] = {p: [] for p in pod_links}
+    host_pod: Dict[str, str] = {}
+    for name in sorted(fabric.nodes):
+        if fabric.role(name) != "host":
+            continue
+        p = _node_pod(name)
+        if p is not None and p in pod_hosts:
+            pod_hosts[p].append(name)
+            host_pod[name] = p
+    pods = tuple(sorted(pod_links))
+    return PodPartition(
+        pods=pods,
+        pod_links={p: tuple(v) for p, v in pod_links.items()},
+        boundary_links=tuple(boundary),
+        pod_hosts={p: tuple(v) for p, v in pod_hosts.items()},
+        host_pod=host_pod,
+    )
 
 
 def oversubscribed_leaf_spine(

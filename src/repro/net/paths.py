@@ -34,28 +34,38 @@ from ..core.topology import Fabric, UnroutableError  # noqa: F401  (re-export)
 Path = Tuple[str, ...]
 
 
+#: link name -> additive link cost; ``None`` means hop count (cost 1/link),
+#: which keeps the historical integer arithmetic bit-for-bit.
+LinkCost = Optional[callable]
+
+
 def _dijkstra(
     fabric: Fabric,
     src: str,
     dst: str,
     banned_links: FrozenSet[str],
     banned_nodes: FrozenSet[str],
+    link_cost: LinkCost = None,
 ) -> Optional[Path]:
-    """Hop-count Dijkstra that can exclude links/nodes (Yen spur searches).
+    """Min-cost Dijkstra that can exclude links/nodes (Yen spur searches).
 
-    Mirrors ``Fabric.path``'s relaxation order exactly so that with no
-    exclusions the two agree link-for-link.
+    With ``link_cost=None`` (hop metric) this mirrors ``Fabric.path``'s
+    relaxation order exactly so that with no exclusions the two agree
+    link-for-link; a cost callable generalizes the metric while keeping
+    the deterministic tie-breaks (sorted link relaxation, lexicographic
+    node order in the heap).
     """
     if src == dst:
         return ()
-    dist: Dict[str, int] = {src: 0}
+    inf = float("inf") if link_cost is not None else (1 << 30)
+    dist: Dict[str, float] = {src: 0}
     prev: Dict[str, Tuple[str, str]] = {}
-    pq: List[Tuple[int, str]] = [(0, src)]
+    pq: List[Tuple[float, str]] = [(0, src)]
     while pq:
         d, u = heapq.heappop(pq)
         if u == dst:
             break
-        if d > dist.get(u, 1 << 30):
+        if d > dist.get(u, inf):
             continue
         for lname in sorted(fabric.incident_links(u)):
             if lname in banned_links:
@@ -63,8 +73,8 @@ def _dijkstra(
             v = fabric.link(lname).other(u)
             if v in banned_nodes:
                 continue
-            nd = d + 1
-            if nd < dist.get(v, 1 << 30):
+            nd = d + (1 if link_cost is None else link_cost(lname))
+            if nd < dist.get(v, inf):
                 dist[v] = nd
                 prev[v] = (u, lname)
                 heapq.heappush(pq, (nd, v))
@@ -86,27 +96,36 @@ def k_shortest_paths(
     k: int,
     banned_links: Iterable[str] = (),
     banned_nodes: Iterable[str] = (),
+    link_cost: LinkCost = None,
 ) -> Tuple[Path, ...]:
-    """Up to ``k`` loop-free min-hop paths src→dst (Yen's algorithm).
+    """Up to ``k`` loop-free min-cost paths src→dst (Yen's algorithm).
 
-    Fewer than ``k`` paths are returned when the graph holds fewer;
+    The metric is hop count unless ``link_cost`` gives a per-link additive
+    cost.  Fewer than ``k`` paths are returned when the graph holds fewer;
     :class:`UnroutableError` is raised when there is none at all.  With no
-    exclusions the first path is ``Fabric.path(src, dst)`` verbatim.
+    exclusions and the hop metric the first path is
+    ``Fabric.path(src, dst)`` verbatim.
     """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     bl, bn = frozenset(banned_links), frozenset(banned_nodes)
     if src == dst:
         return ((),)
-    if not bl and not bn:
+    if not bl and not bn and link_cost is None:
         first: Optional[Path] = fabric.path(src, dst)
     else:
-        first = _dijkstra(fabric, src, dst, bl, bn)
+        first = _dijkstra(fabric, src, dst, bl, bn, link_cost)
     if first is None:
         raise UnroutableError(f"no surviving path {src!r} -> {dst!r}")
+
+    def path_cost(p: Path) -> float:
+        # Hop metric: cost == len(p), so the historical (hops, path) pool
+        # key survives as the degenerate case of (cost, hops, path).
+        return len(p) if link_cost is None else sum(link_cost(l) for l in p)
+
     found: List[Path] = [first]
     seen = {first}
-    pool: List[Tuple[int, Path]] = []  # (hops, path) candidate heap
+    pool: List[Tuple[float, int, Path]] = []  # (cost, hops, path) heap
     while len(found) < k:
         prev_path = found[-1]
         prev_nodes = fabric.path_nodes(src, prev_path)
@@ -120,16 +139,17 @@ def k_shortest_paths(
                 if len(p) > j and p[:j] == root:
                     spur_bl.add(p[j])
             spur_bn = bn | set(prev_nodes[:j])
-            spur = _dijkstra(fabric, spur_node, dst, frozenset(spur_bl), spur_bn)
+            spur = _dijkstra(fabric, spur_node, dst, frozenset(spur_bl),
+                             spur_bn, link_cost)
             if spur is None:
                 continue
             cand = root + spur
             if cand not in seen:
                 seen.add(cand)
-                heapq.heappush(pool, (len(cand), cand))
+                heapq.heappush(pool, (path_cost(cand), len(cand), cand))
         if not pool:
             break
-        _, best = heapq.heappop(pool)
+        _, _, best = heapq.heappop(pool)
         found.append(best)
     return tuple(found)
 
@@ -140,11 +160,37 @@ class PathEngine:
     Caches key on ``(src, dst, k)`` and are dropped wholesale whenever the
     fabric's ``version`` moves (link added) — the engine can never serve a
     pre-mutation path.
+
+    ``cost`` selects the path metric:
+
+    * ``"hop"`` (default) — hop count; byte-identical to the historical
+      engine, and ``k=1`` returns ``Fabric.path`` verbatim.
+    * ``"ospf"`` — OSPF-style inverse capacity (``ref_bw / capacity``,
+      ``ref_bw`` = the fabric's fattest link), static per fabric version.
+      On uniform-capacity fabrics every link costs 1.0 and the metric
+      degenerates to hop count, tie-breaks included.
+    * ``"residual"`` — inverse *residual* bandwidth against a live ledger
+      at query time ``self.at`` (``ref_bw / max(residual_bw, eps)``):
+      congested links price up and enumeration steers around bookings.
+      Requires ``ledger=``; candidate sets are recomputed per call (the
+      metric moves with the ledger) so this mode trades the cache for
+      freshness — use it for explicit what-if queries, not hot paths.
     """
 
-    def __init__(self, fabric: Fabric, k: int = 4) -> None:
+    COSTS = ("hop", "ospf", "residual")
+
+    def __init__(self, fabric: Fabric, k: int = 4, cost: str = "hop",
+                 ledger: Optional[TimeSlotLedger] = None) -> None:
+        if cost not in self.COSTS:
+            raise ValueError(f"cost must be one of {self.COSTS}, got {cost!r}")
+        if cost == "residual" and ledger is None:
+            raise ValueError('cost="residual" needs a ledger to read from')
         self.fabric = fabric
         self.k = int(k)
+        self.cost = cost
+        self.ledger = ledger
+        #: Query time for the ``"residual"`` metric (sim seconds).
+        self.at = 0.0
         self._cache: Dict[Tuple[str, str, int], Tuple[Path, ...]] = {}
         # Detour results under a specific dead-link set; keyed on the set
         # so liveness changes miss naturally (and the fast path below never
@@ -201,14 +247,39 @@ class PathEngine:
                 vec[i] = True
         return vec
 
+    def _link_cost(self) -> LinkCost:
+        """The engine's metric as a per-link cost callable (None = hop)."""
+        if self.cost == "hop":
+            return None
+        fab = self.fabric
+        caps = {n: fab.link(n).capacity for n in fab.links}
+        ref = max(caps.values())
+        if self.cost == "ospf":
+            return lambda l: ref / caps[l]
+        led, at = self.ledger, self.at
+        eps = 1e-9
+
+        def residual(l: str) -> float:
+            bw = led.path_bandwidth(led.rows((l,)), at)
+            return ref / (bw if bw > eps else eps)
+
+        return residual
+
     def paths(self, src: str, dst: str, k: Optional[int] = None) -> Tuple[Path, ...]:
-        """The cached candidate set (all links assumed alive)."""
+        """The cached candidate set (all links assumed alive).
+
+        The ``"residual"`` metric bypasses the cache: its costs move with
+        the ledger, so every call re-enumerates at the current ``at``."""
         kk = self.k if k is None else int(k)
         self._fresh()
+        if self.cost == "residual":
+            return k_shortest_paths(self.fabric, src, dst, kk,
+                                    link_cost=self._link_cost())
         key = (src, dst, kk)
         hit = self._cache.get(key)
         if hit is None:
-            hit = k_shortest_paths(self.fabric, src, dst, kk)
+            hit = k_shortest_paths(self.fabric, src, dst, kk,
+                                   link_cost=self._link_cost())
             self._cache[key] = hit
         return hit
 
@@ -284,7 +355,8 @@ class PathEngine:
         if hit is None:
             try:
                 hit = k_shortest_paths(
-                    self.fabric, src, dst, kk, banned_links=dead
+                    self.fabric, src, dst, kk, banned_links=dead,
+                    link_cost=self._link_cost(),
                 )
             except UnroutableError:
                 hit = ()

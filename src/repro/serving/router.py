@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.controller import BassPolicy, ClusterController
+from ..core.qos import TenantBook, TenantSpec
 from ..core.tasks import Assignment, Task
 from ..core.topology import Fabric, tpu_dcn_fabric
 from .engine import Request
@@ -45,6 +46,9 @@ class RouteDecision:
     #: nothing was committed, ``ready_at`` is +inf, and ``replica`` is only
     #: a parking hint (the coldest configured replica) — shed or requeue.
     degraded: bool = False
+    #: True when tenant admission control turned the request away before
+    #: any scheduling work: nothing committed, ``replica`` is empty.
+    rejected: bool = False
 
 
 class BassRouter:
@@ -58,6 +62,9 @@ class BassRouter:
         nic_bytes_per_s: float = 25e9,
         max_retries: int = 3,
         retry_backoff_s: float = 0.05,
+        controller=None,
+        tenants: Sequence["TenantSpec"] = (),
+        fairness_slack_s: float = 1.0,
     ):
         #: Transient all-replicas-dead windows (mid-failover) are retried
         #: with exponential sim-time backoff before degrading — a router
@@ -66,28 +73,53 @@ class BassRouter:
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.replicas = list(replicas)
-        if fabric is None:
-            # star fabric over the replica names (25 GB/s NICs)
-            fabric = Fabric()
-            for i, r in enumerate(self.replicas):
-                fabric.add_uplink(f"nic{i}", r, "agg", nic_bytes_per_s)
-        self.fabric = fabric
-        # The long-lived controller owns the ledger: every routed request's
-        # context migration is a committed TS reservation that later
-        # requests (and other traffic on a shared fabric) must respect.
-        self.controller = ClusterController(
-            self.fabric,
-            self.replicas,
-            BassPolicy(),
-            slot_duration=slot_duration,
-            horizon_slots=2048,
-        )
+        if controller is not None:
+            # Injected backend — typically a ``core.hierarchy``
+            # HierarchicalController so per-pod replica groups ride the
+            # pod-local fast path; any object with the controller surface
+            # (state.set_idle, submit/run_until, jobs, dataplane, obs)
+            # works.  The caller owns its configuration.
+            missing = [r for r in self.replicas
+                       if r not in controller.state.idle]
+            if missing:
+                raise ValueError(
+                    f"injected controller does not own replicas: {missing!r}"
+                )
+            self.controller = controller
+            self.fabric = controller.fabric
+        else:
+            if fabric is None:
+                # star fabric over the replica names (25 GB/s NICs)
+                fabric = Fabric()
+                for i, r in enumerate(self.replicas):
+                    fabric.add_uplink(f"nic{i}", r, "agg", nic_bytes_per_s)
+            self.fabric = fabric
+            # The long-lived controller owns the ledger: every routed
+            # request's context migration is a committed TS reservation
+            # that later requests (and other traffic on a shared fabric)
+            # must respect.
+            self.controller = ClusterController(
+                self.fabric,
+                self.replicas,
+                BassPolicy(),
+                slot_duration=slot_duration,
+                horizon_slots=2048,
+            )
         self.ledger = self.controller.state.ledger
+        # Per-tenant QoS (core.qos): token-bucket admission + WFQ weighted
+        # fairness.  Tenants beyond ``fairness_slack_s`` of weighted
+        # service past the fairness frontier lose the migration fast path
+        # (pinned data-local, no new boundary reservations) until the
+        # frontier catches up.
+        self.tenants = TenantBook(tenants) if tenants else None
+        self.fairness_slack_s = fairness_slack_s
         # Routing outcomes in the controller's obs registry, so degraded/
         # load-shed decisions show up in Registry.snapshot() alongside the
         # scheduler counters (bench_recovery asserts shed counts here).
         self.stats = self.controller.obs.group(
-            "router", ("routed", "migrated", "degraded", "retries")
+            "router",
+            ("routed", "migrated", "degraded", "retries", "rejected",
+             "pinned"),
         )
         self.decode_s_per_token = decode_s_per_token
         self.bytes_per_ctx_token = bytes_per_ctx_token
@@ -111,7 +143,38 @@ class BassRouter:
     def _alive(self, replica: str) -> bool:
         return self.controller.dataplane.host_alive(replica)
 
-    def route(self, req: Request, now: float = 0.0) -> RouteDecision:
+    def _tenant_stats(self, tenant: str):
+        return self.controller.obs.group(
+            f"tenant.{tenant}",
+            ("admitted", "rejected", "pinned", "migrated"),
+        )
+
+    def route(self, req: Request, now: float = 0.0,
+              tenant: Optional[str] = None) -> RouteDecision:
+        work_s = req.max_new * self.decode_s_per_token
+        tg = None
+        if tenant is not None:
+            if self.tenants is None:
+                raise ValueError(
+                    f"request tagged tenant={tenant!r} but the router was "
+                    "built without tenants"
+                )
+            tg = self._tenant_stats(tenant)
+            if not self.tenants.admit(tenant, now):
+                # Hard admission control: over-rate tenants are turned
+                # away before any scheduling work or reservation happens.
+                tg["rejected"] += 1
+                self.stats["rejected"] += 1
+                return RouteDecision(
+                    rid=req.rid,
+                    replica="",
+                    migrated_from=None,
+                    ready_at=float("inf"),
+                    slots=(),
+                    degraded=True,
+                    rejected=True,
+                )
+            tg["admitted"] += 1
         at = max(now, self.controller.now)
         attempt = 0
         while not any(self._alive(r) for r in self.replicas):
@@ -137,12 +200,39 @@ class BassRouter:
             # already on the controller heap) get a chance to fire.
             at += self.retry_backoff_s * (2 ** (attempt - 1))
             self.controller.run_until(at)
-        work_s = req.max_new * self.decode_s_per_token
         holders = [
             r
             for r in self.prefix_home.get(req.prefix_hash, [])
             if r in self.replicas and self._alive(r)
         ]
+        if (tenant is not None
+                and self.tenants.lag(tenant) > self.fairness_slack_s + 1e-9):
+            # Weighted fairness: this tenant is past its fair share, so it
+            # loses the migration fast path — served data-local (coldest
+            # holder, or coldest replica on a cold prefix) with no new
+            # boundary reservation, leaving the fabric to tenants the
+            # fairness frontier still owes service.
+            node = (
+                min(holders, key=lambda r: (self.backlog.get(r, 0.0), r))
+                if holders
+                else self._coldest()
+            )
+            ready = at + self.backlog.get(node, 0.0)
+            self.backlog[node] = self.backlog.get(node, 0.0) + work_s
+            home = self.prefix_home.setdefault(req.prefix_hash, [])
+            if node not in home:
+                home.append(node)
+            self.tenants.charge(tenant, work_s)
+            tg["pinned"] += 1
+            self.stats["pinned"] += 1
+            self.stats["routed"] += 1
+            return RouteDecision(
+                rid=req.rid,
+                replica=node,
+                migrated_from=None,
+                ready_at=ready,
+                slots=(),
+            )
         # Cold prefix: no usable holders — route to the coldest replica
         # (Case 2-style single-holder task; the data is born there).
         task = Task(
@@ -179,6 +269,10 @@ class BassRouter:
         self.stats["routed"] += 1
         if a.source is not None:
             self.stats["migrated"] += 1
+        if tenant is not None:
+            self.tenants.charge(tenant, work_s)
+            if a.source is not None:
+                tg["migrated"] += 1
         return RouteDecision(
             rid=req.rid,
             replica=a.node,

@@ -1,0 +1,455 @@
+"""Hierarchical controller (core.hierarchy): pod partition, sharded
+ledger float-exactness, flat-vs-sharded byte parity, pod-affine mode,
+rebalancing, and per-shard WAL recovery (DESIGN.md §12)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.controller import ClusterController, ClusterState
+from repro.core.hierarchy import HierarchicalController, HierarchicalState
+from repro.core.simulator import replay_online
+from repro.core.tasks import Task
+from repro.core.timeslot import ShardedLedger, TimeSlotLedger
+from repro.core.topology import storage_hosts, tpu_dcn_fabric
+from repro.net.fattree import fat_tree_fabric, pod_partition
+
+
+def _tasks(hosts, n, seed, tid0=0, in_pod=None):
+    rng = random.Random(seed)
+    pool = [h for h in hosts if in_pod is None or h.startswith(in_pod + "/")]
+    return [
+        Task(
+            tid0 + i,
+            size=rng.uniform(40, 400),
+            compute=rng.uniform(1, 20),
+            replicas=tuple(rng.sample(pool, min(3, len(pool)))),
+        )
+        for i in range(n)
+    ]
+
+
+def _stream(hosts, seed, n_jobs=6, spacing=3.0, in_pod=None):
+    rng = random.Random(seed)
+    return [
+        (_tasks(hosts, rng.randint(1, 10), seed * 100 + i, tid0=i * 100,
+                in_pod=in_pod), i * spacing)
+        for i in range(n_jobs)
+    ]
+
+
+def _assert_same_schedule(sa, sb):
+    assert len(sa.assignments) == len(sb.assignments)
+    for a, b in zip(sa.assignments, sb.assignments):
+        assert (a.tid, a.node, a.source, a.start, a.finish, a.bw_needed) == (
+            b.tid, b.node, b.source, b.start, b.finish, b.bw_needed
+        )
+        ta, tb = a.transfer, b.transfer
+        assert (ta is None) == (tb is None)
+        if ta is not None:
+            assert ta.links == tb.links
+            assert ta.start == tb.start and ta.end == tb.end
+            assert ta.slot_fracs == tb.slot_fracs
+
+
+# -- pod partition ----------------------------------------------------------
+
+
+def test_pod_partition_fat_tree_shard_contract():
+    fab = fat_tree_fabric(4)
+    part = pod_partition(fab)
+    assert part.pods == ("pod0", "pod1", "pod2", "pod3")
+    all_links = set(fab.links)
+    seen = set()
+    for p, links in part.pod_links.items():
+        assert not (seen & set(links))  # pairwise disjoint
+        seen |= set(links)
+    assert not (seen & set(part.boundary_links))
+    assert seen | set(part.boundary_links) == all_links  # covering
+    # agg->core uplinks are exactly the boundary of a fat-tree
+    assert all(l.startswith("ac/") for l in part.boundary_links)
+    for p in part.pods:
+        assert part.pod_hosts[p]
+        for h in part.pod_hosts[p]:
+            assert part.pod_of(h) == p
+    groups = part.groups()
+    assert set(groups) == set(part.pods) | {"__boundary__"}
+
+
+def test_pod_partition_tpu_dcn():
+    fab = tpu_dcn_fabric(n_pods=3, hosts_per_pod=4)
+    part = pod_partition(fab)
+    assert len(part.pods) == 3
+    assert sum(len(v) for v in part.pod_hosts.values()) == 12
+
+
+def test_pod_partition_rejects_flat_fabric():
+    from repro.core.topology import two_tier_fabric
+
+    with pytest.raises(ValueError):
+        pod_partition(two_tier_fabric(2, 4))
+
+
+# -- sharded ledger float-exactness ----------------------------------------
+
+
+def test_sharded_ledger_matches_flat_under_random_traffic():
+    fab = fat_tree_fabric(4)
+    part = pod_partition(fab)
+    hosts = storage_hosts(fab)
+    flat = TimeSlotLedger(fab, slot_duration=1.0, horizon_slots=64)
+    shard = ShardedLedger(fab, part.groups(), slot_duration=1.0,
+                          horizon_slots=64)
+    rng = random.Random(3)
+    t = 0.0
+    for i in range(120):
+        src, dst = rng.sample(hosts, 2)
+        rows_f = flat.path_rows(src, dst)
+        rows_s = shard.path_rows(src, dst)
+        assert rows_f == rows_s  # same global row numbering
+        size = rng.uniform(10, 500)
+        nb = t + rng.uniform(0.0, 8.0)
+        pf = flat.plan_transfer(size, rows_f, not_before=nb)
+        ps = shard.plan_transfer(size, rows_s, not_before=nb)
+        assert pf.links == ps.links
+        assert pf.start == ps.start and pf.end == ps.end
+        assert pf.slot_fracs == ps.slot_fracs
+        if rng.random() < 0.7:
+            flat.commit(pf)
+            shard.commit(ps)
+            if rng.random() < 0.2:
+                cut = pf.start + rng.random() * max(pf.end - pf.start, 1e-6)
+                flat.release_after(pf, cut)
+                shard.release_after(ps, cut)
+        assert flat.path_bandwidth(rows_f, t) == shard.path_bandwidth(rows_s, t)
+        if rng.random() < 0.3:
+            t += rng.uniform(0.0, 3.0)
+            flat.maybe_retire(t)
+            shard.maybe_retire(t)
+    # final sweep: every single link row reads identically at several times
+    all_rows = [(flat.rows([l]), shard.rows([l])) for l in sorted(fab.links)]
+    for probe in (t, t + 4.0, t + 16.0):
+        for rf, rs in all_rows:
+            assert rf == rs
+            assert flat.path_bandwidth(rf, probe) \
+                == shard.path_bandwidth(rs, probe)
+
+
+def test_sharded_ledger_batch_and_min_path():
+    fab = tpu_dcn_fabric(n_pods=3, hosts_per_pod=3)
+    part = pod_partition(fab)
+    hosts = storage_hosts(fab)
+    flat = TimeSlotLedger(fab, 1.0, 64)
+    shard = ShardedLedger(fab, part.groups(), 1.0, 64)
+    rng = random.Random(5)
+    rows_list = []
+    for _ in range(12):
+        src, dst = rng.sample(hosts, 2)
+        rows = flat.path_rows(src, dst)
+        rows_list.append(rows)
+        p = flat.plan_transfer(rng.uniform(20, 200), rows, not_before=0.0)
+        flat.commit(p)
+        # facade rows == flat rows, so the same plan commits to both
+        shard.commit(p)
+    got = shard.path_bandwidth_batch(rows_list, 2.0)
+    want = flat.path_bandwidth_batch(rows_list, 2.0)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    for rows in rows_list:
+        assert np.array_equal(
+            flat.min_path_bandwidth(rows, 0.0, 30.0),
+            shard.min_path_bandwidth(rows, 0.0, 30.0),
+        )
+
+
+def test_sharded_ledger_reserved_materializes_flat_matrix():
+    """The facade's read-only ``reserved`` (what the replay oracle's
+    over-booking sweep reads) equals the flat matrix cell-for-cell over
+    the shared window, zero-padded beyond each shard's live width."""
+    fab = tpu_dcn_fabric(n_pods=3, hosts_per_pod=3)
+    part = pod_partition(fab)
+    hosts = storage_hosts(fab)
+    flat = TimeSlotLedger(fab, 1.0, 64)
+    shard = ShardedLedger(fab, part.groups(), 1.0, 64)
+    rng = random.Random(17)
+    for _ in range(20):
+        src, dst = rng.sample(hosts, 2)
+        p = flat.plan_transfer(rng.uniform(20, 200), flat.path_rows(src, dst),
+                               not_before=0.0)
+        flat.commit(p)
+        shard.commit(p)
+    got, want = shard.reserved, flat.reserved
+    assert shard.base_slot == flat.base_slot
+    w = min(got.shape[1], want.shape[1])
+    assert np.array_equal(got[:, :w], want[:, :w])
+    assert not got[:, w:].any() and not want[:, w:].any()
+
+
+# -- exact-mode byte parity -------------------------------------------------
+
+
+@pytest.mark.parametrize("fab_fn", [
+    lambda: fat_tree_fabric(4),
+    lambda: tpu_dcn_fabric(n_pods=4, hosts_per_pod=8),
+])
+def test_exact_mode_matches_flat_cross_pod(fab_fn):
+    fab = fab_fn()
+    hosts = storage_hosts(fab)
+    flat = ClusterController(fab, hosts, "bass")
+    hier = HierarchicalController(fab, hosts)
+    for tasks, at in _stream(hosts, seed=11):
+        flat.submit(tasks, at=at)
+        hier.submit(tasks, at=at)
+    flat.run()
+    hier.run()
+    _assert_same_schedule(flat.schedule(), hier.schedule())
+
+
+@pytest.mark.parametrize("affinity", [False, True])
+def test_replay_oracle_accepts_hierarchy_schedules(affinity):
+    """The independent replay oracle (arrival causality, node exclusivity,
+    over-booking via ``ledger.reserved``) validates sharded schedules in
+    both modes — the facade's materialized matrix is what it sweeps."""
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    hier = HierarchicalController(fab, hosts, affinity=affinity)
+    jobs = [(at, tasks) for tasks, at in _stream(hosts, seed=31)]
+    for at, tasks in jobs:
+        hier.submit(tasks, at=at)
+    hier.run()
+    report = replay_online(jobs, hier.schedule(), {h: 0.0 for h in hosts})
+    assert report.ok, report.violations
+
+
+def test_exact_mode_matches_flat_single_pod_workload():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    flat = ClusterController(fab, hosts, "bass")
+    hier = HierarchicalController(fab, hosts)
+    for tasks, at in _stream(hosts, seed=23, in_pod="pod1"):
+        flat.submit(tasks, at=at)
+        hier.submit(tasks, at=at)
+    flat.run()
+    hier.run()
+    # Exact mode is the *global* Algorithm-1 oracle: it may still migrate
+    # out of pod1 (Case 1.2 against the global minnow) — the contract is
+    # byte parity with flat, not pod locality (that's affine mode).
+    _assert_same_schedule(flat.schedule(), hier.schedule())
+
+
+def test_lazy_state_tracks_flat_state_exactly():
+    """The lazy idle/minnow surface resolves the same values and argmin as
+    the eagerly-clamped flat state under interleaved advances/commits."""
+    fab = fat_tree_fabric(4)
+    part = pod_partition(fab)
+    hosts = storage_hosts(fab)
+    from repro.obs import Registry
+
+    flat = ClusterState(fab, hosts, slot_duration=1.0)
+    lazy = HierarchicalState(
+        fab, part, hosts, None,
+        ShardedLedger(fab, part.groups(), 1.0, 256), Registry(),
+    )
+    rng = random.Random(9)
+    t = 0.0
+    for i in range(300):
+        op = rng.random()
+        if op < 0.3:
+            t += rng.uniform(0.0, 2.0)
+            flat.advance(t)
+            lazy.advance(t)
+        else:
+            task = Task(i, size=50.0, compute=rng.uniform(0.0, 10.0),
+                        replicas=(rng.choice(hosts),))
+            node = rng.choice(hosts)
+            af = flat.commit_local(task, node)
+            al = lazy.commit_local(task, node)
+            assert (af.start, af.finish) == (al.start, al.finish)
+        assert flat.minnow() == lazy.minnow()
+        for n in rng.sample(hosts, 5):
+            assert flat.idle[n] == lazy.idle[n]
+
+
+# -- pod-affine mode + rebalancer ------------------------------------------
+
+
+def test_affine_mode_places_home_pod_local():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    aff = HierarchicalController(fab, hosts, affinity=True)
+    jobs = _stream(hosts, seed=31, in_pod="pod2")
+    for tasks, at in jobs:
+        aff.submit(tasks, at=at)
+    aff.run()
+    n = sum(len(tasks) for tasks, _ in jobs)
+    s = aff.schedule()
+    assert len(s.assignments) == n
+    assert all(a.node.startswith("pod2/") for a in s.assignments)
+    for rec in aff.jobs.values():
+        for a in rec.assignments:
+            assert a.start >= rec.submit_at - 1e-9
+    # transfer plans are re-expressed in global facade rows
+    for a in s.assignments:
+        if a.transfer is not None and a.transfer.links:
+            names = aff.ledger.link_names(a.transfer.links)
+            assert all(n in fab.links for n in names)
+
+
+def test_affine_mode_single_pod_matches_flat_over_pod():
+    """A pod's state machine IS a flat controller over that pod's hosts:
+    on a workload confined to pod0, affine placement matches a flat
+    controller restricted to pod0's workers, byte for byte (the shard's
+    plans re-expressed in global rows equal the flat ledger's)."""
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    pod0 = [h for h in hosts if h.startswith("pod0/")]
+    flat = ClusterController(fab, pod0, "bass")
+    aff = HierarchicalController(fab, hosts, affinity=True)
+    for tasks, at in _stream(hosts, seed=37, in_pod="pod0"):
+        flat.submit(tasks, at=at)
+        aff.submit(tasks, at=at)
+    flat.run()
+    aff.run()
+    _assert_same_schedule(flat.schedule(), aff.schedule())
+
+
+def test_rebalancer_requires_affinity():
+    fab = fat_tree_fabric(4)
+    with pytest.raises(ValueError):
+        HierarchicalController(fab, storage_hosts(fab),
+                               rebalance_interval=1.0)
+
+
+def test_rebalancer_rehomes_from_hot_pod():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    aff = HierarchicalController(
+        fab, hosts, affinity=True, rebalance_interval=2.0,
+        rebalance_ratio=1.25,
+    )
+    # Hammer pod0 only: every job's replicas live there, so every task
+    # homes to pod0 and the pod's backlog diverges from the others'.
+    for i in range(12):
+        aff.submit(_tasks(hosts, 8, seed=41 + i, tid0=i * 100,
+                          in_pod="pod0"), at=i * 1.0)
+    aff.run()
+    checks = aff._stats["rebalance_checks"]
+    assert checks >= 2
+    assert aff._stats["rebalance_triggers"] >= 1
+    assert aff._stats["rehomed"] > 0
+    rehomed_nodes = [
+        a.node
+        for rec in aff.jobs.values()
+        for a in rec.assignments
+        if not a.node.startswith("pod0/")
+    ]
+    assert rehomed_nodes  # some work actually left the hot pod
+
+
+def test_rebalancer_quiet_on_balanced_load():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    aff = HierarchicalController(fab, hosts, affinity=True,
+                                 rebalance_interval=2.0)
+    for tasks, at in _stream(hosts, seed=53):
+        aff.submit(tasks, at=at)
+    aff.run()  # terminates: the rebalance tick is a chain event
+    assert aff._stats["rehomed"] == 0 or aff._stats["rebalance_triggers"] > 0
+
+
+# -- recovery ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("affinity", [False, True])
+def test_recovery_twin_is_byte_identical(affinity):
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    kw = dict(affinity=affinity)
+    if affinity:
+        kw["rebalance_interval"] = 3.0
+    h1 = HierarchicalController(fab, hosts, **kw)
+    jrn = h1.attach_journal()
+    jobs = _stream(hosts, seed=61, n_jobs=8, spacing=2.0)
+    for tasks, at in jobs[:4]:
+        h1.submit(tasks, at=at)
+    h1.run_until(5.0)
+    snap = h1.snapshot()
+    for tasks, at in jobs[4:]:
+        h1.submit(tasks, at=at)
+    h1.run()
+    h2 = HierarchicalController.recover_from(fab, snap, jrn)
+    _assert_same_schedule(h1.schedule(), h2.schedule())
+    for name in h1.ledger.shards:
+        assert (h1.ledger.shards[name].reserved
+                == h2.ledger.shards[name].reserved).all()
+        assert h1.ledger.shards[name].base_slot \
+            == h2.ledger.shards[name].base_slot
+
+
+def test_sharded_journal_segments_route_by_pod():
+    from repro.core.journal import ShardedJournal
+
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    aff = HierarchicalController(fab, hosts, affinity=True)
+    jrn = aff.attach_journal()
+    assert isinstance(jrn, ShardedJournal)
+    aff.submit(_tasks(hosts, 3, seed=71, in_pod="pod0"), at=0.0)
+    aff.submit(_tasks(hosts, 3, seed=72, tid0=100, in_pod="pod3"), at=1.0)
+    aff.run()
+    assert "pod0" in jrn.segments and "pod3" in jrn.segments
+    assert ShardedJournal.ROOT in jrn.segments  # run() lands at the root
+    lsns = [r.lsn for r in jrn.merged()]
+    assert lsns == sorted(lsns) == list(range(len(lsns)))
+    blob = jrn.to_bytes()
+    back = ShardedJournal.from_bytes(blob)
+    assert [r.lsn for r in back.merged()] == lsns
+
+
+def test_journal_roundtrip_replay_without_snapshot():
+    fab = tpu_dcn_fabric(n_pods=2, hosts_per_pod=4)
+    hosts = storage_hosts(fab)
+    h1 = HierarchicalController(fab, hosts)
+    jrn = h1.attach_journal()
+    for tasks, at in _stream(hosts, seed=83, n_jobs=4):
+        h1.submit(tasks, at=at)
+    h1.run()
+    h2 = HierarchicalController(fab, hosts)
+    for rec in jrn.merged():
+        if rec.op == "submit":
+            h2.submit(list(rec.args[2]), at=rec.args[0], jid=rec.args[1])
+        elif rec.op == "run_until":
+            h2.run_until(rec.args[0])
+        elif rec.op == "run":
+            h2.run()
+    _assert_same_schedule(h1.schedule(), h2.schedule())
+
+
+# -- guard rails ------------------------------------------------------------
+
+
+def test_hierarchy_rejects_non_bass_policies():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    with pytest.raises(ValueError):
+        HierarchicalController(fab, hosts, policy="hds")
+    from repro.core.controller import BassPolicy
+
+    with pytest.raises(ValueError):
+        HierarchicalController(fab, hosts, policy=BassPolicy(multipath=True))
+
+
+def test_hierarchy_obs_provider_reports_pods():
+    fab = fat_tree_fabric(4)
+    hosts = storage_hosts(fab)
+    hier = HierarchicalController(fab, hosts)
+    hier.submit(_tasks(hosts, 5, seed=91), at=0.0)
+    hier.run()
+    snap = hier.obs.snapshot()
+    assert snap["hierarchy"]["pods"] == 4
+    assert snap["hierarchy"]["affinity"] == 0
+    assert snap["counters"]["hier.tasks"] == 5
+    pod_tasks = sum(
+        v for k, v in snap["counters"].items()
+        if k.startswith("pod.") and k.endswith(".tasks")
+    )
+    assert pod_tasks == 5

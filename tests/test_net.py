@@ -537,3 +537,93 @@ def test_dcn_sync_suspends_and_resumes_across_trunk_failure():
         assert np.isfinite(f.plan.end)
     assert sync.flows[0].plan.end >= t_fail + 5.0 - 1e-9  # resumed after outage
     assert (sync.ledger.reserved <= 1.0 + 1e-6).all()
+
+
+# -- pluggable path-cost functions (PathEngine cost modes) -------------------
+
+
+def test_path_engine_rejects_unknown_cost():
+    ft = fat_tree_fabric(4)
+    with pytest.raises(ValueError):
+        PathEngine(ft, cost="latency")
+    with pytest.raises(ValueError):
+        PathEngine(ft, cost="residual")  # residual needs a ledger
+
+
+def test_hop_cost_k1_is_fabric_path():
+    """``cost="hop"`` (the default) at k=1 is ``Fabric.path`` verbatim —
+    the historical identity every installed flow rule relies on."""
+    ft = fat_tree_fabric(4)
+    engine = PathEngine(ft, k=1)
+    hosts = [n for n in sorted(ft.nodes) if ft.role(n) == "host"]
+    for a in hosts[:4]:
+        for b in hosts[-4:]:
+            if a != b:
+                assert engine.paths(a, b) == (ft.path(a, b),)
+
+
+def test_ospf_cost_matches_hop_on_uniform_capacity():
+    """On a uniform-capacity fabric every link costs the same, so the
+    OSPF metric ranks paths exactly like hop count."""
+    ft = fat_tree_fabric(4)  # single link_mbps everywhere
+    hop = PathEngine(ft, k=4, cost="hop")
+    ospf = PathEngine(ft, k=4, cost="ospf")
+    for a, b in [("pod0/h0_0", "pod1/h1_0"), ("pod2/h0_1", "pod2/h1_0")]:
+        assert hop.paths(a, b) == ospf.paths(a, b)
+
+
+def test_ospf_cost_prefers_fat_links():
+    """OSPF inverse-capacity cost takes a longer path over fat links when
+    the short path is thin."""
+    fab = Fabric()
+    for n in ("S", "M", "T"):
+        fab.add_node(n, "host" if n in ("S", "T") else "switch")
+    fab.add_link("thin", "S", "T", 10.0)
+    fab.add_link("fat1", "S", "M", 1000.0)
+    fab.add_link("fat2", "M", "T", 1000.0)
+    assert PathEngine(fab, k=1, cost="hop").paths("S", "T") == (("thin",),)
+    # ref_bw = 1000: thin costs 100, the two-hop fat path costs 2
+    assert PathEngine(fab, k=1, cost="ospf").paths("S", "T") \
+        == (("fat1", "fat2"),)
+
+
+def test_residual_cost_steers_around_booked_links():
+    """``cost="residual"`` reads the live TS ledger at ``engine.at``: a
+    heavily booked link gets expensive, so the engine steers around it —
+    and the ranking changes back once the booking expires."""
+    fab = Fabric()
+    for n in ("S", "A", "B", "T"):
+        fab.add_node(n, "host" if n in ("S", "T") else "switch")
+    fab.add_link("sa", "S", "A", 100.0)
+    fab.add_link("at", "A", "T", 100.0)
+    fab.add_link("sb", "S", "B", 100.0)
+    fab.add_link("bt", "B", "T", 100.0)
+    ledger = TimeSlotLedger(fab, slot_duration=1.0, horizon_slots=32)
+    engine = PathEngine(fab, k=1, cost="residual", ledger=ledger)
+    # untouched ledger: residual == capacity everywhere, ranking == hop,
+    # and hop's deterministic tie-break picks the A side
+    first = engine.paths("S", "T")[0]
+    assert first == ("sa", "at")
+    # book 90 of 100 on "at" for t in [0, 4): the A side's bottleneck
+    # residual drops to 10, the B side stays at 100
+    plan = ledger.plan_transfer(90.0 * 4, ledger.rows(("at",)),
+                                not_before=0.0, bandwidth_cap=90.0)
+    ledger.commit(plan)
+    engine.at = plan.start + 1e-6
+    assert engine.paths("S", "T")[0] == ("sb", "bt")
+    # after the booking drains, the A side wins again (no stale cache)
+    engine.at = plan.end + 1.0
+    assert engine.paths("S", "T")[0] == ("sa", "at")
+
+
+def test_yen_fallback_honors_link_cost():
+    """k>1 with bans exercises the Yen spur loop; the spur paths must be
+    ranked by the plugged cost, not hop count."""
+    fab = Fabric()
+    for n in ("S", "M", "T"):
+        fab.add_node(n, "host" if n in ("S", "T") else "switch")
+    fab.add_link("thin", "S", "T", 10.0)
+    fab.add_link("fat1", "S", "M", 1000.0)
+    fab.add_link("fat2", "M", "T", 1000.0)
+    ospf = PathEngine(fab, k=2, cost="ospf")
+    assert ospf.paths("S", "T") == (("fat1", "fat2"), ("thin",))

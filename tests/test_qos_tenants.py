@@ -1,0 +1,112 @@
+"""Borrowing modes + per-tenant QoS (no hypothesis dependency, so the
+Example-3 borrowing regressions run even where ``tests/test_qos.py``'s
+property suite is skipped)."""
+import pytest
+
+from repro.core.qos import (
+    Flow,
+    QosPort,
+    QueueSpec,
+    TenantBook,
+    TenantSpec,
+    example3_port,
+)
+
+# -- borrowing modes (Example 3 regression for both) ------------------------
+
+
+def test_priority_borrowing_example3_rates():
+    """``borrowing="priority"`` (the historical behavior): all spare goes
+    to the single most important active class.  Example 3 with one shuffle
+    and one background flow: Q1 = 100 + 40 spare = 140, Q3 = 10."""
+    port = example3_port()
+    assert port.borrowing == "priority"
+    rates = port.rates({"Q1": 1, "Q3": 1})
+    assert rates == {"Q1": 140.0, "Q2": 0.0, "Q3": 10.0}
+    # docstring contract: spare follows priority even when the busier
+    # queue is the less important one
+    rates = port.rates({"Q1": 1, "Q3": 5})
+    assert rates == {"Q1": 140.0, "Q2": 0.0, "Q3": 10.0}
+
+
+def test_proportional_borrowing_example3_rates():
+    """``borrowing="proportional"``: spare splits across active classes
+    proportionally to active-flow counts (classic HTB).  Example 3 with
+    one flow each in Q1/Q3: 40 spare splits 20/20."""
+    port = example3_port(borrowing="proportional")
+    rates = port.rates({"Q1": 1, "Q3": 1})
+    assert rates == {"Q1": 120.0, "Q2": 0.0, "Q3": 30.0}
+    rates = port.rates({"Q1": 1, "Q3": 3})
+    assert rates == {"Q1": 110.0, "Q2": 0.0, "Q3": 40.0}
+
+
+def test_borrowing_modes_share_guarantees_and_conserve_work():
+    for mode in QosPort.BORROWING:
+        port = example3_port(borrowing=mode)
+        rates = port.rates({"Q1": 1, "Q2": 1, "Q3": 1})
+        assert rates["Q1"] >= 100.0 and rates["Q2"] >= 40.0
+        assert rates["Q3"] >= 10.0
+        assert abs(sum(rates.values()) - 150.0) < 1e-9
+
+
+def test_proportional_borrowing_changes_finish_times():
+    """Under contention the two modes genuinely differ: proportional
+    borrowing slows shuffle down (spare no longer all flows to Q1).  The
+    *last* finisher is identical either way — both modes are
+    work-conserving, so total drain time is total work over port rate."""
+    flows = [Flow("shuffle", 1000.0, "Q1"), Flow("bg", 500.0, "Q3")]
+    done_p = example3_port().simulate(flows)
+    done_h = example3_port(borrowing="proportional").simulate(flows)
+    assert done_p["shuffle"] == pytest.approx(1000.0 / 140.0)
+    assert done_h["shuffle"] == pytest.approx(1000.0 / 120.0)
+    assert done_p["shuffle"] < done_h["shuffle"]
+    assert done_h["bg"] == pytest.approx(done_p["bg"]) == 1500.0 / 150.0
+
+
+def test_invalid_borrowing_rejected():
+    with pytest.raises(ValueError):
+        QosPort(100.0, [QueueSpec("Q", 50.0)], borrowing="maxmin")
+
+
+# -- per-tenant QoS: TenantSpec / TenantBook --------------------------------
+
+
+def test_tenant_token_bucket_admission():
+    book = TenantBook([TenantSpec("a", rate=2.0, burst=2.0),
+                       TenantSpec("b")])
+    # burst of 2 admits two back-to-back, the third is rejected
+    assert book.admit("a", 0.0)
+    assert book.admit("a", 0.0)
+    assert not book.admit("a", 0.0)
+    # tokens refill at 2/s: 0.5 s later one more fits
+    assert book.admit("a", 0.5)
+    assert not book.admit("a", 0.5)
+    # infinite-rate tenants are never rejected
+    for _ in range(50):
+        assert book.admit("b", 0.0)
+    with pytest.raises(KeyError):
+        book.admit("nope", 0.0)
+
+
+def test_tenant_wfq_lag_tracks_weighted_service():
+    book = TenantBook([TenantSpec("heavy", weight=2.0),
+                       TenantSpec("light", weight=1.0)])
+    book.charge("heavy", 4.0)   # vt = 4/2 = 2
+    book.charge("light", 1.0)   # vt = 1/1 = 1 (the frontier)
+    assert book.lag("heavy") == pytest.approx(1.0)
+    assert book.lag("light") == 0.0
+    # an idle tenant re-enters at the frontier, not with banked credit
+    book.charge("light", 2.0)   # vt = 3; frontier -> heavy at 2
+    book.charge("heavy", 2.0)   # base = max(2, 2) + 1 = 3
+    assert book.lag("heavy") == pytest.approx(0.0)
+
+
+def test_tenant_book_validation():
+    with pytest.raises(ValueError):
+        TenantBook([])
+    with pytest.raises(ValueError):
+        TenantBook([TenantSpec("a"), TenantSpec("a")])
+    with pytest.raises(ValueError):
+        TenantSpec("a", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("a", rate=-1.0)

@@ -85,3 +85,163 @@ def test_router_cold_request_goes_to_minnow():
     d = router.route(Request(rid=0, prompt=np.arange(8, dtype=np.int32), max_new=2,
                              prefix_hash=999))
     assert d.replica == "r1"
+
+
+# -- per-tenant QoS at the router (core.qos × serving.router) ----------------
+
+
+def _req(rid, prefix_hash=0, tokens=8, max_new=100):
+    return Request(
+        rid=rid,
+        prompt=np.zeros(tokens, dtype=np.int32),
+        max_new=max_new,
+        prefix_hash=prefix_hash,
+    )
+
+
+def _tenant_router(**kw):
+    from repro.core.qos import TenantSpec
+
+    return BassRouter(
+        ["r0", "r1"],
+        decode_s_per_token=0.001,
+        bytes_per_ctx_token=2e6,
+        tenants=[
+            TenantSpec("free", weight=1.0, rate=2.0, burst=2.0),
+            TenantSpec("pro", weight=4.0),
+        ],
+        fairness_slack_s=0.05,
+        **kw,
+    )
+
+
+def test_tenant_admission_rejects_over_rate():
+    r = _tenant_router()
+    d0 = r.route(_req(0), now=0.0, tenant="free")
+    d1 = r.route(_req(1), now=0.0, tenant="free")
+    assert not d0.rejected and not d1.rejected
+    # burst exhausted: the third request at t=0 is turned away with
+    # nothing committed — no replica, no reservation, no backlog charge
+    backlog = dict(r.backlog)
+    d2 = r.route(_req(2), now=0.0, tenant="free")
+    assert d2.rejected and d2.degraded
+    assert d2.replica == "" and d2.ready_at == float("inf")
+    assert r.backlog == backlog
+    # tokens refill at 2/s, so the same tenant is admitted again later
+    d3 = r.route(_req(3), now=1.0, tenant="free")
+    assert not d3.rejected
+    snap = r.controller.obs.snapshot()["counters"]
+    assert snap["router.rejected"] == 1
+    assert snap["tenant.free.rejected"] == 1
+    assert snap["tenant.free.admitted"] == 3
+
+
+def test_tenant_tagging_requires_tenant_config():
+    r = BassRouter(["r0", "r1"], decode_s_per_token=0.001,
+                   bytes_per_ctx_token=2e6)
+    with pytest.raises(ValueError):
+        r.route(_req(0), tenant="free")
+    with pytest.raises(KeyError):
+        _tenant_router().route(_req(0), tenant="unknown")
+
+
+def test_over_share_tenant_loses_migration_fast_path():
+    r = _tenant_router()
+    # "free" (weight 1) burns far past the fairness frontier while "pro"
+    # sits at vt=0 -> lag(free) > slack: its next requests are pinned
+    # data-local with no new reservation (slots=()).
+    r.tenants.charge("free", 1.0)
+    assert r.tenants.lag("free") > r.fairness_slack_s
+    d = r.route(_req(0, prefix_hash=7), now=0.0, tenant="free")
+    assert d.slots == () and d.migrated_from is None
+    # the pinned request still lands somewhere real and is accounted
+    assert d.replica in r.replicas
+    snap = r.controller.obs.snapshot()["counters"]
+    assert snap["router.pinned"] == 1
+    assert snap["tenant.free.pinned"] == 1
+    # ... and the under-served tenant keeps the full BASS path
+    d2 = r.route(_req(1, prefix_hash=7), now=0.0, tenant="pro")
+    assert not d2.rejected
+    snap = r.controller.obs.snapshot()["counters"]
+    assert snap["router.pinned"] == 1  # unchanged by pro's request
+
+
+def test_pinned_tenant_recovers_when_frontier_catches_up():
+    r = _tenant_router()
+    r.tenants.charge("free", 1.0)
+    assert r.route(_req(0), now=0.0, tenant="free").slots == ()
+    # serving "pro" advances the frontier past free's virtual clock
+    r.tenants.charge("pro", 50.0)
+    assert r.tenants.lag("free") <= r.fairness_slack_s
+    d = r.route(_req(1), now=1.0, tenant="free")
+    assert not d.rejected  # back on the normal BASS path
+    assert r.controller.obs.snapshot()["counters"]["router.pinned"] == 1
+
+
+def test_tenants_survive_replica_churn():
+    """Admission control composes with the SDN liveness path: a dead
+    replica NIC steers tenant traffic to the survivor, full partition
+    degrades without charging, recovery restores normal routing."""
+    r = _tenant_router()
+    r.fail_link("nic0")  # r0's NIC (star fabric wires nic<i> to replica i)
+    for i in range(2):
+        d = r.route(_req(i), now=float(i), tenant="pro")
+        assert not d.rejected and d.replica == "r1"
+    r.fail_link("nic1")  # nothing left: degraded, not rejected
+    d = r.route(_req(2), now=2.0, tenant="pro")
+    assert d.degraded and not d.rejected
+    r.recover_link("nic0")
+    r.recover_link("nic1")
+    d = r.route(_req(3), now=3.0, tenant="pro")
+    assert not d.degraded and d.replica in ("r0", "r1")
+    counters = r.controller.obs.snapshot()["counters"]
+    assert counters["router.degraded"] == 1
+    assert counters["tenant.pro.admitted"] == 4
+
+
+def test_router_over_hierarchical_controller_matches_flat():
+    """Injecting a ``core.hierarchy`` exact-mode controller behind the
+    router reproduces the flat-backed router's decisions byte for byte —
+    the serving layer rides the same parity contract the schedule dumps
+    pin."""
+    from repro.core.hierarchy import HierarchicalController
+    from repro.core.topology import storage_hosts, tpu_dcn_fabric
+
+    def build(hier):
+        fab = tpu_dcn_fabric(n_pods=2, hosts_per_pod=2)
+        reps = storage_hosts(fab)
+        if hier:
+            ctl = HierarchicalController(
+                fab, reps, slot_duration=0.05, horizon_slots=2048
+            )
+            return BassRouter(reps, controller=ctl,
+                              decode_s_per_token=0.001,
+                              bytes_per_ctx_token=2e6)
+        return BassRouter(reps, fabric=fab, decode_s_per_token=0.001,
+                          bytes_per_ctx_token=2e6)
+
+    flat, hier = build(False), build(True)
+    rng = np.random.default_rng(5)
+    for i in range(40):
+        req = _req(i, prefix_hash=int(rng.integers(0, 4)),
+                   tokens=int(rng.integers(4, 64)),
+                   max_new=int(rng.integers(10, 400)))
+        now = i * 0.01
+        bl = {rep: float(rng.uniform(0.0, 0.2))
+              for rep in flat.replicas}
+        flat.update_backlog(dict(bl))
+        hier.update_backlog(dict(bl))
+        df = flat.route(req, now=now)
+        dh = hier.route(req, now=now)
+        assert (df.replica, df.migrated_from, df.ready_at, df.slots) \
+            == (dh.replica, dh.migrated_from, dh.ready_at, dh.slots)
+
+
+def test_router_rejects_controller_missing_replicas():
+    from repro.core.hierarchy import HierarchicalController
+    from repro.core.topology import storage_hosts, tpu_dcn_fabric
+
+    fab = tpu_dcn_fabric(n_pods=2, hosts_per_pod=2)
+    ctl = HierarchicalController(fab, storage_hosts(fab))
+    with pytest.raises(ValueError):
+        BassRouter(["r0", "r1"], controller=ctl)
